@@ -1,0 +1,49 @@
+"""Benchmark datasets: synthetic bipartite graphs mirroring the paper's
+dataset regimes (Table 2), scaled to CPU-minutes.
+
+  * itu_like  — power-law both sides (ItU: moderate r, many subsets)
+  * tru_like  — V-side hubs + light U (TrU: r >> 1, HUC regime)
+  * dev_like  — dense-ish uniform (DeV: low r, counting-dominated)
+  * orv_like  — larger power-law, V orientation (peel the lighter side)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import BipartiteGraph, powerlaw_bipartite, random_bipartite
+
+
+def tru_like(n_u=1200, n_v=160, n_hubs=10, seed=7) -> BipartiteGraph:
+    rng = np.random.default_rng(seed)
+    eu, ev = [], []
+    for u in range(n_u):
+        hubs = rng.choice(n_hubs, size=rng.integers(1, 4), replace=False)
+        light = n_hubs + rng.choice(
+            n_v - n_hubs, size=rng.integers(1, 4), replace=False
+        )
+        cols = list(hubs) + list(light)
+        eu += [u] * len(cols)
+        ev += list(cols)
+    return BipartiteGraph.from_edges(n_u, n_v, eu, ev)
+
+
+def itu_like(seed=3) -> BipartiteGraph:
+    return powerlaw_bipartite(1000, 500, 8000, alpha_u=2.1, alpha_v=1.9, seed=seed)
+
+
+def dev_like(seed=4) -> BipartiteGraph:
+    return random_bipartite(400, 300, 0.06, seed=seed)
+
+
+def orv_like(seed=5) -> BipartiteGraph:
+    g = powerlaw_bipartite(900, 1400, 9000, alpha_u=1.9, alpha_v=2.2, seed=seed)
+    # peel the other side: swap U and V
+    return BipartiteGraph.from_edges(g.n_v, g.n_u, g.edges_v, g.edges_u)
+
+
+DATASETS = {
+    "itu_like": itu_like,
+    "tru_like": tru_like,
+    "dev_like": dev_like,
+    "orv_like": orv_like,
+}

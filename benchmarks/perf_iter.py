@@ -1,0 +1,96 @@
+"""Perf-iteration driver: structural profile of one dry-run cell.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter <arch> <shape> [--multi-pod]
+
+Compiles the cell on the production mesh and prints the three roofline
+terms + the top memory/wire/flops sites from the trip-count-aware HLO
+cost model — the "profile" each hypothesis->change->measure iteration
+reads (there is no wall clock on CPU; the lowered IR is the profile).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    multi = "--multi-pod" in sys.argv
+    arch, shape = args[0], args[1]
+
+    from repro.launch.dryrun import dryrun_cell
+    from repro.launch import roofline as rl
+    from repro.utils.hlo_cost import analyze_text
+
+    # dryrun_cell already prints the three terms; we want the site tables
+    # too, so we rebuild the compile here for receipt/model cells alike.
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.sharding import mesh_context
+
+    mesh = make_production_mesh(multi_pod=multi)
+
+    if arch == "receipt-tip":
+        from repro.configs.shapes import RECEIPT_SHAPES
+        from repro.core import distributed as dist
+
+        s = RECEIPT_SHAPES[shape]
+        with mesh, mesh_context(mesh):
+            if s.kind == "cd_sweep":
+                lowered = dist.lower_cd_sweep(
+                    mesh, n_u=s.n_u, n_v=s.n_v, peel_rows=s.peel_rows)
+            else:
+                lowered = dist.lower_fd_stack(
+                    mesh, n_subsets=s.n_subsets, rows=s.subset_rows,
+                    cols=s.subset_cols)
+            comp = lowered.compile()
+    else:
+        from repro.configs import get_bundle
+
+        b = get_bundle(arch)
+        kind, step = b.step_for(shape)
+        specs = b.input_specs(shape)
+        in_shard = b.input_shardings(shape, mesh)
+        with mesh, mesh_context(mesh):
+            if kind.startswith("train"):
+                state_abs = b.state_abstract()
+                state_shard = b.state_shardings(mesh)
+                out_abs = jax.eval_shape(step, state_abs, specs)
+                mshard = jax.tree.map(
+                    lambda _: NamedSharding(mesh, PartitionSpec()), out_abs[1])
+                comp = jax.jit(
+                    step, in_shardings=(state_shard, in_shard),
+                    out_shardings=(state_shard, mshard), donate_argnums=(0,),
+                ).lower(state_abs, specs).compile()
+            else:
+                params_abs = b.abstract_params()
+                pspec = b.param_shardings(mesh)
+                comp = jax.jit(
+                    step, in_shardings=(pspec, in_shard),
+                ).lower(params_abs, specs).compile()
+
+    c = analyze_text(comp.as_text())
+    ma = comp.memory_analysis()
+    args_b = getattr(ma, "argument_size_in_bytes", 0)
+    temp_b = getattr(ma, "temp_size_in_bytes", 0)
+    print(f"\n=== {arch} {shape} mesh={'2x16x16' if multi else '16x16'} ===")
+    print(f"mem/dev: args={args_b/1e9:.2f}GB temp={temp_b/1e9:.2f}GB "
+          f"total={(args_b+temp_b)/1e9:.2f}GB (HBM=16GB)")
+    print(f"t_compute={c.flops/rl.PEAK_FLOPS*1e3:9.2f}ms  "
+          f"t_memory={c.hbm_bytes/rl.HBM_BW*1e3:9.2f}ms  "
+          f"t_collective={c.wire_bytes/rl.ICI_BW*1e3:9.2f}ms")
+    print(f"flops={c.flops:.3e}  hbm={c.hbm_bytes/1e9:.1f}GB  "
+          f"wire={c.wire_bytes/1e9:.1f}GB  n_coll={int(c.n_collectives)}")
+    for field, title in (("mem_by_site", "MEMORY"), ("wire_by_site", "WIRE"),
+                         ("flops_by_site", "FLOPS")):
+        print(f"\nTOP {title} SITES:")
+        for k, v in c.top(field, 10):
+            unit = 1e12 if field == "flops_by_site" else 1e9
+            u = "T" if field == "flops_by_site" else "GB"
+            print(f"  {v/unit:10.2f}{u}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Render the EXPERIMENTS.md roofline table from results/dryrun.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [results/dryrun.json]
+
+Per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs utility ratio, peak-memory check, and the
+roofline fraction (t_compute / t_bound).  Also nominates the three
+hillclimb cells (worst fraction / most collective-bound / most
+paper-representative).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_t(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+    return f"{x*1e3:8.2f}ms"
+
+
+def fmt_b(x):
+    if not x:
+        return "    -"
+    return f"{x/1e9:7.2f}GB"
+
+
+def main(path="results/dryrun.json"):
+    recs = [r for r in json.load(open(path)) if r.get("ok")]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+          "bound | mem/dev | useful_flops | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        ro = r["roofline"]
+        ma = r.get("memory_analysis") or {}
+        mem = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0))
+        uf = ro.get("useful_flops_fraction")
+        rf = ro.get("roofline_fraction")
+        uf_s = f"{uf:.3f}" if uf is not None else "-"
+        rf_s = f"{rf:.3f}" if rf is not None else "-"
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_t(ro['t_compute_s'])} | {fmt_t(ro['t_memory_s'])} "
+            f"| {fmt_t(ro['t_collective_s'])} | {ro['bottleneck']} "
+            f"| {fmt_b(mem)} | {uf_s} | {rf_s} |"
+        )
+
+    # hillclimb nominations (single-pod cells only, per the spec)
+    sp = [r for r in recs if r["mesh"] == "16x16" and r["arch"] != "receipt-tip"]
+    def frac(r):
+        return r["roofline"].get("roofline_fraction") or 0.0
+    worst = min(sp, key=frac)
+    coll = max(sp, key=lambda r: r["roofline"]["t_collective_s"]
+               / max(r["roofline"]["t_compute_s"]
+                     + r["roofline"]["t_memory_s"]
+                     + r["roofline"]["t_collective_s"], 1e-12))
+    print("\n# hillclimb nominations")
+    print(f"worst roofline fraction : {worst['arch']} {worst['shape']} "
+          f"(frac={frac(worst):.3f})")
+    print(f"most collective-bound   : {coll['arch']} {coll['shape']}")
+    print("paper-representative    : receipt-tip cd_sweep_1m")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,39 @@
+"""GNN stack example: train all four assigned GNN archs (reduced configs)
+on synthetic graphs, then run a GraphSAGE minibatch epoch with the REAL
+fixed-fanout neighbour sampler.
+
+    PYTHONPATH=src python examples/gnn_full_stack.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import get_bundle
+from repro.data import synthetic as syn
+from repro.launch.train import train_loop
+from repro.train.train_step import init_train_state
+
+
+def main():
+    for arch in ("meshgraphnet", "graphsage-reddit", "dimenet", "graphcast"):
+        out = train_loop(arch=arch, steps=20, log_every=10)
+        print(f"[{arch}] loss {out['first_loss']:.4f} -> {out['final_loss']:.4f}")
+
+    # GraphSAGE minibatch epoch with the real sampler
+    b = get_bundle("graphsage-reddit", reduced=True)
+    params = b.init_params(jax.random.PRNGKey(0))
+    state = init_train_state(params, b.opt_cfg)
+    step = jax.jit(b._steps["train_sampled"])
+    for i in range(10):
+        blocks = syn.graphsage_sampled_batch(
+            b.cfg, batch_nodes=32, fanouts=b.cfg.sample_sizes,
+            n_nodes=500, n_edges=2500, seed=i,
+        )
+        state, metrics = step(state, blocks)
+    print(f"[graphsage minibatch] final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: tip-decompose a bipartite graph with RECEIPT.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's Fig.1 graph plus a synthetic power-law graph, runs
+RECEIPT, verifies against sequential bottom-up peeling, and prints the
+paper's evaluation metrics (wedges traversed, synchronization rounds).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.graph import paper_fig1_graph, powerlaw_bipartite
+from repro.core.peeling import bup_oracle, parb_metrics
+from repro.core.receipt import ReceiptConfig, tip_decompose
+
+
+def main():
+    # --- the paper's Fig.1 example -------------------------------------
+    g = paper_fig1_graph()
+    theta, stats = tip_decompose(
+        g, ReceiptConfig(num_partitions=2, kernel_blocks=(8, 8, 8), backend="xla")
+    )
+    print(f"Fig.1 graph tip numbers: {theta}   (u2,u3 form a 3-tip)")
+
+    # --- a KONECT-style power-law graph --------------------------------
+    g = powerlaw_bipartite(2000, 1000, 16000, seed=0)
+    cfg = ReceiptConfig(num_partitions=32, kernel_blocks=(8, 8, 8), backend="xla")
+    theta, stats = tip_decompose(g, cfg)
+    theta_bup, m_bup = bup_oracle(g)
+    _, m_parb = parb_metrics(g)
+    assert (theta == theta_bup).all(), "RECEIPT must match BUP exactly"
+
+    print(f"\npower-law graph: |U|={g.n_u} |V|={g.n_v} m={g.m}")
+    print(f"  max tip number          : {theta.max()}")
+    print(f"  subsets created (P)     : {stats.num_subsets}")
+    print(f"  sync rounds  rho        : RECEIPT={stats.rho_cd}  "
+          f"ParB={m_parb.rounds}  ({m_parb.rounds/stats.rho_cd:.1f}x fewer)")
+    print(f"  wedges traversed        : RECEIPT={stats.wedges_total}  "
+          f"BUP={m_bup.wedges_static + stats.wedges_pvbcnt}")
+    print(f"  HUC recounts / DGM compactions / elided sweeps: "
+          f"{stats.huc_recounts} / {stats.dgm_compactions} / {stats.elided_sweeps}")
+    print(f"  time: count={stats.time_count:.2f}s cd={stats.time_cd:.2f}s "
+          f"fd={stats.time_fd:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Batched serving example: prefill + decode loop with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Serves batched synthetic requests from a reduced GQA model: one prefill
+dispatch per batch, then token-by-token decode with the stacked per-layer
+cache — the same ``serve_step`` the decode_32k / long_500k dry-run cells
+lower at production scale.
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_bundle
+from repro.models import transformer as tf_lib
+
+
+def main():
+    b = get_bundle("minitron-8b", reduced=True)
+    cfg = b.cfg
+    params = b.init_params(jax.random.PRNGKey(0))
+
+    batch, prompt_len, gen_len, max_len = 4, 12, 20, 48
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (batch, prompt_len), dtype=np.int32)
+
+    # prefill: run the prompt through the stack token-by-token into cache
+    cache = tf_lib.init_cache(cfg, batch, max_len)
+    decode = jax.jit(lambda p, c, t: tf_lib.lm_decode_step(p, c, t, cfg))
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(prompt_len):
+        logits, cache = decode(params, cache, jnp.asarray(prompts[:, t]))
+    # greedy decode
+    out_tokens = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(gen_len):
+        out_tokens.append(np.asarray(tok))
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dt = time.perf_counter() - t0
+    gen = np.stack(out_tokens, 1)
+    print(f"served {batch} requests: {prompt_len} prompt + {gen_len} generated")
+    print(f"first request tokens: {gen[0][:10]}")
+    print(f"throughput: {batch * (prompt_len + gen_len) / dt:.0f} tok/s "
+          f"(CPU, reduced config)")
+    assert int(cache["len"]) == prompt_len + gen_len
+
+
+if __name__ == "__main__":
+    main()

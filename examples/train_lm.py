@@ -1,0 +1,62 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Exercises the full training substrate on CPU: scan-over-layers GQA
+transformer, flash attention, AdamW + cosine schedule, checkpointing
+with automatic resume, and the synthetic token pipeline.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.families import make_lm_bundle
+from repro.models.transformer import LMConfig
+from repro.train.optimizer import AdamWConfig
+from repro.launch.train import train_loop
+
+
+def lm_100m() -> LMConfig:
+    # ~101M params: 12 x (d=512, ffn=2048, 8 heads GQA kv=2) + 50k vocab
+    return LMConfig(
+        name="lm-100m", n_layers=12, d_model=512, n_heads=8, n_kv_heads=2,
+        d_ff=2048, vocab=50_000, d_head=64, attn_kind="gqa",
+        q_block=64, kv_block=64,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    bundle = make_lm_bundle("lm-100m", cfg, AdamWConfig(
+        lr=3e-4, warmup_steps=20, total_steps=args.steps, state_dtype=jnp.float32,
+    ))
+    n_params = sum(
+        int(np.prod(x.shape)) for x in
+        __import__("jax").tree.leaves(bundle.abstract_params())
+    )
+    print(f"[train_lm] {n_params/1e6:.1f}M params, {args.steps} steps")
+    out = train_loop(
+        arch="lm-100m", bundle=bundle, steps=args.steps,
+        batch_size=args.batch_size, seq_len=args.seq_len,
+        ckpt_dir=args.ckpt_dir, save_every=100, log_every=20,
+    )
+    print(f"[train_lm] loss {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+          f"({out['steps']} steps, {out['wall_s']:.0f}s)")
+    # synthetic tokens plateau near ln(vocab); require non-divergence and,
+    # on a fresh run (step 0 starts at ~ln(V) + init noise), improvement
+    assert out["final_loss"] < out["first_loss"] + 0.1, "training diverged"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .registry import ALL_ARCHS, get_bundle, shapes_for  # noqa: F401

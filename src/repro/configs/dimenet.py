@@ -1,0 +1,21 @@
+"""DimeNet [arXiv:2003.03123; unverified]."""
+from ..models.gnn import DimeNetConfig
+
+ARCH_ID = "dimenet"
+
+def full_config() -> DimeNetConfig:
+    import jax.numpy as jnp
+    return DimeNetConfig(
+        name=ARCH_ID, n_blocks=6, d_hidden=128, n_bilinear=8,
+        n_spherical=7, n_radial=6, carry_dtype=jnp.bfloat16,
+    )
+
+def opt_config():
+    from ..train.optimizer import AdamWConfig
+    return AdamWConfig()
+
+def reduced_config() -> DimeNetConfig:
+    return DimeNetConfig(
+        name=ARCH_ID + "-reduced", n_blocks=2, d_hidden=16, n_bilinear=2,
+        n_spherical=3, n_radial=2, d_node_in=4,
+    )

@@ -1,0 +1,440 @@
+"""Family adapters: one Bundle per (arch, shape) cell.
+
+A Bundle wires a model config to everything the launcher, dry-run, smoke
+tests and benchmarks need:
+
+    bundle.abstract_params()             eval_shape'd param tree (no alloc)
+    bundle.init_params(rng)              real params (smoke tests only)
+    bundle.step_for(shape)               ("train"|"serve_*", callable)
+    bundle.input_specs(shape)            dict[str, ShapeDtypeStruct]
+    bundle.input_shardings(shape, mesh)  matching NamedSharding tree
+    bundle.param_shardings(mesh)         NamedSharding tree
+    bundle.state_abstract()/shardings()  train state incl. optimizer
+
+Shapes are the assigned public shape sets (see configs/shapes.py); steps
+are pure functions of (state|params, batch) so ``jax.jit(step).lower()``
+is the whole dry-run story.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models import gnn as gnn_lib
+from ..models import recsys as rec_lib
+from ..models import transformer as tf_lib
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import init_train_state, make_train_step
+from ..launch import sharding as shard_lib
+from ..launch.mesh import dp_axes
+from . import shapes as shp
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds_tree(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+@dataclasses.dataclass
+class Bundle:
+    arch_id: str
+    family: str
+    cfg: Any
+    shapes: Dict[str, Any]
+    opt_cfg: AdamWConfig
+    _init_fn: Callable
+    _steps: Dict[str, Callable]                 # step kind -> fn
+    _specs_fn: Callable                         # (shape) -> (kind, specs)
+    _input_shardings_fn: Callable               # (shape, mesh, specs) -> tree
+    _param_shardings_fn: Callable               # (mesh, abstract) -> tree
+    _loss_fn: Optional[Callable] = None         # (params, batch) -> (loss, metrics)
+
+    # ---------------- params ---------------- #
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self._init_fn(jax.random.PRNGKey(0)))
+
+    def init_params(self, rng):
+        return self._init_fn(rng)
+
+    def param_shardings(self, mesh: Mesh):
+        return self._param_shardings_fn(mesh, self.abstract_params())
+
+    # ---------------- train state ------------ #
+    def state_abstract(self):
+        return jax.eval_shape(
+            lambda: init_train_state(
+                self._init_fn(jax.random.PRNGKey(0)), self.opt_cfg
+            )
+        )
+
+    def state_shardings(self, mesh: Mesh):
+        pspec = self.param_shardings(mesh)
+        return shard_lib.train_state_specs(pspec)
+
+    # ---------------- steps ------------------ #
+    def step_for(self, shape_name: str) -> Tuple[str, Callable]:
+        kind, _ = self._specs_fn(shape_name)
+        return kind, self._steps[kind]
+
+    def input_specs(self, shape_name: str) -> Dict[str, Any]:
+        _, specs = self._specs_fn(shape_name)
+        return specs
+
+    def input_shardings(self, shape_name: str, mesh: Mesh):
+        _, specs = self._specs_fn(shape_name)
+        return self._input_shardings_fn(shape_name, mesh, specs)
+
+
+# ===================================================================== #
+# LM family
+# ===================================================================== #
+def _lm_specs(cfg: tf_lib.LMConfig, shapes, shape_name):
+    s = shapes[shape_name]
+    if s.kind == "train":
+        return "train", {
+            "tokens": SDS((s.global_batch, s.seq_len), jnp.int32),
+            "labels": SDS((s.global_batch, s.seq_len), jnp.int32),
+        }
+    if s.kind == "prefill":
+        return "serve_prefill", {
+            "tokens": SDS((s.global_batch, s.seq_len), jnp.int32),
+        }
+    # decode: one new token against a seq_len KV cache
+    cache = jax.eval_shape(
+        lambda: tf_lib.init_cache(cfg, s.global_batch, s.seq_len)
+    )
+    return "serve_decode", {
+        "token": SDS((s.global_batch,), jnp.int32),
+        "cache": cache,
+    }
+
+
+def _lm_input_shardings(cfg, shapes, shape_name, mesh, specs):
+    s = shapes[shape_name]
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = shard_lib.simple_spec(mesh, (dp, None), v.shape)
+        elif k == "token":
+            out[k] = shard_lib.simple_spec(mesh, (dp,), v.shape)
+        elif k == "cache":
+            # batch over dp, seq over model; for batch=1 (long_500k) the
+            # dp axes are idle, so the KV sequence splits over ALL axes
+            # instead (flash-decoding-style split-KV)
+            seq_ax = ("pod", "data", "model") if s.global_batch == 1 else "model"
+            b_ax = None if s.global_batch == 1 else dp
+
+            def cspec(path, leaf):
+                ps = jax.tree_util.keystr(path)
+                if leaf.ndim == 0:
+                    return NamedSharding(mesh, PartitionSpec())
+                if "c_kv" in ps or "k_rope" in ps:
+                    ent = (None, b_ax, seq_ax, None)        # (L, B, S, r)
+                else:
+                    ent = (None, b_ax, None, seq_ax, None)  # (L, B, H, S, D)
+                return NamedSharding(
+                    mesh, shard_lib._check_div(leaf.shape, ent, mesh)
+                )
+            out[k] = jax.tree_util.tree_map_with_path(cspec, v)
+    return out
+
+
+def make_lm_bundle(arch_id: str, cfg: tf_lib.LMConfig,
+                   opt_cfg: Optional[AdamWConfig] = None) -> Bundle:
+    opt_cfg = opt_cfg or AdamWConfig()
+    shapes = shp.LM_SHAPES
+
+    def loss_fn(params, batch):
+        return tf_lib.lm_loss(params, batch, cfg)
+
+    train_step = make_train_step(loss_fn, opt_cfg)
+
+    def serve_prefill(params, batch):
+        return tf_lib.lm_prefill(params, batch["tokens"], cfg)
+
+    def serve_decode(params, batch):
+        return tf_lib.lm_decode_step(params, batch["cache"], batch["token"], cfg)
+
+    return Bundle(
+        arch_id=arch_id,
+        family="lm",
+        cfg=cfg,
+        shapes=shapes,
+        opt_cfg=opt_cfg,
+        _loss_fn=loss_fn,
+        _init_fn=lambda rng: tf_lib.init_lm(rng, cfg),
+        _steps={
+            "train": train_step,
+            "serve_prefill": serve_prefill,
+            "serve_decode": serve_decode,
+        },
+        _specs_fn=lambda sn: _lm_specs(cfg, shapes, sn),
+        _input_shardings_fn=lambda sn, mesh, specs: _lm_input_shardings(
+            cfg, shapes, sn, mesh, specs
+        ),
+        _param_shardings_fn=lambda mesh, ab: shard_lib.lm_param_specs(ab, mesh),
+    )
+
+
+# ===================================================================== #
+# GNN family
+# ===================================================================== #
+def _round_up(n, m=8):
+    return ((n + m - 1) // m) * m
+
+
+def _gnn_graph_dims(shape) -> Tuple[int, int]:
+    """(n_nodes, n_edges) for the generic subgraph view of a shape."""
+    if shape.kind == "minibatch":
+        f1, f2 = shape.fanout
+        n = shape.batch_nodes * (1 + f1 + f1 * f2)
+        e = shape.batch_nodes * (f1 + f1 * f2)
+        return _round_up(n, 128), _round_up(e, 128)
+    if shape.kind == "molecule":
+        return shape.batch * shape.n_nodes, shape.batch * shape.n_edges
+    return _round_up(shape.n_nodes, 128), _round_up(shape.n_edges, 128)
+
+
+def _gnn_specs(arch_id, cfg, shapes, shape_name):
+    s = shapes[shape_name]
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    if arch_id == "graphsage-reddit" and s.kind == "minibatch":
+        # native sampled-block structure
+        f1, f2 = s.fanout
+        b = s.batch_nodes
+        d = cfg.d_in
+        specs = {
+            "feats_l0": SDS((b, d), f32),
+            "feats_l1": SDS((b * f1, d), f32),
+            "feats_l2": SDS((b * f1 * f2, d), f32),
+            "idx_l0": SDS((b, f1), i32),
+            "idx_l1": SDS((b * f1, f2), i32),
+            "labels": SDS((b,), i32),
+        }
+        return "train_sampled", specs
+
+    n, e = _gnn_graph_dims(s)
+    d_feat = getattr(s, "d_feat", None) or 16
+
+    base = {
+        "senders": SDS((e,), i32),
+        "receivers": SDS((e,), i32),
+        "edge_mask": SDS((e,), f32),
+    }
+    if arch_id == "meshgraphnet":
+        specs = dict(base)
+        specs["node_feats"] = SDS((n, cfg.d_node_in), f32)
+        specs["edge_feats"] = SDS((e, cfg.d_edge_in), f32)
+        specs["targets"] = SDS((n, cfg.d_out), f32)
+        return "train", specs
+    if arch_id == "graphsage-reddit":
+        specs = dict(base)
+        specs["node_feats"] = SDS((n, cfg.d_in), f32)
+        specs["labels"] = SDS((n,), i32)
+        specs["node_mask"] = SDS((n,), f32)
+        return "train", specs
+    if arch_id == "dimenet":
+        t = _round_up(e * s.triplet_fanout, 128)
+        specs = dict(base)
+        specs["node_feats"] = SDS((n, cfg.d_node_in), f32)
+        specs["positions"] = SDS((n, 3), f32)
+        specs["trip_kj"] = SDS((t,), i32)
+        specs["trip_ji"] = SDS((t,), i32)
+        specs["trip_mask"] = SDS((t,), f32)
+        if s.kind == "molecule":
+            specs["graph_id"] = SDS((n,), i32)
+            specs["targets"] = SDS((s.batch,), f32)
+        else:
+            specs["targets"] = SDS((1,), f32)
+        return "train", specs
+    if arch_id == "graphcast":
+        nm = cfg.n_mesh_nodes_padded
+        em = cfg.n_mesh_edges_padded
+        e_g2m, e_m2g = 4 * n, 3 * n
+        specs = {
+            "grid_feats": SDS((n, cfg.n_vars), f32),
+            "mesh_feats": SDS((nm, 4), f32),
+            "g2m_senders": SDS((e_g2m,), i32),
+            "g2m_receivers": SDS((e_g2m,), i32),
+            "g2m_feats": SDS((e_g2m, 4), f32),
+            "g2m_mask": SDS((e_g2m,), f32),
+            "mesh_senders": SDS((em,), i32),
+            "mesh_receivers": SDS((em,), i32),
+            "mesh_efeats": SDS((em, 4), f32),
+            "mesh_mask": SDS((em,), f32),
+            "m2g_senders": SDS((e_m2g,), i32),
+            "m2g_receivers": SDS((e_m2g,), i32),
+            "m2g_feats": SDS((e_m2g, 4), f32),
+            "m2g_mask": SDS((e_m2g,), f32),
+            "targets": SDS((n, cfg.n_vars), f32),
+        }
+        return "train", specs
+    raise KeyError(arch_id)
+
+
+_GNN_NODE_KEYS = (
+    "node_feats", "grid_feats", "mesh_feats", "positions", "labels",
+    "targets", "node_mask", "graph_id", "feats_l",
+)
+
+
+def _gnn_input_shardings(shape_name, mesh, specs):
+    """Node-dim arrays shard over `model`; edge/triplet arrays over dp
+    (matching the logical activation axes — see launch/sharding.py)."""
+    dp = dp_axes(mesh)
+
+    def assign(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, PartitionSpec())
+        key = shard_lib.norm_path(path)
+        axis = "model" if any(k in key for k in _GNN_NODE_KEYS) else dp
+        ent = [axis] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, shard_lib._check_div(leaf.shape, ent, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, specs)
+
+
+def make_gnn_bundle(arch_id: str, cfg, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    shapes = shp.GNN_SHAPES
+
+    if arch_id == "meshgraphnet":
+        init_fn = lambda rng: gnn_lib.init_meshgraphnet(rng, cfg)
+        loss = lambda p, b: (gnn_lib.meshgraphnet_loss(p, b, cfg), {})
+        loss_sampled = loss
+    elif arch_id == "graphsage-reddit":
+        init_fn = lambda rng: gnn_lib.init_graphsage(rng, cfg)
+        loss = lambda p, b: (gnn_lib.graphsage_loss(p, b, cfg, mode="full"), {})
+        loss_sampled = lambda p, b: (
+            gnn_lib.graphsage_loss(p, b, cfg, mode="sampled"), {}
+        )
+    elif arch_id == "dimenet":
+        init_fn = lambda rng: gnn_lib.init_dimenet(rng, cfg)
+        loss = lambda p, b: (gnn_lib.dimenet_loss(p, b, cfg), {})
+        loss_sampled = loss
+    elif arch_id == "graphcast":
+        init_fn = lambda rng: gnn_lib.init_graphcast(rng, cfg)
+        loss = lambda p, b: (gnn_lib.graphcast_loss(p, b, cfg), {})
+        loss_sampled = loss
+    else:
+        raise KeyError(arch_id)
+
+    return Bundle(
+        arch_id=arch_id,
+        family="gnn",
+        cfg=cfg,
+        shapes=shapes,
+        opt_cfg=opt_cfg,
+        _loss_fn=loss,
+        _init_fn=init_fn,
+        _steps={
+            "train": make_train_step(loss, opt_cfg),
+            "train_sampled": make_train_step(loss_sampled, opt_cfg),
+        },
+        _specs_fn=lambda sn: _gnn_specs(arch_id, cfg, shapes, sn),
+        _input_shardings_fn=lambda sn, mesh, specs: _gnn_input_shardings(
+            sn, mesh, specs
+        ),
+        _param_shardings_fn=lambda mesh, ab: jax.tree.map(
+            lambda _: NamedSharding(mesh, PartitionSpec()), ab
+        ),
+    )
+
+
+# ===================================================================== #
+# recsys family
+# ===================================================================== #
+def _rec_specs(cfg: rec_lib.TwoTowerConfig, shapes, shape_name):
+    s = shapes[shape_name]
+    i32, f32 = jnp.int32, jnp.float32
+    fu, fi = len(cfg.user_fields), len(cfg.item_fields)
+    w = cfg.values_per_field
+    if s.kind == "train":
+        return "train", {
+            "user_ids": SDS((s.batch, fu, w), i32),
+            "item_ids": SDS((s.batch, fi, w), i32),
+            "item_logq": SDS((s.batch,), f32),
+        }
+    if s.kind == "serve":
+        return "serve", {
+            "user_ids": SDS((s.batch, fu, w), i32),
+            "item_ids": SDS((s.batch, fi, w), i32),
+        }
+    # retrieval: one query batch vs n_candidates
+    return "retrieval", {
+        "user_ids": SDS((s.batch, fu, w), i32),
+        "cand_emb": SDS((s.n_candidates, cfg.tower_mlp[-1]), f32),
+    }
+
+
+def _rec_input_shardings(shape_name, mesh, specs):
+    dp = dp_axes(mesh)
+
+    def assign(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if "cand_emb" in ps:
+            ent = ("model", None)
+        else:
+            ent = [dp] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, shard_lib._check_div(leaf.shape, ent, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, specs)
+
+
+def _rec_param_shardings(mesh, abstract):
+    def assign(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if "tables" in ps:
+            return NamedSharding(
+                mesh, shard_lib._check_div(leaf.shape, ("model", None), mesh)
+            )
+        return NamedSharding(mesh, PartitionSpec())
+
+    return jax.tree_util.tree_map_with_path(assign, abstract)
+
+
+def make_recsys_bundle(arch_id: str, cfg: rec_lib.TwoTowerConfig,
+                       opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    shapes = shp.RECSYS_SHAPES
+
+    loss = lambda p, b: (rec_lib.sampled_softmax_loss(p, b, cfg), {})
+
+    def serve(params, batch):
+        u, v = rec_lib.two_tower_embeddings(params, batch, cfg)
+        return jnp.sum(u * v, axis=-1)
+
+    def retrieval(params, batch):
+        return rec_lib.retrieval_scores(
+            params, batch["user_ids"], batch["cand_emb"], cfg
+        )
+
+    return Bundle(
+        arch_id=arch_id,
+        family="recsys",
+        cfg=cfg,
+        shapes=shapes,
+        opt_cfg=opt_cfg,
+        _loss_fn=loss,
+        _init_fn=lambda rng: rec_lib.init_two_tower(rng, cfg),
+        _steps={
+            "train": make_train_step(loss, opt_cfg),
+            "serve": serve,
+            "retrieval": retrieval,
+        },
+        _specs_fn=lambda sn: _rec_specs(cfg, shapes, sn),
+        _input_shardings_fn=lambda sn, mesh, specs: _rec_input_shardings(
+            sn, mesh, specs
+        ),
+        _param_shardings_fn=lambda mesh, ab: _rec_param_shardings(mesh, ab),
+    )

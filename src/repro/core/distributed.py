@@ -1,0 +1,359 @@
+"""Distributed RECEIPT: multi-pod sharded peeling (DESIGN.md section 4).
+
+Sharding layout (mesh axes ("pod", "data", "model") or ("data", "model")):
+
+    A        (n_u, n_v)  rows over (pod, data), cols over model
+    support  (n_u,)      over (pod, data)
+    peel set A_S          gathered rows, cols over model
+
+One CD sweep =
+    gather A_S = A[rows]                    (all-gather over the dp axes)
+    W = A A_S^T                             (local matmul over the model
+                                             shard + all-reduce over model)
+    delta = (C(W,2) masked) @ valid         (local; output stays dp-sharded)
+    support' = max(support - delta, lo)     (local)
+
+so the collective schedule per sweep is exactly: one row all-gather + one
+all-reduce over `model` — RECEIPT's 1000x-fewer-sweeps is what makes this
+schedule cheap (ParB would issue it ~1.5M times on TrU).
+
+FD is a vmapped stack of independent subsets, one per device (subset dim
+sharded over ALL mesh axes): ZERO collectives, the paper's independence
+property preserved exactly.
+
+These functions serve three callers:
+  * launch/dryrun.py — .lower()/.compile() on the 512-device meshes,
+  * tests/test_distributed.py — real 8-device CPU runs vs the
+    single-device engine,
+  * benchmarks — collective-schedule inspection.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import dp_axes
+
+
+def _specs(mesh: Mesh):
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return {
+        "A": NamedSharding(mesh, P(dp, "model")),
+        "rows": NamedSharding(mesh, P()),
+        "vec_u": NamedSharding(mesh, P(dp)),
+        "scalar": NamedSharding(mesh, P()),
+        "a_s": NamedSharding(mesh, P(None, "model")),
+    }
+
+
+# --------------------------------------------------------------------- #
+# CD sweep (batched peel update)
+# --------------------------------------------------------------------- #
+def cd_sweep_step(a, support, alive, rows, valid, ids, lo, *,
+                  chunk: int = 16384):
+    """One coarse peel sweep: update supports for a gathered peel set.
+
+    a       (n_u, n_v)   0/1 residual biadjacency (rows/cols sharded)
+    support (n_u,)       current supports
+    alive   (n_u,)       bool
+    rows    (n_s,)       int32 peel-row ids (replicated)
+    valid   (n_s,)       1.0 where the row is a real peel row
+    ids     (n_u,)       global row ids (= arange)
+    lo      scalar       range lower bound (the Alg. 3 cap)
+
+    The peel set is processed in CHUNKS under lax.scan so the wedge tile
+    W = A A_S^T never exceeds (n_u_local, chunk) — the GSPMD analogue of
+    the Pallas kernel's VMEM tiling (DESIGN.md section 2.1).  HUC
+    recounts use the same op with rows = everything.
+    """
+    n_s = rows.shape[0]
+    from ..launch.sharding import shard_act
+
+    def delta_chunk(rows_c, valid_c):
+        # A is 0/1: int8 storage quarters HBM reads and the gather's
+        # cross-data reduction; the MXU runs int8 at 2x bf16 throughput.
+        # Padding rows are NOT zeroed here (would force a float multiply)
+        # — the `valid_c` contraction at the end nulls their contribution.
+        a_s = jnp.take(a, rows_c, axis=0)               # gather peel rows
+        a_s = shard_act(a_s, (None, "tp"))              # cols stay sharded
+        w = jax.lax.dot_general(
+            a, a_s,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,         # exact: W <= n_v
+        )
+        # reduce-scatter instead of all-reduce: every model rank holds the
+        # same U rows, so after the contraction-psum the W chunk would be
+        # replicated 16x — scattering the chunk dim halves the wire bytes
+        # AND divides the C(W,2) epilogue 16x; the per-rank partial deltas
+        # meet in one tiny (n_u_local,) psum.  U rows STAY dp-sharded.
+        w = shard_act(w, ("batch", "tp"))
+        b2 = w * (w - 1.0) * 0.5
+        not_self = (ids[:, None] != rows_c[None, :]).astype(jnp.float32)
+        return (b2 * not_self) @ valid_c.astype(jnp.float32)
+
+    if n_s <= chunk:
+        delta = delta_chunk(rows, valid)
+    else:
+        n_chunks = (n_s + chunk - 1) // chunk
+        pad = n_chunks * chunk - n_s
+        rows_p = jnp.pad(rows, (0, pad))
+        valid_p = jnp.pad(valid, (0, pad))
+
+        def body(acc, xs):
+            rc, vc = xs
+            return acc + delta_chunk(rc, vc), None
+
+        delta, _ = jax.lax.scan(
+            body,
+            jnp.zeros_like(support),
+            (rows_p.reshape(n_chunks, chunk), valid_p.reshape(n_chunks, chunk)),
+        )
+
+    # scatter only VALID rows (padding slots point at row 0)
+    peeled = jnp.zeros_like(alive).at[rows].max(valid > 0.5) & alive
+    alive_after = alive & ~peeled
+    support = jnp.where(
+        alive_after, jnp.maximum(support - delta, lo), support
+    )
+    return support, alive_after
+
+
+def cd_sweep_shardmap(mesh: Mesh, *, chunk: int = 16384):
+    """Explicit-collective CD sweep (shard_map): the beyond-paper
+    schedule.  GSPMD lowers the chunked W psum to a full all-reduce (it
+    fails to rewrite AR+slice into reduce-scatter inside the scan), which
+    wires 2x the necessary bytes and computes the C(W,2) epilogue
+    redundantly on every model rank.  Here the schedule is explicit:
+
+        a_s   <- psum over dp of owner-masked rows        (s8, small)
+        W_par <- local int8 dot over the n_v shard
+        W     <- psum_scatter over `model`, chunk dim     (HALF the AR wire)
+        delta <- local C(W,2) epilogue on 1/16 of W, then
+                 psum over `model` of the (n_u_local,) partials (tiny)
+
+    Returns a function with the same signature as cd_sweep_step.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    dp = dp_axes(mesh)
+    tp = "model"
+    n_model = mesh.shape[tp]
+
+    def body(a_loc, support_loc, alive_loc, rows, valid, ids_loc, lo):
+        # a_loc (n_u_loc, n_v_loc) s8; rows/valid replicated
+        n_u_loc = a_loc.shape[0]
+        # global row offset of this dp shard
+        dp_idx = jax.lax.axis_index(dp[0])
+        for ax in dp[1:]:
+            dp_idx = dp_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        row0 = dp_idx * n_u_loc
+        tp_idx = jax.lax.axis_index(tp)
+
+        n_s = rows.shape[0]
+        n_chunks = max(n_s // chunk, 1)
+        csz = n_s // n_chunks
+        scat = csz // n_model
+
+        def one_chunk(acc, xs):
+            rows_c, valid_c = xs                       # (csz,)
+            local_idx = rows_c - row0
+            mine = (local_idx >= 0) & (local_idx < n_u_loc)
+            a_s = jnp.where(
+                mine[:, None],
+                a_loc[jnp.clip(local_idx, 0, n_u_loc - 1)],
+                jnp.int8(0),
+            )
+            a_s = jax.lax.psum(a_s, dp)                # gather peel rows
+            w_par = jax.lax.dot_general(
+                a_loc, a_s,
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )                                          # (n_u_loc, csz) partial
+            w = jax.lax.psum_scatter(
+                w_par, tp, scatter_dimension=1, tiled=True
+            )                                          # (n_u_loc, csz/16)
+            rows_s = jax.lax.dynamic_slice_in_dim(rows_c, tp_idx * scat, scat)
+            valid_s = jax.lax.dynamic_slice_in_dim(valid_c, tp_idx * scat, scat)
+            b2 = w * (w - 1.0) * 0.5
+            not_self = (ids_loc[:, None] != rows_s[None, :]).astype(jnp.float32)
+            return acc + (b2 * not_self) @ valid_s, None
+
+        delta_par, _ = jax.lax.scan(
+            one_chunk,
+            jnp.zeros((n_u_loc,), jnp.float32),
+            (rows.reshape(n_chunks, csz), valid.reshape(n_chunks, csz)),
+        )
+        delta = jax.lax.psum(delta_par, tp)            # (n_u_loc,), tiny
+
+        peeled_loc = jnp.zeros_like(alive_loc)
+        local_idx = rows - row0
+        mine = (local_idx >= 0) & (local_idx < n_u_loc) & (valid > 0.5)
+        peeled_loc = peeled_loc.at[
+            jnp.clip(local_idx, 0, n_u_loc - 1)
+        ].max(mine)
+        alive_after = alive_loc & ~peeled_loc
+        support_loc = jnp.where(
+            alive_after, jnp.maximum(support_loc - delta, lo), support_loc
+        )
+        return support_loc, alive_after
+
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(PS(dp_spec, tp), PS(dp_spec), PS(dp_spec), PS(), PS(),
+                  PS(dp_spec), PS()),
+        out_specs=(PS(dp_spec), PS(dp_spec)),
+        check_rep=False,
+    )
+
+
+def lower_cd_sweep(mesh: Mesh, *, n_u: int, n_v: int, peel_rows: int,
+                   impl: str = "shardmap"):
+    """Abstract-lower one production-scale CD sweep on ``mesh``."""
+    sp = _specs(mesh)
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((n_u, n_v), jnp.int8),       # a (0/1: int8 storage)
+        sds((n_u,), f32),                # support
+        sds((n_u,), jnp.bool_),          # alive
+        sds((peel_rows,), jnp.int32),    # rows
+        sds((peel_rows,), f32),          # valid
+        sds((n_u,), jnp.int32),          # ids
+        sds((), f32),                    # lo
+    )
+    in_sh = (
+        sp["A"], sp["vec_u"], sp["vec_u"], sp["rows"], sp["rows"],
+        sp["vec_u"], sp["scalar"],
+    )
+    out_sh = (sp["vec_u"], sp["vec_u"])
+    fn = cd_sweep_shardmap(mesh) if impl == "shardmap" else cd_sweep_step
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    return jitted.lower(*args)
+
+
+# --------------------------------------------------------------------- #
+# HUC recount (full survivor recount — same op, mask = alive)
+# --------------------------------------------------------------------- #
+def recount_step(a, alive, ids):
+    s = alive.astype(a.dtype)
+    w = a @ (a * s[:, None]).T
+    b2 = w * (w - 1.0) * 0.5
+    not_self = (ids[:, None] != ids[None, :]).astype(a.dtype)
+    return (b2 * not_self) @ s
+
+
+# --------------------------------------------------------------------- #
+# FD stack (independent subsets, one per device)
+# --------------------------------------------------------------------- #
+def fd_stack_step(a_stack, sup0, n_members, lo):
+    """Peel a stack of independent induced subgraphs (vmap over subsets).
+
+    a_stack (G, M, C); sup0 (G, M); n_members (G,); lo (G,).
+    Subset dim G is sharded over every mesh axis -> zero collectives.
+    """
+    def peel_one(a_sub, sup, nm, lo1):
+        w = a_sub @ a_sub.T
+        b2 = w * (w - 1.0) * 0.5
+        mm = a_sub.shape[0]
+        b2 = b2 * (1.0 - jnp.eye(mm, dtype=a_sub.dtype))
+
+        def body(t, st):
+            s, alive, theta = st
+            masked = jnp.where(alive, s, jnp.inf)
+            u = jnp.argmin(masked)
+            th = jnp.maximum(masked[u], lo1)
+            do = t < nm
+            theta = jnp.where(do, theta.at[u].set(th), theta)
+            s = jnp.where(do & alive, jnp.maximum(s - b2[u], th), s)
+            alive = jnp.where(do, alive.at[u].set(False), alive)
+            return s, alive, theta
+
+        alive0 = jnp.arange(mm) < nm
+        _, _, theta = jax.lax.fori_loop(
+            0, mm, body, (sup, alive0, jnp.zeros_like(sup))
+        )
+        return theta
+
+    return jax.vmap(peel_one)(a_stack, sup0, n_members, lo)
+
+
+def lower_fd_stack(mesh: Mesh, *, n_subsets: int, rows: int, cols: int):
+    """FD subsets are independent -> shard_map makes that EXPLICIT: each
+    device peels its local stack with zero collectives.  (Left to GSPMD,
+    the per-step batched argmin/gather lowered to ~12k tiny all-reduces —
+    EXPERIMENTS.md §Roofline notes.)"""
+    from jax.experimental.shard_map import shard_map
+
+    all_axes = tuple(mesh.axis_names)
+    stack = NamedSharding(mesh, P(all_axes, None, None))
+    vec = NamedSharding(mesh, P(all_axes, None))
+    g1 = NamedSharding(mesh, P(all_axes))
+    local_fd = shard_map(
+        fd_stack_step, mesh=mesh,
+        in_specs=(P(all_axes, None, None), P(all_axes, None),
+                  P(all_axes), P(all_axes)),
+        out_specs=P(all_axes, None),
+        check_rep=False,
+    )
+    sds = jax.ShapeDtypeStruct
+    f32 = jnp.float32
+    args = (
+        sds((n_subsets, rows, cols), f32),
+        sds((n_subsets, rows), f32),
+        sds((n_subsets,), jnp.int32),
+        sds((n_subsets,), f32),
+    )
+    jitted = jax.jit(
+        local_fd,
+        in_shardings=(stack, vec, g1, g1),
+        out_shardings=vec,
+    )
+    return jitted.lower(*args)
+
+
+# --------------------------------------------------------------------- #
+# runnable multi-device engine (tests / small clusters)
+# --------------------------------------------------------------------- #
+def distributed_butterfly_support(mesh: Mesh, a: jnp.ndarray, s: jnp.ndarray):
+    """Counting/recount on a live mesh: support[i] = sum_{j!=i} s_j C(W_ij, 2)."""
+    sp = _specs(mesh)
+    n_u = a.shape[0]
+    ids = jnp.arange(n_u, dtype=jnp.int32)
+
+    def f(a, s, ids):
+        return recount_step(a, s > 0.5, ids)
+
+    jitted = jax.jit(
+        f,
+        in_shardings=(sp["A"], sp["vec_u"], sp["vec_u"]),
+        out_shardings=sp["vec_u"],
+    )
+    with mesh:
+        return jitted(a, s, ids)
+
+
+def distributed_cd_sweep(mesh: Mesh, a, support, alive, rows, valid, lo,
+                         impl: str = "gspmd", chunk: int = 16384):
+    sp = _specs(mesh)
+    n_u = a.shape[0]
+    ids = jnp.arange(n_u, dtype=jnp.int32)
+    if impl == "shardmap":
+        fn = cd_sweep_shardmap(mesh, chunk=chunk)
+    else:
+        fn = cd_sweep_step
+    jitted = jax.jit(
+        fn,
+        in_shardings=(sp["A"], sp["vec_u"], sp["vec_u"], sp["rows"],
+                      sp["rows"], sp["vec_u"], sp["scalar"]),
+        out_shardings=(sp["vec_u"], sp["vec_u"]),
+    )
+    with mesh:
+        return jitted(a.astype(jnp.int8), support, alive, rows, valid, ids, lo)

@@ -1,0 +1,657 @@
+"""RECEIPT — REfine CoarsE-grained IndePendent Tasks (the paper's Alg. 3+4).
+
+TPU-native engine (DESIGN.md section 2):
+
+* CD (coarse-grained decomposition, Alg. 3): a *host-driven* sweep loop.
+  Every sweep peels ALL vertices with support inside the current range in
+  one fused kernel dispatch; the number of host round-trips is the paper's
+  synchronization counter rho (1335 vs 1.5M on TrU).  Peel sets are
+  gathered into shape-bucketed matrices so sweep cost is proportional to
+  the peeled set, which is what makes HUC's peel-vs-recount decision a
+  real FLOP trade-off on the dense engine.
+
+* Adaptive range determination (section 3.1.1): wedge-weighted support
+  histogram + prefix sum on device (`_find_hi`), with the paper's dynamic
+  target and overshoot scaling factor s_i.
+
+* HUC (section 4.1): per sweep, compare the wedge cost of peeling the
+  active set against the Chiba-Nishizeki recount bound of the residual
+  graph; recount the survivors when cheaper.
+
+* DGM (section 4.2): at subset boundaries, re-induce the residual graph
+  (drop peeled rows, drop V columns with residual degree < 2) into freshly
+  bucketed (smaller) device arrays.  Shape compaction is the TPU analogue
+  of adjacency-list compaction.
+
+* FD (fine-grained decomposition, Alg. 4): each subset's induced subgraph
+  is peeled independently by exact sequential min-peeling; subsets are
+  grouped into equal-padded-shape stacks (core/scheduler.py — the LPT /
+  workload-aware scheduling analogue) and peeled concurrently with vmap.
+
+Correctness mirrors the paper's Theorems 1-2 and is tested against the
+numpy BUP oracle on random graphs (tests/test_receipt.py, incl. hypothesis
+property tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .graph import BipartiteGraph, pad_to_multiple
+from .scheduler import pack_by_shape
+
+__all__ = ["ReceiptConfig", "RunStats", "tip_decompose", "receipt_cd", "receipt_fd"]
+
+_INF = jnp.inf
+
+
+# ---------------------------------------------------------------------- #
+# config / stats
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ReceiptConfig:
+    num_partitions: int = 8                  # P
+    backend: Optional[str] = None            # kernel backend (None = auto)
+    kernel_blocks: Tuple[int, int, int] = (128, 128, 512)
+    use_huc: bool = True
+    use_dgm: bool = True
+    degree_sort: bool = True                 # Wang et al. relabel (tile density)
+    dgm_row_threshold: float = 0.7           # re-induce when alive < thresh*rows
+    fd_mode: str = "b2"                      # "b2" (precompute) | "matvec"
+    dtype: Any = jnp.float32
+    max_sweeps: int = 100_000                # safety valve
+
+
+@dataclasses.dataclass
+class RunStats:
+    """The paper's evaluation counters (Table 3 / Figs 5-9)."""
+
+    rho_cd: int = 0                 # CD sync rounds (peel sweeps)
+    rho_fd: int = 0                 # FD sync rounds (0 by construction)
+    sweeps_per_subset: List[int] = dataclasses.field(default_factory=list)
+    wedges_pvbcnt: int = 0          # counting bound sum_E min(du, dv)
+    wedges_cd: int = 0              # wedges traversed peeling in CD
+    wedges_fd: int = 0              # wedges in FD induced subgraphs
+    huc_recounts: int = 0
+    dgm_compactions: int = 0
+    elided_sweeps: int = 0          # terminal-sweep elision (beyond-paper)
+    num_subsets: int = 0
+    bounds: List[int] = dataclasses.field(default_factory=list)
+    subset_sizes: List[int] = dataclasses.field(default_factory=list)
+    subset_wedges_fd: List[int] = dataclasses.field(default_factory=list)
+    time_count: float = 0.0
+    time_cd: float = 0.0
+    time_fd: float = 0.0
+
+    @property
+    def wedges_total(self) -> int:
+        return self.wedges_pvbcnt + self.wedges_cd + self.wedges_fd
+
+
+# ---------------------------------------------------------------------- #
+# shape bucketing
+# ---------------------------------------------------------------------- #
+def _bucket(n: int, block: int) -> int:
+    """Power-of-two-ish bucket >= n, multiple of ``block`` (bounds the
+    number of distinct jit shapes to O(log n))."""
+    b = block
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------- #
+# jitted device primitives (cached per bucketed shape)
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def _support_all(a, alive, ids, *, backend, blocks):
+    """HUC recount / initial count: support of every row w.r.t. alive rows."""
+    return kops.butterfly_update(
+        a, a, alive.astype(a.dtype), ids, ids, backend=backend, blocks=blocks
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def _support_delta(a, a_peel, valid, ids, ids_peel, *, backend, blocks):
+    """CD peel update: delta[u'] = sum_{u in S} C(W[u, u'], 2)."""
+    return kops.butterfly_update(
+        a, a_peel, valid.astype(a.dtype), ids, ids_peel,
+        backend=backend, blocks=blocks,
+    )
+
+
+@jax.jit
+def _sweep_info(a, support, alive, hi):
+    """Select the active set and compute the paper's wedge-cost metrics.
+
+    Returns (peel_mask, n_peel, c_peel) where c_peel is the dynamic wedge
+    cost  sum_{u in S} sum_{v in N_u} (d_v - 1)  of peeling S in the
+    residual graph (HUC's C_peel).
+    """
+    peel = alive & (support < hi)
+    dv = a.T @ alive.astype(a.dtype)                 # residual V degrees
+    wcur = a @ jnp.maximum(dv - 1.0, 0.0)            # per-row residual wedges
+    c_peel = jnp.sum(jnp.where(peel, wcur, 0.0))
+    return peel, jnp.sum(peel), c_peel
+
+
+@jax.jit
+def _find_hi(support, w, alive, tgt):
+    """Adaptive range upper bound (Alg. 3 findHi).
+
+    Sort alive supports ascending, prefix-sum their wedge counts, pick the
+    smallest support whose cumulative wedge count reaches the target.
+    Falls back to max support + 1 (catch-all) when the target exceeds the
+    remaining wedge mass.
+    """
+    sup = jnp.where(alive, support, _INF)
+    order = jnp.argsort(sup)
+    ws = jnp.where(alive, w, 0.0)[order]
+    cum = jnp.cumsum(ws)
+    hit = cum >= tgt
+    idx = jnp.argmax(hit)                            # first True (or 0)
+    any_hit = hit[-1]
+    max_sup = jnp.max(jnp.where(alive, support, -_INF))
+    hi = jnp.where(any_hit, sup[order][idx], max_sup)
+    return hi + 1.0
+
+
+@jax.jit
+def _apply_delta(support, alive, peel, delta, lo):
+    """Alg. 2 update with the Alg. 3 range cap: cap at theta(i) = lo."""
+    alive_after = alive & ~peel
+    sup = jnp.where(alive_after, jnp.maximum(support - delta, lo), support)
+    return sup, alive_after
+
+
+@jax.jit
+def _residual_wedges(a, alive):
+    """Total wedge count (with endpoints on alive rows) of the residual
+    graph: sum over alive u of w_cur[u]."""
+    dv = a.T @ alive.astype(a.dtype)
+    wcur = a @ jnp.maximum(dv - 1.0, 0.0)
+    return jnp.sum(jnp.where(alive, wcur, 0.0)), wcur
+
+
+# ---------------------------------------------------------------------- #
+# device-graph container (bucketed, compacted view of the residual graph)
+# ---------------------------------------------------------------------- #
+class _DeviceGraph:
+    """Bucket-padded dense residual graph on device.
+
+    rows 0..n_rows-1 are live U vertices (original ids in ``members``);
+    cols are the compacted V vertices with residual degree >= 2.
+    """
+
+    def __init__(self, g: BipartiteGraph, members: np.ndarray, cfg: ReceiptConfig):
+        self.cfg = cfg
+        bi, bj, bk = cfg.kernel_blocks
+        sub, _ = g.induced_on_u(members)
+        # drop V columns that cannot form a wedge (residual degree < 2)
+        dv = sub.degrees_v()
+        keep_v = np.where(dv >= 2)[0]
+        sel = np.isin(sub.edges_v, keep_v)
+        vmap_inv = np.full(sub.n_v, -1, np.int64)
+        vmap_inv[keep_v] = np.arange(len(keep_v))
+        eu = sub.edges_u[sel]
+        ev = vmap_inv[sub.edges_v[sel]].astype(np.int32)
+
+        self.members = np.asarray(members)
+        self.n_rows = len(members)
+        self.n_cols = max(int(len(keep_v)), 1)
+        self.rows_pad = _bucket(self.n_rows, max(bi, bj))
+        self.cols_pad = _bucket(self.n_cols, bk)
+
+        a = np.zeros((self.rows_pad, self.cols_pad), np.float32)
+        a[eu, ev] = 1.0
+        self.a = jnp.asarray(a, dtype=cfg.dtype)
+        self.ids = jnp.arange(self.rows_pad, dtype=jnp.int32)
+        # static per-row wedge counts in this residual graph (range proxy)
+        dvk = dv[keep_v]
+        w = np.zeros(self.rows_pad, np.float64)
+        np.add.at(w, eu, (dvk[ev] - 1).astype(np.float64))
+        self.w = jnp.asarray(w, dtype=cfg.dtype)
+        # Chiba-Nishizeki recount bound of this residual graph (HUC C_rcnt)
+        du = np.bincount(eu, minlength=self.rows_pad)
+        self.c_rcnt = float(np.minimum(du[eu], dvk[ev]).sum())
+
+
+# ---------------------------------------------------------------------- #
+# CD — coarse-grained decomposition (Alg. 3)
+# ---------------------------------------------------------------------- #
+def cd_checkpoint_state(subset_id, init_support, bounds, members, support_np,
+                        rem_wedges, scale, lo, i):
+    """CD loop state as a plain pytree — checkpointable through
+    train/checkpoint.py like any train state (fault tolerance for the
+    peeling engine itself; restart is exact because CD is deterministic
+    given this state)."""
+    return {
+        "subset_id": np.asarray(subset_id),
+        "init_support": np.asarray(init_support),
+        "bounds": np.asarray(bounds, np.float64),
+        "members": np.asarray(members),
+        "support": np.asarray(support_np, np.float64),
+        "rem_wedges": np.float64(rem_wedges),
+        "scale": np.float64(scale),
+        "lo": np.float64(lo),
+        "i": np.int64(i),
+    }
+
+
+def receipt_cd(
+    g: BipartiteGraph, cfg: ReceiptConfig, stats: RunStats,
+    *, checkpoint_cb=None, resume_state=None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Partition U into subsets with non-overlapping tip-number ranges.
+
+    Returns (subset_id[n_u], init_support[n_u], bounds[P+1], theta_hint)
+    where subset_id[u] in [0, P), init_support is the FD support
+    initialization vector (Alg. 3 line 7) and bounds[i] = theta(i+1) lower
+    bounds, bounds[-1] > theta_max.
+
+    checkpoint_cb(state): called with a cd_checkpoint_state pytree at
+    every subset boundary.  resume_state: continue an interrupted run
+    from such a state (tests/test_receipt.py::test_cd_checkpoint_restart).
+    """
+    backend = cfg.backend or kops.default_backend()
+    blocks = cfg.kernel_blocks
+    n_u = g.n_u
+    p_total = cfg.num_partitions
+
+    t0 = time.perf_counter()
+    if resume_state is not None:
+        st = resume_state
+        subset_id = np.asarray(st["subset_id"]).copy()
+        init_support = np.asarray(st["init_support"]).copy()
+        bounds = [float(b) for b in st["bounds"]]
+        members = np.asarray(st["members"])
+        dg = _DeviceGraph(g, members, cfg)
+        stats.wedges_pvbcnt = g.counting_wedge_bound()
+        alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+        support = jnp.full(dg.rows_pad, _INF, cfg.dtype)
+        support = support.at[: dg.n_rows].set(
+            jnp.asarray(st["support"][: dg.n_rows], cfg.dtype)
+        )
+        rem_wedges = float(st["rem_wedges"])
+        scale = float(st["scale"])
+        lo = float(st["lo"])
+        i = int(st["i"])
+    else:
+        subset_id = np.full(n_u, -1, np.int64)
+        init_support = np.zeros(n_u, np.float64)
+        bounds = [0.0]
+
+        dg = _DeviceGraph(g, np.arange(n_u), cfg)
+        stats.wedges_pvbcnt = g.counting_wedge_bound()
+
+        # --- initial per-vertex counting (pvBcnt) ---------------------- #
+        alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+        support = _support_all(dg.a, alive, dg.ids, backend=backend,
+                               blocks=blocks)
+        support = jnp.where(alive, support, _INF)
+        support.block_until_ready()
+        stats.time_count = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        rem_wedges = float(_residual_wedges(dg.a, alive)[0])
+        scale = 1.0
+        lo = 0.0
+        i = 0
+    while int(jnp.sum(alive)) > 0:
+        if checkpoint_cb is not None:
+            alive_np = np.asarray(alive)
+            live = np.where(alive_np)[0]
+            checkpoint_cb(cd_checkpoint_state(
+                subset_id, init_support, bounds, dg.members[live],
+                np.asarray(support, np.float64)[live],
+                rem_wedges, scale, lo, i,
+            ))
+        # final catch-all subset (paper: "puts all of them in U_{P+1}")
+        catch_all = i >= p_total - 1
+        tgt = np.inf if catch_all else max(rem_wedges / (p_total - i) * scale, 1.0)
+
+        # support snapshot -> FD init vector (Alg. 3 lines 6-7)
+        sup_np = np.asarray(support, np.float64)
+        alive_np = np.asarray(alive)
+        live_rows = np.where(alive_np)[0]
+        init_support[dg.members[live_rows]] = sup_np[live_rows]
+
+        hi = float(_find_hi(support, dg.w, alive, tgt)) if not catch_all else float(
+            jnp.max(jnp.where(alive, support, -_INF))
+        ) + 1.0
+
+        sweeps = 0
+        covered_wedges = 0.0
+        while sweeps < cfg.max_sweeps:
+            peel, n_peel, c_peel = _sweep_info(dg.a, support, alive, hi)
+            n_peel = int(n_peel)
+            if n_peel == 0:
+                break
+            stats.rho_cd += 1
+            sweeps += 1
+            c_peel = float(c_peel)
+            covered_wedges += c_peel
+
+            n_alive_after = int(jnp.sum(alive)) - n_peel
+            if n_alive_after == 0:
+                # terminal-sweep elision (beyond-paper, DESIGN.md): when a
+                # sweep peels every remaining vertex there is no survivor
+                # to update, so the update kernel is skipped entirely.  On
+                # hub-dominated graphs this removes the single most
+                # expensive sweep (the paper would traverse all its wedges).
+                alive = alive & ~peel
+                stats.elided_sweeps += 1
+                peel_np = np.asarray(peel)
+                subset_id[dg.members[np.where(peel_np)[0]]] = i
+                continue
+            use_recount = cfg.use_huc and c_peel > dg.c_rcnt
+            if use_recount:
+                # HUC: recount survivors instead of propagating peel updates
+                alive = alive & ~peel
+                support = _support_all(
+                    dg.a, alive, dg.ids, backend=backend, blocks=blocks
+                )
+                support = jnp.where(alive, jnp.maximum(support, lo), _INF)
+                stats.huc_recounts += 1
+                stats.wedges_cd += int(dg.c_rcnt)
+            else:
+                # gather the peel rows into a bucketed matrix
+                peel_rows = jnp.nonzero(peel, size=dg.rows_pad, fill_value=0)[0]
+                n_peel_pad = _bucket(n_peel, blocks[1])
+                rows = peel_rows[:n_peel_pad]
+                valid = jnp.arange(n_peel_pad) < n_peel
+                a_peel = dg.a[rows] * valid[:, None].astype(dg.a.dtype)
+                delta = _support_delta(
+                    dg.a, a_peel, valid, dg.ids, rows.astype(jnp.int32),
+                    backend=backend, blocks=blocks,
+                )
+                support, alive = _apply_delta(support, alive, peel, delta, lo)
+                support = jnp.where(alive, support, _INF)
+                stats.wedges_cd += int(c_peel)
+
+            peel_np = np.asarray(peel)
+            subset_id[dg.members[np.where(peel_np)[0]]] = i
+
+        stats.sweeps_per_subset.append(sweeps)
+        bounds.append(hi)
+        rem_wedges = max(rem_wedges - covered_wedges, 0.0)
+        if covered_wedges > 0 and not catch_all:
+            scale = min(1.0, tgt / covered_wedges)
+        lo = hi
+        i += 1
+        if catch_all:
+            break
+
+        # --- DGM: re-induce the residual graph into smaller buckets ---- #
+        n_alive = int(jnp.sum(alive))
+        if n_alive == 0:
+            break
+        if cfg.use_dgm and n_alive < cfg.dgm_row_threshold * dg.rows_pad:
+            alive_np = np.asarray(alive)
+            live = np.where(alive_np)[0]
+            new_members = dg.members[live]
+            sup_keep = np.asarray(support, np.float64)[live]
+            dg = _DeviceGraph(g, new_members, cfg)
+            stats.dgm_compactions += 1
+            alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+            support = jnp.full(dg.rows_pad, _INF, cfg.dtype)
+            support = support.at[: dg.n_rows].set(
+                jnp.asarray(sup_keep, cfg.dtype)
+            )
+            rem = float(_residual_wedges(dg.a, alive)[0])
+            rem_wedges = rem
+
+    stats.num_subsets = i
+    stats.bounds = [float(b) for b in bounds]
+    stats.time_cd = time.perf_counter() - t0
+    # every vertex must be assigned
+    assert (subset_id >= 0).all(), "CD left unassigned vertices"
+    return subset_id, init_support, np.asarray(bounds), None
+
+
+# ---------------------------------------------------------------------- #
+# FD — fine-grained decomposition (Alg. 4)
+# ---------------------------------------------------------------------- #
+def _fd_peel_b2(b2, sup0, n_members, lo):
+    """Exact sequential bottom-up peel of one padded subset (B2 mode).
+
+    b2: (M, M) pairwise shared butterflies (zero diag, zero on padding);
+    sup0: (M,) FD-initialized supports (+inf padding); returns theta (M,).
+    """
+    mm = b2.shape[0]
+
+    def body(t, st):
+        sup, alive, theta = st
+        masked = jnp.where(alive, sup, _INF)
+        u = jnp.argmin(masked)
+        th = jnp.maximum(masked[u], lo)
+        do = t < n_members
+        theta = jnp.where(do, theta.at[u].set(th), theta)
+        new_sup = jnp.maximum(sup - b2[u], th)
+        sup = jnp.where(do & alive, new_sup, sup)
+        alive = jnp.where(do, alive.at[u].set(False), alive)
+        return sup, alive, theta
+
+    alive0 = jnp.arange(mm) < n_members
+    theta0 = jnp.zeros(mm, sup0.dtype)
+    _, _, theta = jax.lax.fori_loop(0, mm, body, (sup0, alive0, theta0))
+    return theta
+
+
+_fd_peel_b2_vm = jax.jit(jax.vmap(_fd_peel_b2, in_axes=(0, 0, 0, 0)))
+
+
+def _fd_peel_matvec(a_sub, sup0, n_members, lo):
+    """Exact sequential peel recomputing one B2 row per step (matvec mode).
+
+    a_sub: (M, C) induced biadjacency; avoids materializing (M, M).
+    """
+    mm = a_sub.shape[0]
+
+    def body(t, st):
+        sup, alive, theta = st
+        masked = jnp.where(alive, sup, _INF)
+        u = jnp.argmin(masked)
+        th = jnp.maximum(masked[u], lo)
+        do = t < n_members
+        w_row = a_sub @ a_sub[u]                       # (M,) wedge counts
+        b2_row = w_row * (w_row - 1.0) * 0.5
+        b2_row = b2_row.at[u].set(0.0)
+        new_sup = jnp.maximum(sup - b2_row, th)
+        theta = jnp.where(do, theta.at[u].set(th), theta)
+        sup = jnp.where(do & alive, new_sup, sup)
+        alive = jnp.where(do, alive.at[u].set(False), alive)
+        return sup, alive, theta
+
+    alive0 = jnp.arange(mm) < n_members
+    theta0 = jnp.zeros(mm, sup0.dtype)
+    _, _, theta = jax.lax.fori_loop(0, mm, body, (sup0, alive0, theta0))
+    return theta
+
+
+_fd_peel_matvec_vm = jax.jit(jax.vmap(_fd_peel_matvec, in_axes=(0, 0, 0, 0)))
+
+
+def receipt_fd(
+    g: BipartiteGraph,
+    subset_id: np.ndarray,
+    init_support: np.ndarray,
+    bounds: np.ndarray,
+    cfg: ReceiptConfig,
+    stats: RunStats,
+) -> np.ndarray:
+    """Exact tip numbers by independent peeling of induced subgraphs."""
+    t0 = time.perf_counter()
+    n_sub = int(subset_id.max()) + 1
+    theta = np.zeros(g.n_u, np.float64)
+
+    # build per-subset induced subgraphs (host; this IS the paper's
+    # "induce subgraph + only traverse its wedges" saving)
+    tasks = []
+    for i in range(n_sub):
+        members = np.where(subset_id == i)[0]
+        stats.subset_sizes.append(len(members))
+        if len(members) == 0:
+            stats.subset_wedges_fd.append(0)
+            continue
+        sub, _ = g.induced_on_u(members)
+        wsub = int(sub.wedge_counts_u().sum())
+        stats.subset_wedges_fd.append(wsub)
+        stats.wedges_fd += wsub
+        tasks.append(
+            dict(
+                members=members,
+                sub=sub,
+                lo=float(bounds[i]),
+                wedges=wsub,
+            )
+        )
+
+    # workload-aware scheduling: group into equal-padded stacks (LPT analog)
+    groups = pack_by_shape(
+        tasks,
+        size_of=lambda t: (len(t["members"]), max(t["sub"].n_v, 1)),
+        weight_of=lambda t: t["wedges"],
+        bucket=lambda n: _bucket(n, 8),
+    )
+
+    for group in groups:
+        mm = max(_bucket(max(len(t["members"]) for t in group), 8), 8)
+        cc = max(_bucket(max(t["sub"].n_v for t in group), 8), 8)
+        n_g = len(group)
+        sup0 = np.full((n_g, mm), np.inf, np.float64)
+        nmem = np.zeros(n_g, np.int32)
+        los = np.zeros(n_g, np.float64)
+        a_stack = np.zeros((n_g, mm, cc), np.float32)
+        for k, t in enumerate(group):
+            mems = t["members"]
+            nmem[k] = len(mems)
+            los[k] = t["lo"]
+            sup0[k, : len(mems)] = init_support[mems]
+            s = t["sub"]
+            a_stack[k, s.edges_u, s.edges_v] = 1.0
+
+        a_dev = jnp.asarray(a_stack, cfg.dtype)
+        sup_dev = jnp.asarray(sup0, cfg.dtype)
+        nm_dev = jnp.asarray(nmem)
+        lo_dev = jnp.asarray(los, cfg.dtype)
+        if cfg.fd_mode == "b2":
+            w = jnp.einsum("gmc,gnc->gmn", a_dev, a_dev)
+            b2 = w * (w - 1.0) * 0.5
+            eye = jnp.eye(mm, dtype=cfg.dtype)
+            b2 = b2 * (1.0 - eye)[None]
+            th = _fd_peel_b2_vm(b2, sup_dev, nm_dev, lo_dev)
+        else:
+            th = _fd_peel_matvec_vm(a_dev, sup_dev, nm_dev, lo_dev)
+        th_np = np.asarray(th, np.float64)
+        for k, t in enumerate(group):
+            theta[t["members"]] = th_np[k, : nmem[k]]
+
+    stats.time_fd = time.perf_counter() - t0
+    return theta
+
+
+# ---------------------------------------------------------------------- #
+# ParB baseline in the SAME engine (same kernels, bottom-up schedule)
+# ---------------------------------------------------------------------- #
+def parb_tip_decompose(
+    g: BipartiteGraph, cfg: Optional[ReceiptConfig] = None
+) -> Tuple[np.ndarray, RunStats]:
+    """PARBUTTERFLY-style batch peeling on the dense engine.
+
+    Identical kernels/dispatch machinery to RECEIPT, but each sweep peels
+    only the CURRENT MINIMUM support set (the ParB schedule).  This is the
+    apples-to-apples wall-clock baseline for Table 3: the only difference
+    from RECEIPT is the number of synchronization rounds.
+    """
+    cfg = cfg or ReceiptConfig()
+    stats = RunStats()
+    backend = cfg.backend or kops.default_backend()
+    blocks = cfg.kernel_blocks
+
+    dg = _DeviceGraph(g, np.arange(g.n_u), cfg)
+    stats.wedges_pvbcnt = g.counting_wedge_bound()
+    alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+    support = _support_all(dg.a, alive, dg.ids, backend=backend, blocks=blocks)
+    support = jnp.where(alive, support, _INF)
+
+    theta = np.zeros(g.n_u, np.int64)
+    t0 = time.perf_counter()
+    while True:
+        n_alive = int(jnp.sum(alive))
+        if n_alive == 0:
+            break
+        mn = float(jnp.min(jnp.where(alive, support, _INF)))
+        peel, n_peel, c_peel = _sweep_info(dg.a, support, alive, mn + 1.0)
+        n_peel = int(n_peel)
+        stats.rho_cd += 1
+        stats.wedges_cd += int(c_peel)
+
+        peel_rows = jnp.nonzero(peel, size=dg.rows_pad, fill_value=0)[0]
+        n_peel_pad = _bucket(n_peel, blocks[1])
+        rows = peel_rows[:n_peel_pad]
+        valid = jnp.arange(n_peel_pad) < n_peel
+        a_peel = dg.a[rows] * valid[:, None].astype(dg.a.dtype)
+        delta = _support_delta(
+            dg.a, a_peel, valid, dg.ids, rows.astype(jnp.int32),
+            backend=backend, blocks=blocks,
+        )
+        support, alive = _apply_delta(support, alive, peel, delta, mn)
+        support = jnp.where(alive, support, _INF)
+        peel_np = np.asarray(peel)[: dg.n_rows]
+        theta[dg.members[peel_np.nonzero()[0]]] = int(mn)
+    stats.time_cd = time.perf_counter() - t0
+    return theta, stats
+
+
+# ---------------------------------------------------------------------- #
+# top level
+# ---------------------------------------------------------------------- #
+def tip_decompose(
+    g: BipartiteGraph, cfg: Optional[ReceiptConfig] = None,
+    *, side: str = "U",
+) -> Tuple[np.ndarray, RunStats]:
+    """Full RECEIPT tip decomposition of one side of ``g``.
+
+    side="V" peels the other vertex set (the paper decomposes both sides
+    of every dataset — *U/*V rows of Table 3); implemented by transposing
+    the bipartite graph, which is exact by symmetry.
+
+    Returns (theta int64[n_side], RunStats).
+    """
+    cfg = cfg or ReceiptConfig()
+    if side == "V":
+        g = BipartiteGraph.from_edges(g.n_v, g.n_u, g.edges_v, g.edges_u)
+    elif side != "U":
+        raise ValueError(f"side must be 'U' or 'V', got {side!r}")
+    stats = RunStats()
+    if cfg.degree_sort:
+        # relabel for tile density; map results back at the end
+        du = g.degrees_u()
+        perm_u = np.argsort(-du, kind="stable")
+        dv = g.degrees_v()
+        perm_v = np.argsort(-dv, kind="stable")
+        inv_u = np.empty_like(perm_u)
+        inv_u[perm_u] = np.arange(g.n_u)
+        inv_v = np.empty_like(perm_v)
+        inv_v[perm_v] = np.arange(g.n_v)
+        g_work = BipartiteGraph.from_edges(
+            g.n_u, g.n_v, inv_u[g.edges_u], inv_v[g.edges_v]
+        )
+    else:
+        perm_u = np.arange(g.n_u)
+        g_work = g
+
+    subset_id, init_support, bounds, _ = receipt_cd(g_work, cfg, stats)
+    theta_work = receipt_fd(g_work, subset_id, init_support, bounds, cfg, stats)
+
+    theta = np.zeros(g.n_u, np.int64)
+    theta[perm_u] = np.round(theta_work).astype(np.int64)
+    return theta, stats

@@ -1,0 +1,61 @@
+"""Workload-aware scheduling for FD subsets (paper section 3.2.1).
+
+The paper uses LPT-ordered dynamic task allocation over OpenMP threads.  A
+TPU has no device-side work stealing, so the analogue is *static packing*:
+
+  * subsets are grouped by their bucketed padded shape, so each vmap stack
+    wastes minimal padding (vmap requires uniform shapes);
+  * inside a shape group, subsets are sorted by wedge count descending
+    (LPT order), so if the caller splits a group across devices the
+    heaviest tasks land first;
+  * ``lpt_assign`` provides the classic 4/3-approximation assignment of
+    weighted tasks to k workers, used by the distributed FD driver and the
+    straggler-mitigation logic (train/fault_tolerance.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+__all__ = ["pack_by_shape", "lpt_assign"]
+
+
+def pack_by_shape(
+    tasks: Sequence,
+    *,
+    size_of: Callable,
+    weight_of: Callable,
+    bucket: Callable[[int], int],
+) -> List[List]:
+    """Group tasks by bucketed padded shape; LPT order inside each group.
+
+    size_of(task) -> (rows, cols); weight_of(task) -> workload proxy
+    (wedge count); bucket(n) -> padded size.  Returns a list of groups
+    (each a list of tasks), heaviest groups first.
+    """
+    groups: Dict[Tuple[int, int], List] = {}
+    for t in tasks:
+        r, c = size_of(t)
+        key = (bucket(max(r, 1)), bucket(max(c, 1)))
+        groups.setdefault(key, []).append(t)
+    out = []
+    for key in sorted(groups, key=lambda k: -(k[0] * k[1])):
+        grp = sorted(groups[key], key=weight_of, reverse=True)
+        out.append(grp)
+    return out
+
+
+def lpt_assign(weights: Sequence[float], k: int) -> List[List[int]]:
+    """Longest-Processing-Time assignment of tasks to ``k`` workers.
+
+    Returns per-worker lists of task indices.  Graham's classic
+    4/3-approximation [Graham 1969], the rule the paper's workload-aware
+    scheduling is modeled on (Fig. 3).
+    """
+    order = sorted(range(len(weights)), key=lambda i: -weights[i])
+    loads = [0.0] * k
+    assign: List[List[int]] = [[] for _ in range(k)]
+    for i in order:
+        j = loads.index(min(loads))
+        assign[j].append(i)
+        loads[j] += weights[i]
+    return assign

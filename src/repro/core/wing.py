@@ -1,0 +1,231 @@
+"""Wing decomposition (edge peeling) — the paper's §7 extension.
+
+The wing number ψ_e of edge e is the largest k such that e survives in a
+k-wing (every edge in ≥ k butterflies within the subgraph; Sariyuce &
+Pinar's k-wing / Zou's bitruss).  The paper sketches how RECEIPT
+generalizes: coarse edge-support ranges -> independent edge subsets,
+noting (a) batched edge peeling has butterfly double-delete conflicts
+("only one of the peeled edges should update the support") and (b) the
+workload optimizations matter MORE for edges.
+
+Our TPU formulation dissolves the conflict: on the dense engine, the
+per-edge butterfly count of the residual graph is closed-form,
+
+    b(u,v) = [A (AᵀA)](u,v) − d_u(u) − d_v(v) + 1      for alive edges,
+
+so a CD sweep = zero the peeled edges + RECOUNT (two matmuls) — the
+paper's own HUC insight taken to always-on, which is exactly its remark
+that workload optimizations "have a greater impact on edge peeling":
+batched-exact, no priority ordering needed.
+
+FD peels each subset's edges sequentially against the residual graph of
+(subset ∪ higher) edges, with incremental per-peel updates:
+peeling e = (u, v) decrements, for each butterfly (u, u', v, v'),
+
+    (u, v')  by  |{u'}|  = masked matvec  (Aᵀ col_v) ⊙ row_u
+    (u', v)  by  |{v'}|  = masked matvec  (A row_u) ⊙ col_v
+    (u', v') by  1       = rank-1 outer   col_v row_uᵀ ⊙ A
+
+Correctness is tested against the sequential edge-peel oracle
+(tests/test_wing.py, incl. hypothesis property sweeps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import BipartiteGraph
+
+__all__ = ["wing_bup_oracle", "wing_decompose", "edge_butterfly_counts"]
+
+
+# ---------------------------------------------------------------------- #
+# per-edge butterfly counts (closed form)
+# ---------------------------------------------------------------------- #
+def edge_butterfly_counts(a: np.ndarray) -> np.ndarray:
+    """b[u,v] for every alive edge of the (possibly partial) 0/1 matrix."""
+    ata = a.T @ a
+    m = a @ ata
+    du = a.sum(1, keepdims=True)
+    dv = a.sum(0, keepdims=True)
+    b = (m - du - dv + 1) * (a > 0)
+    return b
+
+
+@jax.jit
+def _edge_counts_jax(a):
+    ata = a.T @ a
+    m = a @ ata
+    du = a.sum(1, keepdims=True)
+    dv = a.sum(0, keepdims=True)
+    return (m - du - dv + 1.0) * (a > 0)
+
+
+@jax.jit
+def _peel_update(a, u, v):
+    """Incremental support delta matrix for peeling edge (u, v) from a."""
+    row_u = a[u]                                   # (n_v,)
+    col_v = a[:, v]                                # (n_u,)
+    d_uv = jnp.zeros_like(a)
+    # (u, v') loses one butterfly per u' wedge partner
+    cnt_vp = (a.T @ col_v) * row_u                 # (n_v,)
+    d_uv = d_uv.at[u].add(cnt_vp)
+    # (u', v) loses one per v' partner
+    cnt_up = (a @ row_u) * col_v                   # (n_u,)
+    d_uv = d_uv.at[:, v].add(cnt_up)
+    # (u', v') loses exactly one per butterfly through (u,v)
+    d_uv = d_uv + jnp.outer(col_v, row_u) * a
+    # the peeled edge's own contributions were included via u'=u/v'=v
+    # masks inside the matvecs? no: row_u/col_v include (u,v) itself —
+    # remove the self terms
+    d_uv = d_uv.at[u, v].set(0.0)
+    # cnt_vp counted u'=u? col_v[u]=1 -> (A^T col_v)[v'] includes u'=u:
+    # those "butterflies" are wedges (u,v,u=u,v') — not butterflies.
+    # subtract: A[u, v'] * row_u[v'] = row_u (since A[u]=row_u)
+    d_uv = d_uv.at[u].add(-(row_u * row_u))
+    d_uv = d_uv.at[:, v].add(-(col_v * col_v))
+    # rank-1 outer counted u'=u row and v'=v col: zero them
+    d_uv = d_uv.at[u, :].add(-(col_v[u] * row_u * a[u]))
+    d_uv = d_uv.at[:, v].add(-(row_u[v] * col_v * a[:, v]))
+    # (u,v) itself re-zeroed (it is being deleted)
+    d_uv = d_uv.at[u, v].set(0.0)
+    return d_uv
+
+
+# ---------------------------------------------------------------------- #
+# sequential oracle
+# ---------------------------------------------------------------------- #
+def wing_bup_oracle(g: BipartiteGraph) -> Tuple[np.ndarray, int]:
+    """Exact sequential bottom-up edge peeling (int64 numpy).
+
+    Returns (psi[m] aligned with g.edges_*, rounds).  Supports are
+    recomputed from the closed form after every peel — O(m * matmul),
+    oracle-grade only.
+    """
+    a = g.dense(dtype=np.int64)[: g.n_u, : g.n_v]
+    eu, ev = g.edges_u, g.edges_v
+    m = g.m
+    psi = np.zeros(m, np.int64)
+    alive = np.ones(m, bool)
+    rounds = 0
+    b = edge_butterfly_counts(a)
+    cur = b[eu, ev].astype(np.int64)
+    k = 0
+    for _ in range(m):
+        cand = np.where(alive)[0]
+        e = cand[np.argmin(cur[cand])]
+        k = max(k, int(cur[e]))
+        psi[e] = k
+        alive[e] = False
+        a[eu[e], ev[e]] = 0
+        b = edge_butterfly_counts(a)
+        cur = b[eu, ev].astype(np.int64)
+        rounds += 1
+    return psi, rounds
+
+
+# ---------------------------------------------------------------------- #
+# RECEIPT-style wing decomposition
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class WingStats:
+    rho_cd: int = 0
+    num_subsets: int = 0
+    bounds: List[float] = dataclasses.field(default_factory=list)
+
+
+def wing_decompose(
+    g: BipartiteGraph, num_partitions: int = 8
+) -> Tuple[np.ndarray, WingStats]:
+    """Coarse-grained edge-range peeling + exact per-subset FD.
+
+    Returns (psi int64[m] aligned with g.edges_*, WingStats).
+    """
+    stats = WingStats()
+    eu = jnp.asarray(g.edges_u)
+    ev = jnp.asarray(g.edges_v)
+    m = g.m
+    a0 = jnp.asarray(g.dense()[: g.n_u, : g.n_v])
+
+    # ---- CD: coarse ranges over edge supports (always-recount HUC) ---- #
+    a = a0
+    alive = jnp.ones(m, bool)
+    sup = _edge_counts_jax(a)[eu, ev]
+    subset_id = np.full(m, -1, np.int64)
+    init_sup = np.zeros(m, np.float64)
+    bounds = [0.0]
+    lo = 0.0
+    i = 0
+    while bool(jnp.any(alive)):
+        catch_all = i >= num_partitions - 1
+        init_np = np.asarray(sup, np.float64)
+        alive_np = np.asarray(alive)
+        init_sup[alive_np] = init_np[alive_np]
+        if catch_all:
+            hi = float(jnp.max(jnp.where(alive, sup, -jnp.inf))) + 1.0
+        else:
+            # equal-edge-count ranges (edge-count proxy for wedge work)
+            vals = np.sort(init_np[alive_np])
+            tgt = max(len(vals) // max(num_partitions - i, 1), 1)
+            hi = float(vals[min(tgt - 1, len(vals) - 1)]) + 1.0
+        while True:
+            peel = alive & (sup < hi)
+            n_peel = int(jnp.sum(peel))
+            if n_peel == 0:
+                break
+            stats.rho_cd += 1
+            subset_id[np.asarray(peel)] = i
+            # batched-exact: zero peeled edges, recount survivors
+            a = a * (1.0 - (
+                jnp.zeros_like(a).at[eu, ev].add(peel.astype(a.dtype))
+            ))
+            alive = alive & ~peel
+            sup = jnp.where(
+                alive,
+                jnp.maximum(_edge_counts_jax(a)[eu, ev], lo),
+                jnp.inf,
+            )
+        bounds.append(hi)
+        lo = hi
+        i += 1
+        if catch_all:
+            break
+    stats.num_subsets = i
+    stats.bounds = bounds
+    assert (subset_id >= 0).all()
+
+    # ---- FD: per-subset sequential peel on (subset ∪ higher) edges ---- #
+    psi = np.zeros(m, np.int64)
+    for s in range(i):
+        members = np.where(subset_id == s)[0]
+        if len(members) == 0:
+            continue
+        ge_mask = subset_id >= s
+        a_res = np.zeros((g.n_u, g.n_v), np.float32)
+        a_res[g.edges_u[ge_mask], g.edges_v[ge_mask]] = 1.0
+        a_j = jnp.asarray(a_res)
+        sup_m = init_sup[members].copy()
+        alive_m = np.ones(len(members), bool)
+        k = bounds[s]
+        for _ in range(len(members)):
+            cand = np.where(alive_m)[0]
+            j = cand[np.argmin(sup_m[cand])]
+            e = members[j]
+            k = max(k, sup_m[j])
+            psi[e] = int(round(k))
+            alive_m[j] = False
+            u, v = int(g.edges_u[e]), int(g.edges_v[e])
+            delta = _peel_update(a_j, u, v)
+            a_j = a_j.at[u, v].set(0.0)
+            d_members = np.asarray(delta)[
+                g.edges_u[members], g.edges_v[members]
+            ]
+            sup_m = np.where(
+                alive_m, np.maximum(sup_m - d_members, k), sup_m
+            )
+        # edge supports never dip below their subset's lower bound
+    return psi, stats

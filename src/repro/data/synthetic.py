@@ -1,0 +1,210 @@
+"""Synthetic data generation for every family (host-side, numpy + jax).
+
+This is the framework's data pipeline for examples, smoke tests and CPU
+benchmarks: token streams (LM), random graphs with consistent
+masks/triplets (GNN), interaction batches (recsys).  Every generator
+returns concrete arrays shaped exactly like the corresponding
+``bundle.input_specs`` cell (at reduced scale for smokes).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------- #
+# LM
+# --------------------------------------------------------------------- #
+def lm_train_batch(vocab: int, batch: int, seq: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, vocab, (batch, seq + 1), dtype=np.int32)
+    return {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+    }
+
+
+def lm_token_stream(vocab: int, batch: int, seq: int, seed: int = 0):
+    """Infinite deterministic token stream (for the train driver)."""
+    step = 0
+    while True:
+        yield lm_train_batch(vocab, batch, seq, seed=seed + step)
+        step += 1
+
+
+# --------------------------------------------------------------------- #
+# GNN
+# --------------------------------------------------------------------- #
+def random_graph(n_nodes: int, n_edges: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    snd = rng.integers(0, n_nodes, n_edges, dtype=np.int32)
+    rcv = rng.integers(0, n_nodes, n_edges, dtype=np.int32)
+    return snd, rcv
+
+
+def meshgraphnet_batch(cfg, n_nodes: int, n_edges: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    snd, rcv = random_graph(n_nodes, n_edges, seed)
+    return {
+        "node_feats": jnp.asarray(rng.normal(size=(n_nodes, cfg.d_node_in)).astype(np.float32)),
+        "edge_feats": jnp.asarray(rng.normal(size=(n_edges, cfg.d_edge_in)).astype(np.float32)),
+        "senders": jnp.asarray(snd),
+        "receivers": jnp.asarray(rcv),
+        "edge_mask": jnp.ones((n_edges,), jnp.float32),
+        "targets": jnp.asarray(rng.normal(size=(n_nodes, cfg.d_out)).astype(np.float32)),
+    }
+
+
+def graphsage_full_batch(cfg, n_nodes: int, n_edges: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    snd, rcv = random_graph(n_nodes, n_edges, seed)
+    return {
+        "node_feats": jnp.asarray(rng.normal(size=(n_nodes, cfg.d_in)).astype(np.float32)),
+        "senders": jnp.asarray(snd),
+        "receivers": jnp.asarray(rcv),
+        "edge_mask": jnp.ones((n_edges,), jnp.float32),
+        "labels": jnp.asarray(rng.integers(0, cfg.n_classes, n_nodes, dtype=np.int32)),
+        "node_mask": jnp.ones((n_nodes,), jnp.float32),
+    }
+
+
+def graphsage_sampled_batch(cfg, batch_nodes: int, fanouts, n_nodes: int,
+                            n_edges: int, seed: int = 0):
+    """Run the REAL sampler (models/sampler.py) over a random graph."""
+    from ..models.sampler import build_nbr_table, sample_blocks
+
+    rng = np.random.default_rng(seed)
+    snd, rcv = random_graph(n_nodes, n_edges, seed)
+    table, deg = build_nbr_table(snd, rcv, n_nodes, max_deg=32)
+    feats = rng.normal(size=(n_nodes, cfg.d_in)).astype(np.float32)
+    seeds = rng.choice(n_nodes, size=batch_nodes, replace=False).astype(np.int32)
+    blocks = sample_blocks(
+        jax.random.PRNGKey(seed), jnp.asarray(table), jnp.asarray(deg),
+        jnp.asarray(feats), jnp.asarray(seeds), fanouts,
+    )
+    blocks["labels"] = jnp.asarray(
+        rng.integers(0, cfg.n_classes, batch_nodes, dtype=np.int32)
+    )
+    return blocks
+
+
+def build_triplets(snd: np.ndarray, rcv: np.ndarray, max_triplets: int,
+                   seed: int = 0):
+    """Real triplet table: pairs (kj, ji) of edges sharing node j
+    (k -> j -> i), truncated at max_triplets."""
+    rng = np.random.default_rng(seed)
+    n_edges = len(snd)
+    by_dst: Dict[int, list] = {}
+    for e, d in enumerate(rcv):
+        by_dst.setdefault(int(d), []).append(e)
+    kj, ji = [], []
+    for e_ji in range(n_edges):
+        j = int(snd[e_ji])
+        for e_kj in by_dst.get(j, ()):
+            if int(snd[e_kj]) != int(rcv[e_ji]):   # k != i
+                kj.append(e_kj)
+                ji.append(e_ji)
+            if len(kj) >= max_triplets:
+                break
+        if len(kj) >= max_triplets:
+            break
+    t = len(kj)
+    pad = max_triplets - t
+    return (
+        np.asarray(kj + [0] * pad, np.int32),
+        np.asarray(ji + [0] * pad, np.int32),
+        np.concatenate([np.ones(t, np.float32), np.zeros(pad, np.float32)]),
+    )
+
+
+def dimenet_batch(cfg, n_nodes: int, n_edges: int, n_graphs: int = 1,
+                  triplet_fanout: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    snd, rcv = random_graph(n_nodes, n_edges, seed)
+    max_t = n_edges * triplet_fanout
+    kj, ji, tmask = build_triplets(snd, rcv, max_t, seed)
+    batch = {
+        "node_feats": jnp.asarray(rng.normal(size=(n_nodes, cfg.d_node_in)).astype(np.float32)),
+        "positions": jnp.asarray(rng.normal(size=(n_nodes, 3)).astype(np.float32)),
+        "senders": jnp.asarray(snd),
+        "receivers": jnp.asarray(rcv),
+        "edge_mask": jnp.ones((n_edges,), jnp.float32),
+        "trip_kj": jnp.asarray(kj),
+        "trip_ji": jnp.asarray(ji),
+        "trip_mask": jnp.asarray(tmask),
+    }
+    if n_graphs > 1:
+        gid = np.repeat(np.arange(n_graphs), n_nodes // n_graphs)
+        gid = np.pad(gid, (0, n_nodes - len(gid)), constant_values=n_graphs - 1)
+        batch["graph_id"] = jnp.asarray(gid.astype(np.int32))
+        batch["targets"] = jnp.asarray(rng.normal(size=(n_graphs,)).astype(np.float32))
+    else:
+        batch["targets"] = jnp.asarray(rng.normal(size=(1,)).astype(np.float32))
+    return batch
+
+
+def graphcast_batch(cfg, n_grid: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    nm = getattr(cfg, "n_mesh_nodes_padded", cfg.n_mesh_nodes)
+    em = getattr(cfg, "n_mesh_edges_padded", cfg.n_mesh_edges)
+    e_g2m, e_m2g = 4 * n_grid, 3 * n_grid
+
+    def edges(n_e, n_src, n_dst):
+        return (
+            rng.integers(0, n_src, n_e, dtype=np.int32),
+            rng.integers(0, n_dst, n_e, dtype=np.int32),
+        )
+
+    g2m_s, g2m_r = edges(e_g2m, n_grid, nm)
+    m_s, m_r = edges(em, nm, nm)
+    m2g_s, m2g_r = edges(e_m2g, nm, n_grid)
+    f32 = np.float32
+    return {
+        "grid_feats": jnp.asarray(rng.normal(size=(n_grid, cfg.n_vars)).astype(f32)),
+        "mesh_feats": jnp.asarray(rng.normal(size=(nm, 4)).astype(f32)),
+        "g2m_senders": jnp.asarray(g2m_s), "g2m_receivers": jnp.asarray(g2m_r),
+        "g2m_feats": jnp.asarray(rng.normal(size=(e_g2m, 4)).astype(f32)),
+        "g2m_mask": jnp.ones((e_g2m,), jnp.float32),
+        "mesh_senders": jnp.asarray(m_s), "mesh_receivers": jnp.asarray(m_r),
+        "mesh_efeats": jnp.asarray(rng.normal(size=(em, 4)).astype(f32)),
+        "mesh_mask": jnp.ones((em,), jnp.float32),
+        "m2g_senders": jnp.asarray(m2g_s), "m2g_receivers": jnp.asarray(m2g_r),
+        "m2g_feats": jnp.asarray(rng.normal(size=(e_m2g, 4)).astype(f32)),
+        "m2g_mask": jnp.ones((e_m2g,), jnp.float32),
+        "targets": jnp.asarray(rng.normal(size=(n_grid, cfg.n_vars)).astype(f32)),
+    }
+
+
+# --------------------------------------------------------------------- #
+# recsys
+# --------------------------------------------------------------------- #
+def recsys_batch(cfg, batch: int, seed: int = 0, with_logq: bool = True):
+    rng = np.random.default_rng(seed)
+    w = cfg.values_per_field
+
+    def ids(fields):
+        cols = [
+            rng.integers(0, v, (batch, 1, w), dtype=np.int32) for v in fields
+        ]
+        return np.concatenate(cols, axis=1)
+
+    out = {
+        "user_ids": jnp.asarray(ids(cfg.user_fields)),
+        "item_ids": jnp.asarray(ids(cfg.item_fields)),
+    }
+    if with_logq:
+        out["item_logq"] = jnp.asarray(
+            np.log(rng.uniform(1e-6, 1e-3, batch)).astype(np.float32)
+        )
+    return out
+
+
+def interaction_graph(n_users: int, n_items: int, n_inter: int, seed: int = 0):
+    """Bipartite user-item interaction graph — RECEIPT's input in the
+    recsys integration (examples/recsys_tip_filtering.py)."""
+    from ..core.graph import powerlaw_bipartite
+
+    return powerlaw_bipartite(n_users, n_items, n_inter, seed=seed)

@@ -1,0 +1,91 @@
+"""Dispatching wrappers for the butterfly kernels.
+
+``butterfly_support(a, s)`` / ``butterfly_update(a, b, s, ids_a, ids_b)``
+are THE hot ops of the framework: RECEIPT's per-vertex counting, CD batched
+peel updates and HUC recounts are all these ops with different masks/rows.
+The wrappers:
+
+  * route to the Pallas kernel (TPU), the Pallas interpreter (CPU
+    validation of the same kernel body), or the pure-jnp oracle
+    (fast CPU execution path for benchmarks),
+  * keep everything jittable (fixed shapes; padding is the caller's
+    responsibility via the bucketing helpers in core/receipt.py).
+
+Backends:
+    "pallas"      pl.pallas_call, compiled (TPU target)
+    "interpret"   pl.pallas_call(interpret=True) -- executes the kernel
+                  body via the interpreter, used for correctness on CPU
+    "xla"         pure-jnp oracle (kernels/ref.py), whole-matrix
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .butterfly import DEFAULT_BLOCKS, butterfly_support_pallas
+
+__all__ = ["butterfly_support", "butterfly_update", "default_backend"]
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _update_ref(a, b, s, ids_a, ids_b):
+    w = a @ b.T
+    b2 = w * (w - 1.0) * 0.5
+    not_self = (ids_a[:, None] != ids_b[None, :]).astype(a.dtype)
+    return (b2 * not_self) @ s.astype(a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def butterfly_update(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    s: jnp.ndarray,
+    ids_a: jnp.ndarray,
+    ids_b: jnp.ndarray,
+    *,
+    backend: Optional[str] = None,
+    blocks: tuple = DEFAULT_BLOCKS,
+) -> jnp.ndarray:
+    """out[i] = sum_{j: ids_b[j] != ids_a[i]} s[j] * C((A B^T)[i, j], 2).
+
+    The general (gathered peel set) form.  Shapes must already be padded
+    to the kernel blocks for the pallas/interpret backends.
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend == "xla":
+        return _update_ref(a, b, s, ids_a, ids_b)
+    return butterfly_support_pallas(
+        a, b, s, ids_a, ids_b, blocks=blocks, interpret=(backend == "interpret")
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def butterfly_support(
+    a: jnp.ndarray,
+    s: jnp.ndarray,
+    *,
+    backend: Optional[str] = None,
+    blocks: tuple = DEFAULT_BLOCKS,
+) -> jnp.ndarray:
+    """out[i] = sum_{j != i} s[j] * C((A A^T)[i, j], 2)  (counting form).
+
+    a: (n_u, n_v) 0/1 float array; s: (n_u,) mask.  For the pallas and
+    interpret backends, shapes must be padded to the kernel blocks.
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend == "xla":
+        return ref.butterfly_support_ref(a, s)
+    n_u = a.shape[0]
+    ids = jnp.arange(n_u, dtype=jnp.int32)
+    return butterfly_support_pallas(
+        a, a, s, ids, ids, blocks=blocks, interpret=(backend == "interpret")
+    )

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import: jax locks the device count on first
+# init.  The dry-run (and ONLY the dry-run) builds the production mesh
+# from 512 placeholder host devices.  REPRO_DRYRUN_DEVICES overrides for
+# the subprocess-driven tests.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(*abstract_args)
+        compiled = lowered.compile()
+        compiled.memory_analysis()        # proves it fits
+        compiled.cost_analysis()          # FLOPs/bytes for the roofline
+
+Results (memory, flops, collective schedule, roofline terms) are dumped
+to JSON for EXPERIMENTS.md.  Failures here (sharding mismatch, OOM at
+compile, unsupported collective) are bugs in the system.
+
+Usage:
+    python -m repro.launch.dryrun --arch minitron-8b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod both --out dryrun.json
+    python -m repro.launch.dryrun --arch receipt-tip --shape cd_sweep_1m
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs import ALL_ARCHS, get_bundle
+from ..configs.shapes import RECEIPT_SHAPES
+from .mesh import dp_axes, make_production_mesh
+from . import roofline as rl
+from .sharding import _check_div, mesh_context
+
+
+def _flat_sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def dryrun_cell(arch: str, shape: str, *, multi_pod: bool,
+                verbose: bool = True, mesh=None) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the roofline record.
+
+    ``mesh`` overrides the production mesh (subprocess tests use small
+    host-device meshes; the CLI always uses the production meshes).
+    """
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    if arch == "receipt-tip":
+        rec = _dryrun_receipt(mesh, shape, chips)
+        rec["lower_compile_s"] = time.time() - t0
+        return rec
+
+    bundle = get_bundle(arch)
+    kind, step = bundle.step_for(shape)
+    specs = bundle.input_specs(shape)
+    in_shard_batch = bundle.input_shardings(shape, mesh)
+    pspec = bundle.param_shardings(mesh)
+
+    with mesh, mesh_context(mesh):
+        if kind.startswith("train"):
+            state_abs = bundle.state_abstract()
+            state_shard = bundle.state_shardings(mesh)
+            # metrics replicated
+            out_abs = jax.eval_shape(step, state_abs, specs)
+            metrics_shard = jax.tree.map(
+                lambda _: NamedSharding(mesh, PartitionSpec()), out_abs[1]
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_shard, in_shard_batch),
+                out_shardings=(state_shard, metrics_shard),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_abs, specs)
+        else:
+            params_abs = bundle.abstract_params()
+            out_abs = jax.eval_shape(step, params_abs, specs)
+            dp = dp_axes(mesh)
+
+            def out_shard(leaf):
+                if leaf.ndim == 0:
+                    return NamedSharding(mesh, PartitionSpec())
+                ent = [dp] + [None] * (leaf.ndim - 1)
+                return NamedSharding(mesh, _check_div(leaf.shape, ent, mesh))
+
+            if kind == "serve_decode":
+                # (logits, cache): cache keeps its input sharding (donated)
+                logits_abs, cache_abs = out_abs
+                out_shardings = (
+                    out_shard(logits_abs),
+                    jax.tree.map(
+                        lambda l, s: s,
+                        cache_abs, in_shard_batch["cache"],
+                    ),
+                )
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pspec, in_shard_batch),
+                    out_shardings=out_shardings,
+                    donate_argnums=(1,),          # cache updated in place
+                )
+            else:
+                out_shardings = jax.tree.map(out_shard, out_abs)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pspec, in_shard_batch),
+                    out_shardings=out_shardings,
+                )
+            lowered = jitted.lower(params_abs, specs)
+
+        compiled = lowered.compile()
+
+    # ---- analysis ----
+    cfg = bundle.cfg
+    model_flops = None
+    if bundle.family == "lm":
+        ab = bundle.abstract_params()
+        n_active = rl.lm_active_params(ab, cfg)
+        s = bundle.shapes[shape]
+        tokens = s.global_batch * (s.seq_len if s.kind == "train" else 1)
+        if s.kind == "prefill":
+            tokens = s.global_batch * s.seq_len
+        model_flops = rl.lm_model_flops(
+            rl.count_params(ab), n_active, tokens,
+            "train" if s.kind == "train" else "serve",
+        )
+
+    roof = rl.analyze(compiled, chips=chips, model_flops=model_flops)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+    except Exception:
+        pass
+
+    rec = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "ok": True,
+        "memory_analysis": mem,
+        "roofline": roof.to_dict(),
+        "lower_compile_s": time.time() - t0,
+    }
+    if verbose:
+        ga = mem or {}
+        per_dev = (ga.get("argument_size_in_bytes", 0)
+                   + ga.get("temp_size_in_bytes", 0)) / 1e9
+        print(
+            f"[dryrun] {arch:24s} {shape:14s} mesh={rec['mesh']:8s} "
+            f"args+temp/dev={per_dev:7.2f}GB "
+            f"t_comp={roof.t_compute*1e3:9.3f}ms t_mem={roof.t_memory*1e3:9.3f}ms "
+            f"t_coll={roof.t_collective*1e3:9.3f}ms bound={roof.bottleneck} "
+            f"({rec['lower_compile_s']:.0f}s)",
+            flush=True,
+        )
+    return rec
+
+
+# --------------------------------------------------------------------- #
+# RECEIPT distributed cells
+# --------------------------------------------------------------------- #
+def _dryrun_receipt(mesh, shape: str, chips: int) -> Dict[str, Any]:
+    """Lower the distributed RECEIPT steps (core/distributed.py)."""
+    from ..core import distributed as dist
+
+    s = RECEIPT_SHAPES[shape]
+    with mesh:
+        if s.kind == "cd_sweep":
+            lowered = dist.lower_cd_sweep(
+                mesh, n_u=s.n_u, n_v=s.n_v, peel_rows=s.peel_rows
+            )
+        else:
+            lowered = dist.lower_fd_stack(
+                mesh, n_subsets=s.n_subsets, rows=s.subset_rows,
+                cols=s.subset_cols,
+            )
+        compiled = lowered.compile()
+    roof = rl.analyze(compiled, chips=chips)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes")
+            if hasattr(ma, k)
+        }
+    except Exception:
+        pass
+    print(
+        f"[dryrun] receipt-tip {shape:14s} mesh={'x'.join(str(v) for v in mesh.shape.values()):8s} "
+        f"t_comp={roof.t_compute*1e3:9.3f}ms t_mem={roof.t_memory*1e3:9.3f}ms "
+        f"t_coll={roof.t_collective*1e3:9.3f}ms bound={roof.bottleneck}",
+        flush=True,
+    )
+    return {
+        "arch": "receipt-tip", "shape": shape,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "chips": chips, "ok": True, "kind": s.kind,
+        "memory_analysis": mem, "roofline": roof.to_dict(),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default=None, help="JSON output path (append)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ALL_ARCHS:
+            for sh in get_bundle(a, reduced=True).shapes:
+                cells.append((a, sh))
+        for sh in RECEIPT_SHAPES:
+            cells.append(("receipt-tip", sh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod
+    ]
+
+    existing = {}
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for r in json.load(f):
+                existing[(r["arch"], r["shape"], r["mesh"])] = r
+
+    results = list(existing.values())
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            if args.skip_existing and (arch, shape, mesh_name) in existing:
+                continue
+            try:
+                rec = dryrun_cell(arch, shape, multi_pod=mp)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {
+                    "arch": arch, "shape": shape, "mesh": mesh_name,
+                    "ok": False, "error": f"{type(e).__name__}: {e}",
+                }
+                failures += 1
+            results.append(rec)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+    print(f"[dryrun] done: {len(results)} records, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,256 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md).
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16)
+    memory     = HLO_bytes_per_device / 819 GB/s
+    collective = wire_bytes_per_device / 50 GB/s/link (ICI)
+                 (pod-axis collectives costed at DCN bw separately)
+
+FLOPs / bytes come from ``compiled.cost_analysis()`` of the partitioned
+per-device module.  Collective wire bytes are parsed from the HLO text
+with ring-algorithm cost formulas:
+
+    all-reduce        2 * B_out * (g-1)/g
+    all-gather            B_out * (g-1)/g
+    reduce-scatter        B_out * (g-1)          (input = g * output)
+    all-to-all            B_out * (g-1)/g
+    collective-permute    B_out
+
+where g is the replica-group size parsed per instruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (intra-pod)
+DCN_BW = 6.25e9              # bytes/s / chip (inter-pod, ~50 Gbit)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9_]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    if not dims:
+        return b
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    out_bytes: int
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        if self.op == "all-reduce":
+            return 2.0 * self.out_bytes * (g - 1) / g
+        if self.op == "all-gather":
+            return self.out_bytes * (g - 1) / g
+        if self.op == "reduce-scatter":
+            return float(self.out_bytes) * (g - 1)
+        if self.op == "all-to-all":
+            return self.out_bytes * (g - 1) / g
+        return float(self.out_bytes)      # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> List[Collective]:
+    out: List[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        shapes: List[Tuple[str, str]] = []
+        op = None
+        if m:
+            op = m.group(3)
+            shapes.append((m.group(1), m.group(2)))
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                op = mt.group(2)
+                for sm in re.finditer(r"([a-z0-9_]+)\[([0-9,]*)\]", mt.group(1)):
+                    shapes.append((sm.group(1), sm.group(2)))
+        if not op or not shapes:
+            continue
+        size = sum(_shape_bytes(d, s) for d, s in shapes)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        out.append(Collective(op=op, out_bytes=size, group_size=g))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device
+    hbm_bytes: float              # per device
+    wire_bytes: float             # per device (ICI)
+    n_collectives: int
+    coll_by_op: Dict[str, float]
+    peak_memory_bytes: Optional[float] = None
+    model_flops: Optional[float] = None    # 6*N*D (global)
+    chips: int = 256
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / (HLO flops summed over chips)."""
+        if not self.model_flops:
+            return None
+        return self.model_flops / max(self.flops * self.chips, 1.0)
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Fraction of the compute roofline achieved at the bound:
+        t_compute / t_bound (1.0 = perfectly compute-bound)."""
+        if self.t_bound == 0:
+            return None
+        return self.t_compute / self.t_bound
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "wire_bytes_per_dev": self.wire_bytes,
+            "n_collectives": self.n_collectives,
+            "coll_by_op": self.coll_by_op,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, *, chips: int, model_flops: Optional[float] = None) -> Roofline:
+    """Roofline terms from the compiled per-device module.
+
+    Uses the trip-count-aware HLO cost model (utils/hlo_cost.py):
+    XLA's built-in cost_analysis counts while-loop bodies ONCE, so scan-
+    over-layers modules under-report flops/bytes/collectives by the layer
+    count (verified; EXPERIMENTS.md §Dry-run notes).
+    """
+    from ..utils.hlo_cost import analyze_text
+
+    cost = analyze_text(compiled.as_text())
+    flops = float(cost.flops)
+    hbm = float(cost.hbm_bytes)
+    wire = float(cost.wire_bytes)
+    by_op = dict(cost.coll_by_op)
+    n_coll = int(cost.n_collectives)
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0)
+            )
+    except Exception:
+        pass
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+        n_collectives=n_coll, coll_by_op=by_op,
+        peak_memory_bytes=peak, model_flops=model_flops, chips=chips,
+    )
+
+
+# --------------------------------------------------------------------- #
+# MODEL_FLOPS estimators
+# --------------------------------------------------------------------- #
+def lm_model_flops(n_params_total: int, n_params_active: int, tokens: int,
+                   kind: str) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for inference-like steps."""
+    n = n_params_active
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def count_params(abstract_tree) -> int:
+    import jax
+
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(abstract_tree)))
+
+
+def lm_active_params(abstract_tree, cfg) -> int:
+    """Total params minus non-selected routed experts (MoE active set)."""
+    import jax
+
+    total = count_params(abstract_tree)
+    if not getattr(cfg, "moe", False):
+        return total
+    routed = 0
+    def visit(path, leaf):
+        nonlocal routed
+        ps = jax.tree_util.keystr(path)
+        if "moe" in ps and any(k in ps for k in ("'gate'", "'up'", "'down'")) \
+                and "shared" not in ps:
+            routed += int(np.prod(leaf.shape))
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, abstract_tree)
+    active_routed = routed * cfg.top_k / max(cfg.n_routed, 1)
+    return int(total - routed + active_routed)

@@ -1,0 +1,238 @@
+"""Rule-based PartitionSpec assignment.
+
+Models are mesh-agnostic; this module maps parameter/input pytrees to
+NamedShardings via path-regex rules, per family:
+
+  LM    : TP over ``model`` on head/ffn dims, EP over ``model`` on the
+          expert dim, FSDP over ``(pod, data)`` on d_model dims, vocab
+          over ``model``; batch over ``(pod, data)``.
+  GNN   : node & edge dims over ``(pod, data)``; params replicated
+          (d_hidden 128-512 is too small to TP profitably).
+  recsys: embedding-table rows over ``model`` (vocab-sharded gather),
+          batch over ``(pod, data)``; tower MLPs replicated.
+  RECEIPT: U rows over ``(pod, data)``, V columns over ``model``
+          (DESIGN.md section 4).
+
+Every rule is divisibility-checked against the mesh: axes that do not
+divide the dim are dropped (never a wrong-shard compile error, always a
+coarser sharding).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .mesh import axis_size, dp_axes
+
+# --------------------------------------------------------------------- #
+# logical activation-sharding context
+# --------------------------------------------------------------------- #
+# Model code annotates activations with LOGICAL axis names via
+# ``shard_act(x, ("batch", "sp", None))``; the launcher activates a mesh
+# context mapping them to physical axes.  Without an active context (unit
+# smokes, single-device runs) shard_act is a no-op, keeping model code
+# mesh-agnostic.
+_ACT_CTX: dict = {"mesh": None, "map": None}
+
+LOGICAL_DEFAULT = {
+    "batch": ("pod", "data"),    # data-parallel axes
+    "tp": "model",               # tensor-parallel (heads / ffn / vocab)
+    "sp": "model",               # sequence-parallel (Megatron-SP)
+    "expert": "model",           # expert-parallel
+    "graph": ("pod", "data", "model"),  # FD subset stacking
+    # GNN: nodes and edges live on DIFFERENT axes so edge-endpoint
+    # gathers lower to an all-gather over `model` (nodes) and the
+    # node scatter-add to a reduce-scatter — never a de-shard
+    "nodes": "model",
+    "edges": ("pod", "data"),
+}
+
+
+def activate_mesh(mesh: Optional[Mesh], logical_map: Optional[dict] = None):
+    """Set (or clear, with None) the activation-sharding context."""
+    _ACT_CTX["mesh"] = mesh
+    _ACT_CTX["map"] = dict(LOGICAL_DEFAULT, **(logical_map or {}))
+
+
+class mesh_context:
+    """``with mesh_context(mesh): ...`` scoped activation constraints."""
+
+    def __init__(self, mesh, logical_map=None):
+        self.mesh, self.map = mesh, logical_map
+
+    def __enter__(self):
+        self.prev = (_ACT_CTX["mesh"], _ACT_CTX["map"])
+        activate_mesh(self.mesh, self.map)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACT_CTX["mesh"], _ACT_CTX["map"] = self.prev
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACT_CTX["mesh"]
+
+
+def shard_act(x, logical_entries):
+    """with_sharding_constraint by logical axis names (no-op w/o context)."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None:
+        return x
+    amap = _ACT_CTX["map"]
+    phys = []
+    for e in logical_entries:
+        if e is None:
+            phys.append(None)
+        else:
+            phys.append(amap.get(e, e))
+    spec = _check_div(x.shape, tuple(phys), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def norm_path(path) -> str:
+    """keystr -> slash path: ``['layers']['attn']['wq']`` -> ``layers/attn/wq``."""
+    pstr = jax.tree_util.keystr(path)
+    return re.sub(r"\[('?)([^'\]]*)\1\]", r"/\2", pstr).lstrip("/")
+
+
+def _check_div(shape, entries, mesh) -> PartitionSpec:
+    """Drop axes that don't evenly divide their dim; filter absent axes."""
+    out = []
+    for i, e in enumerate(entries):
+        if e is None or i >= len(shape):
+            out.append(None)
+            continue
+        names = e if isinstance(e, (tuple, list)) else (e,)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        keep = []
+        size = 1
+        for n in names:
+            s = axis_size(mesh, n)
+            if shape[i] % (size * s) == 0:
+                keep.append(n)
+                size *= s
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return PartitionSpec(*out)
+
+
+def spec_by_rules(
+    tree: Any,
+    rules: Sequence[Tuple[str, Sequence]],
+    mesh: Mesh,
+    default: Sequence = (),
+) -> Any:
+    """Map each leaf to a NamedSharding via the first matching path rule.
+
+    rules: (regex, entries) — entries is a PartitionSpec-like tuple that is
+    divisibility-filtered per leaf shape.  Leaves with no matching rule get
+    ``default`` (replicated if empty).
+    """
+    def assign(path, leaf):
+        pstr = norm_path(path)
+        shape = getattr(leaf, "shape", ())
+        for pat, entries in rules:
+            if re.search(pat, pstr):
+                return NamedSharding(mesh, _check_div(shape, entries, mesh))
+        return NamedSharding(mesh, _check_div(shape, default, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+# --------------------------------------------------------------------- #
+# LM rules
+# --------------------------------------------------------------------- #
+def lm_param_rules(scan_stacked: bool = True) -> List[Tuple[str, Sequence]]:
+    """Rules for transformer params.  Stacked layer params have a leading
+    L axis (never sharded).  FSDP axis = (pod, data); TP/EP axis = model."""
+    L = None  # leading layer axis placeholder
+    fsdp = ("pod", "data")
+    rules = [
+        # MoE shared experts (must precede the generic moe rules)
+        (r"moe/shared/(gate|up)$", (L, fsdp, "model")),
+        (r"moe/shared/down$", (L, "model", fsdp)),
+        # MoE experts: (L, E, d, f) / (L, E, f, d) — EP on E, FSDP on last
+        (r"moe/(gate|up)$", (L, "model", fsdp, None)),
+        (r"moe/down$", (L, "model", None, fsdp)),
+        (r"moe/router$", (L, None, None)),
+        (r"moe/router_bias$", (L, None)),
+        # MTP projection (2d, d)
+        (r"mtp/proj$", (fsdp, "model")),
+        # attention (GQA): wq/wk/wv (L, d, H*dh) TP on heads; wo transposed
+        (r"attn/w[qkv]$", (L, fsdp, "model")),
+        (r"attn/wo$", (L, "model", fsdp)),
+        # MLA
+        (r"attn/wq_a$", (L, fsdp, None)),
+        (r"attn/wq_b$", (L, None, "model")),
+        (r"attn/wkv_a$", (L, fsdp, None)),
+        (r"attn/wkv_b$", (L, None, "model")),
+        # dense mlp (L, d, f) / (L, f, d)
+        (r"mlp/(gate|up)$", (L, fsdp, "model")),
+        (r"mlp/down$", (L, "model", fsdp)),
+        # embeddings: vocab over model, d over fsdp
+        (r"(embed|lm_head)$", ("model", fsdp)),
+        # norms / everything else: replicated
+    ]
+    return rules
+
+
+def _shift_for_rank(entries, rank):
+    """Right-align entry tuple to leaf rank (handles stacked vs unstacked)."""
+    entries = tuple(entries)
+    if len(entries) > rank:
+        return entries[len(entries) - rank:]
+    if len(entries) < rank:
+        return (None,) * (rank - len(entries)) + entries
+    return entries
+
+
+def lm_param_specs(abstract_params, mesh: Mesh):
+    rules = lm_param_rules()
+
+    def assign(path, leaf):
+        pstr = norm_path(path)
+        for pat, entries in rules:
+            if re.search(pat, pstr):
+                ent = _shift_for_rank(entries, len(leaf.shape))
+                return NamedSharding(mesh, _check_div(leaf.shape, ent, mesh))
+        return NamedSharding(mesh, PartitionSpec())
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def opt_state_specs(param_specs):
+    """m/v shadow the param shardings; step is replicated."""
+    def mesh_of(tree):
+        return jax.tree.leaves(tree)[0].mesh
+
+    m = jax.tree.map(lambda s: s, param_specs)
+    return {
+        "m": m,
+        "v": jax.tree.map(lambda s: s, param_specs),
+        "step": NamedSharding(mesh_of(param_specs), PartitionSpec()),
+    }
+
+
+def train_state_specs(param_specs):
+    return {"params": param_specs, "opt": opt_state_specs(param_specs)}
+
+
+# --------------------------------------------------------------------- #
+# activation / input helpers
+# --------------------------------------------------------------------- #
+def simple_spec(mesh: Mesh, entries, shape=None) -> NamedSharding:
+    if shape is not None:
+        return NamedSharding(mesh, _check_div(shape, entries, mesh))
+    # no divisibility info: filter absent axes only
+    from .mesh import filter_spec
+
+    return NamedSharding(mesh, filter_spec(mesh, *entries))

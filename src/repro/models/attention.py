@@ -1,0 +1,349 @@
+"""Attention: GQA and MLA (DeepSeek latent attention), train + decode.
+
+* ``flash_attention`` — blockwise causal attention with online softmax
+  (lax.scan over KV blocks inside a scan over Q blocks).  The S x S score
+  matrix never materializes, which is what makes the 32k prefill shapes
+  feasible; XLA maps the inner block matmuls onto the MXU.
+* ``gqa_*`` — grouped-query attention (Command-R / Minitron / DeepSeek-67B).
+* ``mla_*`` — multi-head latent attention (DeepSeek-V2/V3).  Training and
+  prefill use the naive (decompressed) form; decode uses the
+  weight-absorbed form so attention runs directly against the compressed
+  (c_kv, k_rope) cache — the cache is ~(kv_lora + d_rope) per token
+  instead of 2 * H * d_h, the paper's ~8x KV reduction, which is also what
+  makes the long_500k cell cheap.
+
+Shapes: activations (B, S, D); caches are dicts of arrays with a
+``cache_len`` scalar.  Everything is mesh-agnostic; sharding comes from
+the launcher's PartitionSpec rules + internal with_sharding_constraint
+hooks (set via ``shard_hook``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import shard_act
+from .layers import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# blockwise (flash) attention
+# --------------------------------------------------------------------- #
+def flash_attention(
+    q: jnp.ndarray,          # (B, H, Sq, Dh)
+    k: jnp.ndarray,          # (B, Hkv, Sk, Dh)
+    v: jnp.ndarray,          # (B, Hkv, Sk, Dv)
+    *,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Online-softmax blockwise attention (FlashAttention recurrence).
+
+    Supports Hkv < H (GQA) by head-group broadcasting.  q_offset shifts
+    query positions for causal masking (prefill continuation).
+    """
+    b, h, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = h // hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    nq, nk = sq // q_block, sk // kv_block
+    assert sq % q_block == 0 and sk % kv_block == 0
+
+    # fold GQA: (B, Hkv, rep, ...) view of q
+    qg = q.reshape(b, hkv, rep, sq, dh)
+
+    def q_step(_, qi):
+        qb, q_pos = qi  # (B, Hkv, rep, qblk, Dh), (qblk,)
+
+        # rematted: backward re-computes the score/prob tiles per step
+        # instead of saving them — without this, autodiff through the
+        # scans stores every (q_block x kv_block) tile, i.e. the full
+        # S x S attention matrix the flash recurrence exists to avoid
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb, vb, k_pos = ki
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qb, kb) * scale
+            s = s.astype(jnp.float32)
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v.dtype), vb)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, rep, q_block), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, rep, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, rep, q_block, dv), v.dtype)
+        ks = k.reshape(b, hkv, nk, kv_block, dh).transpose(2, 0, 1, 3, 4)
+        vs = v.reshape(b, hkv, nk, kv_block, dv).transpose(2, 0, 1, 3, 4)
+        k_pos = jnp.arange(sk).reshape(nk, kv_block)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, k_pos))
+        # keep the epilogue in the KV dtype: dividing bf16 acc by the f32
+        # denominator promotes the attention output (and every downstream
+        # TP reduction) to f32 — measured 450 GB/step of f32 all-reduce on
+        # the v3 train cell (EXPERIMENTS.md §Perf)
+        inv_l = (1.0 / jnp.maximum(l, 1e-30)).astype(acc.dtype)
+        out = acc * inv_l[..., None]
+        return None, out
+
+    qs = qg.reshape(b, hkv, rep, nq, q_block, dh).transpose(3, 0, 1, 2, 4, 5)
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, q_block)
+    _, outs = jax.lax.scan(q_step, None, (qs, q_pos))
+    # (nq, B, Hkv, rep, qblk, Dv) -> (B, H, Sq, Dv)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, sq, dv)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,          # (B, H, 1, Dh)
+    k_cache: jnp.ndarray,    # (B, Hkv, S, Dh)
+    v_cache: jnp.ndarray,    # (B, Hkv, S, Dv)
+    cache_len: jnp.ndarray,  # scalar int
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly padded) KV cache.
+
+    Linear in cache length — the reason long_500k decode is feasible for
+    full-attention archs (DESIGN.md section 5).
+    """
+    b, h, _, dh = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    qr = q.reshape(b, hkv, rep, dh)
+    scores = jnp.einsum("bgrd,bgsd->bgrs", qr, k_cache) / math.sqrt(dh)
+    mask = jnp.arange(s)[None, None, None, :] < cache_len
+    scores = jnp.where(mask, scores.astype(jnp.float32), _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bgrs,bgsd->bgrd", p, v_cache)
+    return out.reshape(b, h, 1, -1)
+
+
+# --------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------- #
+def init_gqa(key, d: int, n_heads: int, n_kv: int, d_head: int, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, n_heads * d_head, dtype),
+        "wk": dense_init(k2, d, n_kv * d_head, dtype),
+        "wv": dense_init(k3, d, n_kv * d_head, dtype),
+        "wo": dense_init(k4, n_heads * d_head, d, dtype),
+    }
+
+
+def gqa_forward(
+    p: Params,
+    x: jnp.ndarray,                      # (B, S, D)
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    positions: Optional[jnp.ndarray] = None,
+    rope_theta: float = 10000.0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = (x @ p["wq"]).reshape(b, s, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(b, s, n_kv, d_head)
+    v = (x @ p["wv"]).reshape(b, s, n_kv, d_head)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions[:, None], rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None], rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    # Megatron layout: expand KV to full heads so the head axis TP-shards
+    # (n_kv is smaller than the model axis; the expanded copies are local
+    # to each shard's head group, so no memory is wasted post-sharding)
+    rep = n_heads // n_kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    q = shard_act(q, ("batch", "tp", None, None))
+    k = shard_act(k, ("batch", "tp", None, None))
+    v = shard_act(v, ("batch", "tp", None, None))
+    o = flash_attention(q, k, v, causal=True, q_block=q_block, kv_block=kv_block)
+    o = shard_act(o, ("batch", "tp", None, None))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * d_head)
+    return o @ p["wo"]
+
+
+def gqa_decode(
+    p: Params,
+    x: jnp.ndarray,                      # (B, 1, D)
+    cache: Dict[str, jnp.ndarray],       # {"k": (B,Hkv,S,Dh), "v": ..., "len": ()}
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float = 10000.0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b = x.shape[0]
+    pos = cache["len"]
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, d_head).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, 1, n_kv, d_head).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(b, 1, n_kv, d_head).transpose(0, 2, 1, 3)
+    posv = jnp.full((b, 1, 1), pos)
+    q = apply_rope(q, posv, rope_theta)
+    k = apply_rope(k, posv, rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=2)
+    o = decode_attention(q, k_cache, v_cache, pos + 1)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, n_heads * d_head)
+    new_cache = {"k": k_cache, "v": v_cache, "len": pos + 1}
+    return o @ p["wo"], new_cache
+
+
+# --------------------------------------------------------------------- #
+# MLA (DeepSeek-V2/V3)
+# --------------------------------------------------------------------- #
+def init_mla(
+    key,
+    d: int,
+    n_heads: int,
+    q_lora: int,
+    kv_lora: int,
+    d_nope: int,
+    d_rope: int,
+    d_v: int,
+    dtype=jnp.float32,
+):
+    ks = jax.random.split(key, 8)
+    p = {
+        "wkv_a": dense_init(ks[2], d, kv_lora + d_rope, dtype),
+        "kv_norm": init_rmsnorm(kv_lora, dtype),
+        "wkv_b": dense_init(ks[3], kv_lora, n_heads * (d_nope + d_v), dtype),
+        "wo": dense_init(ks[4], n_heads * d_v, d, dtype),
+    }
+    if q_lora > 0:
+        p["wq_a"] = dense_init(ks[0], d, q_lora, dtype)
+        p["q_norm"] = init_rmsnorm(q_lora, dtype)
+        p["wq_b"] = dense_init(ks[1], q_lora, n_heads * (d_nope + d_rope), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d, n_heads * (d_nope + d_rope), dtype)
+    return p
+
+
+def _mla_q(p, x, n_heads, d_nope, d_rope):
+    b, s, _ = x.shape
+    if "wq_a" in p:
+        cq = rmsnorm(p["q_norm"], x @ p["wq_a"])
+        q = cq @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, n_heads, d_nope + d_rope).transpose(0, 2, 1, 3)
+    return q[..., :d_nope], q[..., d_nope:]
+
+
+def mla_forward(
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    kv_lora: int,
+    d_nope: int,
+    d_rope: int,
+    d_v: int,
+    positions: Optional[jnp.ndarray] = None,
+    rope_theta: float = 10000.0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jnp.ndarray:
+    """Naive (decompressed) MLA for training / prefill."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _mla_q(p, x, n_heads, d_nope, d_rope)
+    q_rope = apply_rope(q_rope, positions[:, None], rope_theta)
+
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = kv[..., :kv_lora], kv[..., kv_lora:]
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(
+        k_rope[:, None], positions[:, None], rope_theta
+    )  # (B, 1, S, d_rope) shared across heads
+    kvu = (c_kv @ p["wkv_b"]).reshape(b, s, n_heads, d_nope + d_v)
+    k_nope = kvu[..., :d_nope].transpose(0, 2, 1, 3)
+    v = kvu[..., d_nope:].transpose(0, 2, 1, 3)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, n_heads, s, d_rope))], axis=-1
+    )
+    q = shard_act(q, ("batch", "tp", None, None))
+    k = shard_act(k, ("batch", "tp", None, None))
+    v = shard_act(v, ("batch", "tp", None, None))
+    o = flash_attention(q, k, v, causal=True, q_block=q_block, kv_block=kv_block)
+    o = shard_act(o, ("batch", "tp", None, None))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * d_v)
+    return o @ p["wo"]
+
+
+def mla_decode(
+    p: Params,
+    x: jnp.ndarray,                       # (B, 1, D)
+    cache: Dict[str, jnp.ndarray],        # {"c_kv": (B,S,kv_lora), "k_rope": (B,S,d_rope), "len": ()}
+    *,
+    n_heads: int,
+    kv_lora: int,
+    d_nope: int,
+    d_rope: int,
+    d_v: int,
+    rope_theta: float = 10000.0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Weight-absorbed MLA decode on the compressed cache.
+
+    scores = q_nope^T W_uk c_t  +  q_rope^T k_rope_t
+    out    = W_o W_uv (sum_t p_t c_t)
+
+    so per-step FLOPs and cache bytes scale with kv_lora, not H * d_h.
+    """
+    b = x.shape[0]
+    pos = cache["len"]
+    q_nope, q_rope = _mla_q(p, x, n_heads, d_nope, d_rope)   # (B,H,1,*)
+    posv = jnp.full((b, 1, 1), pos)
+    q_rope = apply_rope(q_rope, posv, rope_theta)
+
+    kv = x @ p["wkv_a"]                                       # (B,1,kv_lora+d_rope)
+    c_new = rmsnorm(p["kv_norm"], kv[..., :kv_lora])
+    kr_new = apply_rope(kv[:, None, :, kv_lora:], posv, rope_theta)[:, 0]
+
+    c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, axis=1)
+
+    # absorb W_uk into q: (B,H,1,d_nope) @ (H, d_nope, kv_lora)
+    wkv_b = p["wkv_b"].reshape(kv_lora, n_heads, d_nope + d_v)
+    w_uk = wkv_b[..., :d_nope].transpose(1, 2, 0)             # (H, d_nope, kv_lora)
+    w_uv = wkv_b[..., d_nope:].transpose(1, 0, 2)             # (H, kv_lora, d_v)
+    q_abs = jnp.einsum("bhqd,hdc->bhqc", q_nope, w_uk)        # (B,H,1,kv_lora)
+
+    s_max = c_cache.shape[1]
+    scores = jnp.einsum("bhqc,bsc->bhqs", q_abs, c_cache)
+    scores = scores + jnp.einsum("bhqr,bsr->bhqs", q_rope, r_cache)
+    scores = scores.astype(jnp.float32) / math.sqrt(d_nope + d_rope)
+    mask = jnp.arange(s_max)[None, None, None, :] < pos + 1
+    scores = jnp.where(mask, scores, _NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
+    ctx = jnp.einsum("bhqs,bsc->bhqc", prob, c_cache)         # compressed ctx
+    o = jnp.einsum("bhqc,hcv->bhqv", ctx, w_uv)               # (B,H,1,d_v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, n_heads * d_v)
+    new_cache = {"c_kv": c_cache, "k_rope": r_cache, "len": pos + 1}
+    return o @ p["wo"], new_cache

@@ -1,0 +1,432 @@
+"""GNN model zoo: MeshGraphNet, GraphSAGE, DimeNet, GraphCast.
+
+All message passing runs on the segment scatter-reduce substrate
+(``jax.ops.segment_sum`` over edge index arrays) — the same primitive
+RECEIPT's sparse counting path uses (DESIGN.md section 2.1).  JAX has no
+CSR SpMM; the edge-index -> gather -> segment_sum formulation IS the
+system's sparse engine.
+
+Graph batches are fixed-shape: (node_feats (N, F), senders (E,),
+receivers (E,), edge_feats (E, Fe)) with -1/0-padded edges masked by
+``edge_mask``.  Distribution: edges are sharded over the data axis and
+partial node aggregates are psum'd (edge-parallel message passing) by the
+launcher's sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import shard_act
+from .layers import (
+    Params,
+    dense_init,
+    init_layernorm,
+    init_mlp,
+    layernorm,
+    mlp,
+)
+
+
+def seg_sum(x, idx, n):
+    return jax.ops.segment_sum(x, idx, num_segments=n)
+
+
+def seg_mean(x, idx, n):
+    s = seg_sum(x, idx, n)
+    c = seg_sum(jnp.ones((x.shape[0], 1), x.dtype), idx, n)
+    return s / jnp.maximum(c, 1.0)
+
+
+# ===================================================================== #
+# MeshGraphNet  [arXiv:2010.03409]
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 16
+    d_edge_in: int = 8
+    d_out: int = 3
+    aggregator: str = "sum"
+    param_dtype: Any = jnp.float32
+    carry_dtype: Any = jnp.float32   # bf16 at production scale
+
+
+def _mgn_mlp_dims(d_in, d_h, n_hidden, d_out):
+    return [d_in] + [d_h] * n_hidden + [d_out]
+
+
+def init_meshgraphnet(key, cfg: MeshGraphNetConfig) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_layers * 2)
+    d = cfg.d_hidden
+    p: Params = {
+        "node_enc": init_mlp(ks[0], _mgn_mlp_dims(cfg.d_node_in, d, cfg.mlp_layers, d), cfg.param_dtype),
+        "edge_enc": init_mlp(ks[1], _mgn_mlp_dims(cfg.d_edge_in, d, cfg.mlp_layers, d), cfg.param_dtype),
+        "decoder": init_mlp(ks[2], _mgn_mlp_dims(d, d, cfg.mlp_layers, cfg.d_out), cfg.param_dtype),
+        "layers": [],
+    }
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "edge_mlp": init_mlp(ks[3 + 2 * i], _mgn_mlp_dims(3 * d, d, cfg.mlp_layers, d), cfg.param_dtype),
+            "edge_ln": init_layernorm(d, cfg.param_dtype),
+            "node_mlp": init_mlp(ks[4 + 2 * i], _mgn_mlp_dims(2 * d, d, cfg.mlp_layers, d), cfg.param_dtype),
+            "node_ln": init_layernorm(d, cfg.param_dtype),
+        })
+    p["layers"] = layers
+    return p
+
+
+def meshgraphnet_forward(p: Params, batch: Dict[str, jnp.ndarray],
+                         cfg: MeshGraphNetConfig) -> jnp.ndarray:
+    """batch: node_feats (N,Fn), edge_feats (E,Fe), senders/receivers (E,),
+    edge_mask (E,).  Returns per-node output (N, d_out)."""
+    n = batch["node_feats"].shape[0]
+    snd, rcv = batch["senders"], batch["receivers"]
+    emask = batch["edge_mask"][:, None].astype(cfg.param_dtype)
+    h = mlp(p["node_enc"], batch["node_feats"]).astype(cfg.carry_dtype)
+    e = (mlp(p["edge_enc"], batch["edge_feats"]) * emask).astype(cfg.carry_dtype)
+
+    def layer(lp, h, e):
+        # edge update from (e, h_src, h_dst), residual + LN
+        e_in = jnp.concatenate([e, h[snd], h[rcv]], axis=-1)
+        e = layernorm(lp["edge_ln"], e + mlp(lp["edge_mlp"], e_in) * emask)
+        # node update from aggregated incoming messages, residual + LN
+        agg = seg_sum(e * emask, rcv, n)
+        h_in = jnp.concatenate([h, agg], axis=-1)
+        h = layernorm(lp["node_ln"], h + mlp(lp["node_mlp"], h_in))
+        # node tensors shard over `model`, edge tensors over dp between
+        # layers (remat saves); carries stay in carry_dtype
+        return (
+            shard_act(h.astype(cfg.carry_dtype), ("nodes", None)),
+            shard_act(e.astype(cfg.carry_dtype), ("edges", None)),
+        )
+
+    layer = jax.checkpoint(layer)
+    for lp in p["layers"]:
+        h, e = layer(lp, h, e)
+    return mlp(p["decoder"], h)
+
+
+def meshgraphnet_loss(p, batch, cfg) -> jnp.ndarray:
+    pred = meshgraphnet_forward(p, batch, cfg)
+    mask = batch.get("node_mask")
+    err = (pred - batch["targets"]) ** 2
+    if mask is not None:
+        return jnp.sum(err * mask[:, None]) / jnp.maximum(jnp.sum(mask) * err.shape[-1], 1.0)
+    return jnp.mean(err)
+
+
+# ===================================================================== #
+# GraphSAGE  [arXiv:1706.02216]
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class GraphSAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602
+    n_classes: int = 41
+    aggregator: str = "mean"
+    sample_sizes: Tuple[int, ...] = (25, 10)
+    param_dtype: Any = jnp.float32
+
+
+def init_graphsage(key, cfg: GraphSAGEConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers * 2 + 1)
+    layers = []
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        d_out = cfg.d_hidden
+        layers.append({
+            "w_self": dense_init(ks[2 * i], d_prev, d_out, cfg.param_dtype),
+            "w_neigh": dense_init(ks[2 * i + 1], d_prev, d_out, cfg.param_dtype),
+        })
+        d_prev = d_out
+    return {
+        "layers": layers,
+        "head": dense_init(ks[-1], d_prev, cfg.n_classes, cfg.param_dtype),
+    }
+
+
+def graphsage_forward_full(p: Params, batch, cfg: GraphSAGEConfig):
+    """Full-graph mode: mean-aggregate over the edge list."""
+    h = batch["node_feats"]
+    n = h.shape[0]
+    snd, rcv = batch["senders"], batch["receivers"]
+    emask = batch["edge_mask"][:, None].astype(h.dtype)
+    for lp in p["layers"]:
+        neigh = seg_mean(h[snd] * emask, rcv, n)
+        h = jax.nn.relu(h @ lp["w_self"] + neigh @ lp["w_neigh"])
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+        h = shard_act(h, ("nodes", None))
+    return h @ p["head"]
+
+
+def graphsage_forward_sampled(p: Params, batch, cfg: GraphSAGEConfig):
+    """Minibatch mode on a sampled block structure (models/sampler.py).
+
+    batch: feats_l{i} (Ni, F) node features per hop level (level 0 =
+    seeds), idx_l{i} (N_{i-1}, fanout_{i-1}) int32 indices into level i
+    (-1 = missing neighbour).  Aggregation runs top-down.
+    """
+    n_layers = cfg.n_layers
+    hs = [batch[f"feats_l{i}"] for i in range(n_layers + 1)]
+    for li, lp in enumerate(p["layers"]):
+        # standard layerwise block computation: after layer li only the
+        # first (n_layers - li) levels are still needed
+        new_hs = []
+        for lvl in range(n_layers - li):
+            idx = batch[f"idx_l{lvl}"]           # (N_lvl, fanout) -> level lvl+1
+            child = hs[lvl + 1]
+            valid = (idx >= 0)[..., None].astype(child.dtype)
+            gathered = child[jnp.maximum(idx, 0)] * valid
+            neigh = gathered.sum(1) / jnp.maximum(valid.sum(1), 1.0)
+            h = jax.nn.relu(hs[lvl] @ lp["w_self"] + neigh @ lp["w_neigh"])
+            h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+            new_hs.append(h)
+        hs = new_hs
+    return hs[0] @ p["head"]
+
+
+def graphsage_loss(p, batch, cfg, mode="full"):
+    if mode == "full":
+        logits = graphsage_forward_full(p, batch, cfg)
+    else:
+        logits = graphsage_forward_sampled(p, batch, cfg)
+    labels = batch["labels"]
+    mask = batch.get("node_mask")
+    from .layers import softmax_cross_entropy
+
+    return softmax_cross_entropy(logits, labels, mask)
+
+
+# ===================================================================== #
+# DimeNet  [arXiv:2003.03123]
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    d_node_in: int = 16
+    cutoff: float = 5.0
+    param_dtype: Any = jnp.float32
+    carry_dtype: Any = jnp.float32
+
+
+def init_dimenet(key, cfg: DimeNetConfig) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_blocks * 5)
+    d = cfg.d_hidden
+    p: Params = {
+        "node_embed": dense_init(ks[0], cfg.d_node_in, d, cfg.param_dtype),
+        "rbf_embed": dense_init(ks[1], cfg.n_radial, d, cfg.param_dtype),
+        "edge_embed": init_mlp(ks[2], [3 * d, d], cfg.param_dtype),
+        "out_head": init_mlp(ks[3], [d, d, 1], cfg.param_dtype),
+        "blocks": [],
+    }
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k = ks[4 + 5 * i : 9 + 5 * i]
+        blocks.append({
+            "w_sbf": dense_init(k[0], cfg.n_spherical * cfg.n_radial, cfg.n_bilinear, cfg.param_dtype),
+            "w_kj": dense_init(k[1], d, d, cfg.param_dtype),
+            "bilinear": (
+                jax.random.normal(k[2], (d, cfg.n_bilinear, d), jnp.float32) / d**0.5
+            ).astype(cfg.param_dtype),
+            "mlp_msg": init_mlp(k[3], [d, d], cfg.param_dtype),
+            "out_mlp": init_mlp(k[4], [d, d], cfg.param_dtype),
+        })
+    p["blocks"] = blocks
+    return p
+
+
+def _rbf(d, n_radial, cutoff):
+    """Radial basis: sin(n pi d / c) / d envelope (DimeNet eq. 6)."""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    d = jnp.maximum(d[:, None], 1e-6)
+    return jnp.sin(n * jnp.pi * d / cutoff) / d
+
+
+def _sbf(angle, d, n_spherical, n_radial, cutoff):
+    """Simplified spherical basis: cos(l * angle) x radial sin modes."""
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    ang = jnp.cos(l * angle[:, None])                       # (T, L)
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    dd = jnp.maximum(d[:, None], 1e-6)
+    rad = jnp.sin(n * jnp.pi * dd / cutoff) / dd            # (T, R)
+    return (ang[:, :, None] * rad[:, None, :]).reshape(angle.shape[0], -1)
+
+
+def dimenet_forward(p: Params, batch, cfg: DimeNetConfig,
+                    n_graphs: Optional[int] = None) -> jnp.ndarray:
+    """batch: node_feats (N,F), positions (N,3), senders/receivers (E,),
+    edge_mask (E,), trip_kj/trip_ji (T,) edge-index pairs, trip_mask (T,).
+    Returns per-graph scalars when (graph_id, n_graphs) are provided,
+    else the whole-graph scalar."""
+    n = batch["node_feats"].shape[0]
+    snd, rcv = batch["senders"], batch["receivers"]
+    pos = batch["positions"]
+    emask = batch["edge_mask"].astype(cfg.param_dtype)
+
+    vec = pos[rcv] - pos[snd]
+    dist = jnp.linalg.norm(vec, axis=-1) + 1e-9
+    rbf = _rbf(dist, cfg.n_radial, cfg.cutoff) @ p["rbf_embed"]
+
+    h = shard_act(batch["node_feats"] @ p["node_embed"], ("nodes", None))
+    m = mlp(p["edge_embed"], jnp.concatenate([h[snd], h[rcv], rbf], -1))
+    m = shard_act((m * emask[:, None]).astype(cfg.carry_dtype), ("edges", None))
+
+    kj, ji = batch["trip_kj"], batch["trip_ji"]
+    tmask = batch["trip_mask"].astype(cfg.param_dtype)
+    # angle between edge kj and ji (sharing node j)
+    v1 = vec[jnp.maximum(kj, 0)]
+    v2 = vec[jnp.maximum(ji, 0)]
+    cosang = jnp.sum(v1 * v2, -1) / (
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1) + 1e-9
+    )
+    angle = jnp.arccos(jnp.clip(cosang, -1 + 1e-6, 1 - 1e-6))
+    sbf = _sbf(angle, dist[jnp.maximum(kj, 0)], cfg.n_spherical, cfg.n_radial, cfg.cutoff)
+
+    out = jnp.zeros((n,), cfg.param_dtype)
+    n_edges = m.shape[0]
+
+    def block(bp, m, out):
+        # directional message passing over triplets (kj -> ji)
+        a = sbf @ bp["w_sbf"]                                # (T, n_bilinear)
+        mk = (m @ bp["w_kj"])[jnp.maximum(kj, 0)]            # (T, d)
+        mk = shard_act(mk, ("edges", None))
+        inter = jnp.einsum("tb,dbe,td->te", a, bp["bilinear"], mk)
+        inter = shard_act(inter * tmask[:, None], ("edges", None))
+        m = m + mlp(bp["mlp_msg"], seg_sum(inter, jnp.maximum(ji, 0), n_edges)).astype(cfg.carry_dtype)
+        m = shard_act(m * emask[:, None].astype(cfg.carry_dtype), ("edges", None))
+        # per-block output: edges -> receiver nodes -> scalar head
+        node_contrib = seg_sum(mlp(bp["out_mlp"], m) * emask[:, None], rcv, n)
+        out = out + mlp(p["out_head"], node_contrib)[:, 0]
+        return m, out
+
+    block = jax.checkpoint(block)
+    for bp in p["blocks"]:
+        m, out = block(bp, m, out)
+    if "graph_id" in batch and n_graphs is not None:
+        return seg_sum(out, batch["graph_id"], n_graphs)
+    return out.sum()[None]
+
+
+def dimenet_loss(p, batch, cfg):
+    # n_graphs is static: the per-graph target vector length
+    n_graphs = batch["targets"].shape[0] if "graph_id" in batch else None
+    pred = dimenet_forward(p, batch, cfg, n_graphs=n_graphs)
+    return jnp.mean((pred - batch["targets"]) ** 2)
+
+
+# ===================================================================== #
+# GraphCast  [arXiv:2212.12794]
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    mesh_refinement: int = 6
+    n_vars: int = 227
+    mlp_layers: int = 1
+    param_dtype: Any = jnp.float32
+    carry_dtype: Any = jnp.float32
+
+    @property
+    def n_mesh_nodes(self) -> int:
+        # icosahedral refinement: 10 * 4^r + 2
+        return 10 * 4**self.mesh_refinement + 2
+
+    @property
+    def n_mesh_edges(self) -> int:
+        # multimesh: edges of all refinement levels 0..r (30 * 4^l each)
+        return sum(30 * 4**l for l in range(self.mesh_refinement + 1))
+
+    @property
+    def n_mesh_nodes_padded(self) -> int:
+        # padded to 1024 so the mesh-node dim shards evenly over dp axes
+        return ((self.n_mesh_nodes + 1023) // 1024) * 1024
+
+    @property
+    def n_mesh_edges_padded(self) -> int:
+        return ((self.n_mesh_edges + 1023) // 1024) * 1024
+
+
+def _typed_mpnn_init(key, d, d_edge_in, mlp_layers, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "edge_enc": init_mlp(k1, [d_edge_in] + [d] * mlp_layers + [d], dtype),
+        "edge_mlp": init_mlp(k2, [3 * d] + [d] * mlp_layers + [d], dtype),
+        "node_mlp": init_mlp(k3, [2 * d] + [d] * mlp_layers + [d], dtype),
+    }
+
+
+def init_graphcast(key, cfg: GraphCastConfig) -> Params:
+    ks = jax.random.split(key, 6 + cfg.n_layers)
+    d = cfg.d_hidden
+    p: Params = {
+        "grid_enc": init_mlp(ks[0], [cfg.n_vars, d, d], cfg.param_dtype),
+        "mesh_embed": init_mlp(ks[1], [4, d, d], cfg.param_dtype),
+        "g2m": _typed_mpnn_init(ks[2], d, 4, cfg.mlp_layers, cfg.param_dtype),
+        "m2g": _typed_mpnn_init(ks[3], d, 4, cfg.mlp_layers, cfg.param_dtype),
+        "decoder": init_mlp(ks[4], [d, d, cfg.n_vars], cfg.param_dtype),
+        "processor": [
+            _typed_mpnn_init(ks[5 + i], d, 4, cfg.mlp_layers, cfg.param_dtype)
+            for i in range(cfg.n_layers)
+        ],
+    }
+    return p
+
+
+def _mpnn_step(lp, h_src, h_dst, e_feat, snd, rcv, n_dst, emask):
+    e = mlp(lp["edge_enc"], e_feat) * emask
+    msg_in = jnp.concatenate([e, h_src[snd], h_dst[rcv]], -1)
+    msg = mlp(lp["edge_mlp"], msg_in) * emask
+    agg = seg_sum(msg, rcv, n_dst)
+    return h_dst + mlp(lp["node_mlp"], jnp.concatenate([h_dst, agg], -1))
+
+
+def graphcast_forward(p: Params, batch, cfg: GraphCastConfig) -> jnp.ndarray:
+    """Encode (grid->mesh) / process (mesh multimesh) / decode (mesh->grid).
+
+    batch: grid_feats (Ng, n_vars); mesh_feats (Nm, 4);
+    g2m/m2g/mesh edge index + feature arrays (fixed shapes).
+    """
+    ng = batch["grid_feats"].shape[0]
+    nm = batch["mesh_feats"].shape[0]
+    hg = mlp(p["grid_enc"], batch["grid_feats"])
+    hm = mlp(p["mesh_embed"], batch["mesh_feats"])
+
+    m1 = batch["g2m_mask"][:, None].astype(hg.dtype)
+    hm = _mpnn_step(p["g2m"], hg, hm, batch["g2m_feats"],
+                    batch["g2m_senders"], batch["g2m_receivers"], nm, m1)
+    m2 = batch["mesh_mask"][:, None].astype(hg.dtype)
+
+    def proc_layer(lp, hm):
+        hm = _mpnn_step(lp, hm, hm, batch["mesh_efeats"],
+                        batch["mesh_senders"], batch["mesh_receivers"], nm, m2)
+        return shard_act(hm.astype(cfg.carry_dtype), ("nodes", None))
+
+    proc_layer = jax.checkpoint(proc_layer)
+    for lp in p["processor"]:
+        hm = proc_layer(lp, hm)
+    m3 = batch["m2g_mask"][:, None].astype(hg.dtype)
+    hg = _mpnn_step(p["m2g"], hm, hg, batch["m2g_feats"],
+                    batch["m2g_senders"], batch["m2g_receivers"], ng, m3)
+    return mlp(p["decoder"], hg)
+
+
+def graphcast_loss(p, batch, cfg):
+    pred = graphcast_forward(p, batch, cfg)
+    return jnp.mean((pred - batch["targets"]) ** 2)

@@ -1,0 +1,150 @@
+"""Shared neural building blocks (pure-functional, dict pytrees).
+
+Conventions
+-----------
+* ``init_*`` functions take an rng key + dims and return a params dict.
+* ``apply``-style functions are plain functions of (params, inputs).
+* compute dtype is the dtype of the activations passed in; norms and
+  softmax always run in float32 and cast back.
+* all matmul params are stored unsharded — sharding is applied by the
+  launcher via PartitionSpec rules (launch/sharding.py), keeping model
+  code mesh-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+# initializers
+# --------------------------------------------------------------------- #
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------- #
+def init_swiglu(key, d: int, f: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, f, dtype),
+        "up": dense_init(k2, d, f, dtype),
+        "down": dense_init(k3, f, d, dtype),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(x @ p["gate"])
+    return (g * (x @ p["up"])) @ p["down"]
+
+
+def init_mlp(key, dims, dtype=jnp.float32, bias: bool = True) -> Params:
+    """Plain MLP with ReLU between layers; dims = [in, h1, ..., out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        layer = {"w": dense_init(k, dims[i], dims[i + 1], dtype)}
+        if bias:
+            layer["b"] = jnp.zeros((dims[i + 1],), dtype)
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def mlp(p: Params, x: jnp.ndarray, act=jax.nn.relu, final_act: bool = False):
+    n = len(p["layers"])
+    for i, layer in enumerate(p["layers"]):
+        x = x @ layer["w"]
+        if "b" in layer:
+            x = x + layer["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# --------------------------------------------------------------------- #
+# rotary position embedding
+# --------------------------------------------------------------------- #
+def rope_freqs(dim: int, max_pos: int, theta: float = 10000.0) -> jnp.ndarray:
+    """(max_pos, dim/2) complex-free cos/sin table base frequencies."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    return jnp.outer(t, inv)  # (max_pos, dim/2)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., seq, dim) with dim even; positions: (..., seq) int."""
+    dim = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, dim/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------- #
+def softmax_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """Mean token cross entropy; logits (..., V), labels (...) int.
+
+    The label log-prob is extracted with an iota-compare reduction rather
+    than ``take_along_axis``: under a vocab-sharded logits layout the
+    compare/select fuses into the reduction and each shard contributes its
+    local term (a psum), whereas a gather would force an all-gather of the
+    full (B, S, V) logits (measured 25.8 s of collective time per step on
+    the train_4k cell before this change).
+    """
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        == labels[..., None]
+    )
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,79 @@
+"""Fixed-fanout neighbour sampler (GraphSAGE minibatch training).
+
+A real sampler, not a stub: given a padded-CSR graph on device, it draws
+``fanout`` neighbours per node per hop with jax.random (with replacement,
+as in the GraphSAGE reference implementation), producing the layered block
+structure consumed by ``graphsage_forward_sampled``:
+
+    level 0: seed nodes (batch_nodes,)
+    level i: sampled frontier of level i-1, (N_{i-1} * fanout_{i-1},)
+    idx_l{i}: (N_i, fanout_i) local indices into level i+1 (-1 = no edge)
+
+Padded CSR: ``nbr_table (N, max_deg)`` int32 with -1 padding + ``deg (N,)``.
+Building the table is host-side preprocessing (data/graphs.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_block(
+    key,
+    nbr_table: jnp.ndarray,      # (N, max_deg) int32, -1 padded
+    deg: jnp.ndarray,            # (N,) int32
+    nodes: jnp.ndarray,          # (B,) frontier node ids
+    fanout: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample ``fanout`` neighbours (with replacement) per frontier node.
+
+    Returns (neighbor_ids (B, fanout) global ids with -1 for isolated
+    nodes, flat_next (B*fanout,) the next frontier).
+    """
+    b = nodes.shape[0]
+    d = deg[nodes]                                        # (B,)
+    r = jax.random.randint(key, (b, fanout), 0, 1 << 30)
+    slot = r % jnp.maximum(d, 1)[:, None]
+    nb = nbr_table[nodes[:, None], slot]                  # (B, fanout)
+    nb = jnp.where(d[:, None] > 0, nb, -1)
+    return nb, jnp.maximum(nb, 0).reshape(-1)
+
+
+def sample_blocks(
+    key,
+    nbr_table: jnp.ndarray,
+    deg: jnp.ndarray,
+    feats: jnp.ndarray,          # (N, F) node features
+    seeds: jnp.ndarray,          # (B,)
+    fanouts: Sequence[int],
+) -> Dict[str, jnp.ndarray]:
+    """Layered sampling producing the GraphSAGE minibatch dict."""
+    out: Dict[str, jnp.ndarray] = {}
+    frontier = seeds
+    out["feats_l0"] = feats[seeds]
+    for i, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        nb, nxt = sample_block(sub, nbr_table, deg, frontier, f)
+        n_parent = frontier.shape[0]
+        # local indices into the next level are just positions 0..B*f-1,
+        # masked where the neighbour is missing
+        local = jnp.arange(n_parent * f, dtype=jnp.int32).reshape(n_parent, f)
+        out[f"idx_l{i}"] = jnp.where(nb >= 0, local, -1)
+        frontier = nxt
+        out[f"feats_l{i+1}"] = feats[frontier]
+    return out
+
+
+def build_nbr_table(senders, receivers, n_nodes: int, max_deg: int):
+    """Host-side padded-CSR construction (numpy), truncating at max_deg."""
+    import numpy as np
+
+    table = np.full((n_nodes, max_deg), -1, np.int32)
+    deg = np.zeros(n_nodes, np.int32)
+    for s, r in zip(np.asarray(senders), np.asarray(receivers)):
+        if deg[s] < max_deg:
+            table[s, deg[s]] = r
+            deg[s] += 1
+    return table, deg

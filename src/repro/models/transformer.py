@@ -1,0 +1,363 @@
+"""LM transformer assembly: dense-GQA and MoE-MLA stacks.
+
+* homogeneous layers are stacked along a leading L axis and driven with
+  ``jax.lax.scan`` + ``jax.checkpoint`` (remat) — one compiled layer body
+  regardless of depth, which keeps 512-device dry-run compiles fast and
+  bounds live activation memory to one layer;
+* the first ``n_dense_layers`` of the MoE archs (DeepSeek-V2/V3 use dense
+  FFNs there) are scanned as a separate homogeneous prefix stack;
+* DeepSeek-V3's MTP head (multi-token prediction) is one extra
+  transformer layer predicting token t+2, sharing the embedding and
+  output head (arXiv:2412.19437 section 2.2);
+* ``*_decode_step`` functions consume/produce per-layer caches stacked
+  along L (scanned), so serve_step is a single jitted dispatch.
+
+The config dataclass lives in configs/lm.py; this module is pure model
+math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import shard_act
+from . import attention as attn
+from . import moe as moe_lib
+from .layers import (
+    Params,
+    embed_init,
+    init_rmsnorm,
+    init_swiglu,
+    rmsnorm,
+    softmax_cross_entropy,
+    swiglu,
+)
+
+
+# --------------------------------------------------------------------- #
+# config
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    attn_kind: str = "gqa"            # "gqa" | "mla"
+    # MLA dims (DeepSeek-V2/V3)
+    q_lora: int = 0
+    kv_lora: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    # MoE
+    moe: bool = False
+    moe_group_size: int = 256        # seq-local dispatch group (aligns with SP)
+    n_routed: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    d_ff_moe: int = 0
+    n_dense_layers: int = 0
+    router_mode: str = "softmax_topk"  # "softmax_topk" | "sigmoid_bias"
+    capacity_factor: float = 1.25
+    # MTP
+    mtp: bool = False
+    mtp_weight: float = 0.3
+    # misc
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    q_block: int = 512
+    kv_block: int = 1024
+
+    @property
+    def n_scan_layers(self) -> int:
+        return self.n_layers - self.n_dense_layers
+
+
+# --------------------------------------------------------------------- #
+# per-layer init / apply
+# --------------------------------------------------------------------- #
+def _init_attn(key, cfg: LMConfig) -> Params:
+    if cfg.attn_kind == "mla":
+        return attn.init_mla(
+            key, cfg.d_model, cfg.n_heads, cfg.q_lora, cfg.kv_lora,
+            cfg.d_nope, cfg.d_rope, cfg.d_v, cfg.param_dtype,
+        )
+    return attn.init_gqa(
+        key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+        cfg.param_dtype,
+    )
+
+
+def _init_layer(key, cfg: LMConfig, use_moe: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "attn": _init_attn(k1, cfg),
+        "ffn_norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(
+            k2, cfg.d_model, cfg.d_ff_moe, cfg.n_routed, cfg.n_shared,
+            dtype=cfg.param_dtype,
+        )
+    else:
+        p["mlp"] = init_swiglu(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    return p
+
+
+def _attn_fwd(p, x, cfg: LMConfig, positions=None):
+    if cfg.attn_kind == "mla":
+        return attn.mla_forward(
+            p, x, n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
+            d_nope=cfg.d_nope, d_rope=cfg.d_rope, d_v=cfg.d_v,
+            positions=positions, rope_theta=cfg.rope_theta,
+            q_block=cfg.q_block, kv_block=cfg.kv_block,
+        )
+    return attn.gqa_forward(
+        p, x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+        positions=positions, rope_theta=cfg.rope_theta,
+        q_block=cfg.q_block, kv_block=cfg.kv_block,
+    )
+
+
+def _layer_fwd(p, x, cfg: LMConfig, use_moe: bool, ep_constraint=None):
+    """Pre-norm residual block; returns (x, aux_loss)."""
+    x = x + _attn_fwd(p["attn"], rmsnorm(p["attn_norm"], x), cfg)
+    h = rmsnorm(p["ffn_norm"], x)
+    if use_moe:
+        f, aux = moe_lib.moe_forward(
+            p["moe"], h, top_k=cfg.top_k, mode=cfg.router_mode,
+            capacity_factor=cfg.capacity_factor, ep_constraint=ep_constraint,
+            group_size=cfg.moe_group_size,
+        )
+    else:
+        f, aux = swiglu(p["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+# --------------------------------------------------------------------- #
+# model init
+# --------------------------------------------------------------------- #
+def init_lm(key, cfg: LMConfig) -> Params:
+    keys = jax.random.split(key, 6)
+    p: Params = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(keys[1], cfg.vocab, cfg.d_model, cfg.param_dtype)
+
+    if cfg.n_dense_layers > 0:
+        dkeys = jax.random.split(keys[2], cfg.n_dense_layers)
+        p["dense_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, use_moe=False)
+        )(dkeys)
+    skeys = jax.random.split(keys[3], cfg.n_scan_layers)
+    p["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, use_moe=cfg.moe)
+    )(skeys)
+
+    if cfg.mtp:
+        p["mtp"] = {
+            "layer": _init_layer(keys[4], cfg, use_moe=cfg.moe),
+            "proj": (
+                jax.random.normal(keys[5], (2 * cfg.d_model, cfg.d_model), jnp.float32)
+                / (2 * cfg.d_model) ** 0.5
+            ).astype(cfg.param_dtype),
+            "norm_h": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+            "norm_e": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        }
+    return p
+
+
+# --------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------- #
+def _scan_stack(layers: Params, x, cfg: LMConfig, use_moe: bool, ep_constraint):
+    def body(carry, lp):
+        h, aux = carry
+        h2, a = _layer_fwd(lp, h, cfg, use_moe, ep_constraint)
+        # sequence-parallel residual stream: the remat-saved carry is
+        # (batch/dp, seq/model, d) so per-layer checkpoint memory shrinks
+        # by the TP degree (Megatron-SP)
+        h2 = shard_act(h2, ("batch", "sp", None))
+        return (h2, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), layers)
+    return x, aux
+
+
+def lm_hidden(params: Params, tokens: jnp.ndarray, cfg: LMConfig,
+              ep_constraint=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> final hidden (B, S, D), aux loss."""
+    x = params["embed"][tokens]
+    x = shard_act(x, ("batch", "sp", None))
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.n_dense_layers > 0:
+        x, aux = _scan_stack(params["dense_layers"], x, cfg, False, ep_constraint)
+        aux_total += aux
+    x, aux = _scan_stack(params["layers"], x, cfg, cfg.moe, ep_constraint)
+    aux_total += aux
+    return x, aux_total
+
+
+def lm_logits(params: Params, h: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    h = rmsnorm(params["final_norm"], h)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.T
+    # keep logits vocab-sharded end-to-end: the CE uses an iota-compare
+    # reduction so the (B, S, V) tensor never gathers (layers.py)
+    return shard_act(logits, ("batch",) + (None,) * (logits.ndim - 2) + ("tp",))
+
+
+def lm_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: LMConfig,
+            ep_constraint=None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token CE (+ MTP next-next-token CE, + MoE aux)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    h, aux = lm_hidden(params, tokens, cfg, ep_constraint)
+    logits = lm_logits(params, h, cfg)
+    loss = softmax_cross_entropy(logits, labels)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp:
+        # MTP: combine h_t with emb(token_{t+1}) to predict token_{t+2}
+        # (= labels shifted by one).  Last position dropped.
+        emb_next = params["embed"][labels]                     # token_{t+1}
+        hm = jnp.concatenate(
+            [rmsnorm(params["mtp"]["norm_h"], h),
+             rmsnorm(params["mtp"]["norm_e"], emb_next)], axis=-1
+        ) @ params["mtp"]["proj"]
+        hm, _ = _layer_fwd(params["mtp"]["layer"], hm, cfg, cfg.moe, ep_constraint)
+        logits_mtp = lm_logits(params, hm[:, :-1], cfg)
+        labels_mtp = labels[:, 1:]
+        mtp_loss = softmax_cross_entropy(logits_mtp, labels_mtp)
+        metrics["mtp_ce"] = mtp_loss
+        loss = loss + cfg.mtp_weight * mtp_loss
+    loss = loss + 0.003 * aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------------- #
+# decode (serve) path
+# --------------------------------------------------------------------- #
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> Params:
+    """Stacked per-layer caches (leading L axis, scanned in decode)."""
+    dtype = dtype or cfg.param_dtype
+    l = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        return {
+            "c_kv": jnp.zeros((l, batch, max_len, cfg.kv_lora), dtype),
+            "k_rope": jnp.zeros((l, batch, max_len, cfg.d_rope), dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((l, batch, cfg.n_kv_heads, max_len, cfg.d_head), dtype),
+        "v": jnp.zeros((l, batch, cfg.n_kv_heads, max_len, cfg.d_head), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _layer_decode(p, x, layer_cache, pos, cfg: LMConfig, use_moe: bool,
+                  ep_constraint=None):
+    h = rmsnorm(p["attn_norm"], x)
+    if cfg.attn_kind == "mla":
+        cache = {"c_kv": layer_cache["c_kv"], "k_rope": layer_cache["k_rope"],
+                 "len": pos}
+        o, new = attn.mla_decode(
+            p["attn"], h, cache, n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
+            d_nope=cfg.d_nope, d_rope=cfg.d_rope, d_v=cfg.d_v,
+            rope_theta=cfg.rope_theta,
+        )
+        new_cache = {"c_kv": new["c_kv"], "k_rope": new["k_rope"]}
+    else:
+        cache = {"k": layer_cache["k"], "v": layer_cache["v"], "len": pos}
+        o, new = attn.gqa_decode(
+            p["attn"], h, cache, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+        )
+        new_cache = {"k": new["k"], "v": new["v"]}
+    x = x + o
+    x = shard_act(x, (None, None, "batch"))   # keep d aligned w/ FSDP axis
+    hf = rmsnorm(p["ffn_norm"], x)
+    if use_moe:
+        # decode uses no-drop dispatch (cap = T): serving must never drop
+        # a token, and T is tiny at decode so the (E, T, d) tensor is cheap
+        f, _ = moe_lib.moe_forward(
+            p["moe"], hf, top_k=cfg.top_k, mode=cfg.router_mode,
+            capacity_factor=cfg.capacity_factor, ep_constraint=ep_constraint,
+            no_drop=True, group_size=cfg.moe_group_size,
+        )
+    else:
+        f = swiglu(p["mlp"], hf)
+    return x + f, new_cache
+
+
+def lm_decode_step(params: Params, cache: Params, token: jnp.ndarray,
+                   cfg: LMConfig, ep_constraint=None):
+    """One decode step.  token (B,) int32 -> (logits (B, V), new cache)."""
+    x = params["embed"][token][:, None, :]                    # (B, 1, D)
+    # decode activations are tiny (B x 1 x d ~ MBs).  Shard their d-dim
+    # over dp so it ALIGNS with the weights' FSDP axis: the projections
+    # then contract shard-against-shard (partial psum of MB-sized
+    # outputs) instead of all-gathering 26 GB of weight shards per step
+    # (GSPMD picks gather-weights when the operand shardings don't line
+    # up — EXPERIMENTS.md §Perf cell 3)
+    x = shard_act(x, (None, None, "batch"))
+    pos = cache["len"]
+    nd = cfg.n_dense_layers
+    cache_arrays = {k: v for k, v in cache.items() if k != "len"}
+
+    def split(tree, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], tree)
+
+    new_caches = {k: [] for k in cache_arrays}
+    if nd > 0:
+        def body_d(carry, xs):
+            lp, lc = xs
+            h, nc = _layer_decode(lp, carry, lc, pos, cfg, False, ep_constraint)
+            return h, nc
+        x_sq = x
+        x_sq, nc_d = jax.lax.scan(
+            body_d, x_sq, (params["dense_layers"], split(cache_arrays, 0, nd))
+        )
+        x = x_sq
+    def body(carry, xs):
+        lp, lc = xs
+        h, nc = _layer_decode(lp, carry, lc, pos, cfg, cfg.moe, ep_constraint)
+        return h, nc
+    x, nc_s = jax.lax.scan(
+        body, x, (params["layers"], split(cache_arrays, nd, cfg.n_layers))
+    )
+    logits = lm_logits(params, x, cfg)[:, 0]
+    merged = {}
+    for k in cache_arrays:
+        if nd > 0:
+            merged[k] = jnp.concatenate([nc_d[k], nc_s[k]], axis=0)
+        else:
+            merged[k] = nc_s[k]
+    merged["len"] = pos + 1
+    return logits, merged
+
+
+def lm_prefill(params: Params, tokens: jnp.ndarray, cfg: LMConfig,
+               ep_constraint=None) -> jnp.ndarray:
+    """Prefill forward: next-token logits at the last position (B, V).
+
+    Only the last position is projected to the vocab — projecting all S
+    positions would materialize a (B, S, V) tensor (0.5 TB at the
+    prefill_32k x 256k-vocab cell) that serving never needs.
+    """
+    h, _ = lm_hidden(params, tokens, cfg, ep_constraint)
+    return lm_logits(params, h[:, -1:], cfg)[:, 0]

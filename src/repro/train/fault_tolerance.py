@@ -1,0 +1,139 @@
+"""Fault tolerance & elasticity runtime (DESIGN.md section 4).
+
+Pieces:
+
+* ``RestartManager`` — wraps CheckpointManager with run-level policy:
+  checkpoint cadence, automatic resume-from-latest, failure bookkeeping.
+  Designed for preemptible fleets: every state mutation is replayable
+  from (checkpoint step, data-stream seed), so a restart is exact.
+
+* ``ElasticMesh`` — picks the largest usable mesh from the currently
+  healthy device set (devices can be marked failed), keeping the axis
+  structure (dp x model).  Restores re-place checkpoints onto the new
+  mesh via CheckpointManager's elastic restore.
+
+* ``StragglerMonitor`` — per-task (FD subset pack / microbatch) timing
+  EWMA; tasks slower than ``threshold x`` median are flagged and
+  re-scheduled speculatively on the first idle worker (the
+  deterministic-accelerator analogue of the paper's dynamic task
+  allocation; see core/scheduler.lpt_assign for placement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class RestartManager:
+    ckpt: CheckpointManager
+    save_every: int = 100
+    max_failures: int = 10
+
+    failures: int = 0
+
+    def maybe_save(self, step: int, state: Any, *, blocking: bool = False):
+        if step % self.save_every == 0 and step > 0:
+            self.ckpt.save(step, state, blocking=blocking)
+
+    def resume_or_init(self, template: Any, shardings=None,
+                       init_fn: Optional[Callable] = None):
+        """Returns (state, start_step)."""
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            state = init_fn() if init_fn is not None else template
+            return state, 0
+        state = self.ckpt.restore(template, step=latest, shardings=shardings)
+        return state, latest
+
+    def record_failure(self, exc: BaseException) -> bool:
+        """Returns True if the run should restart, False to abort."""
+        self.failures += 1
+        return self.failures <= self.max_failures
+
+
+class ElasticMesh:
+    """Mesh factory over a mutable healthy-device set."""
+
+    def __init__(self, devices: Optional[Sequence] = None,
+                 model_axis: int = 16):
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.failed: set = set()
+        self.model_axis = model_axis
+
+    def mark_failed(self, device_ids: Sequence[int]):
+        self.failed.update(device_ids)
+
+    def healthy(self) -> List:
+        return [d for d in self.devices if d.id not in self.failed]
+
+    def make_mesh(self):
+        """Largest (dp, model) mesh from healthy devices.
+
+        model axis stays at min(model_axis, n) and dp shrinks — losing a
+        pod halves dp, preserving TP groups (which must stay intact for
+        param shardings to remain valid shapes).
+        """
+        from jax.sharding import Mesh
+
+        devs = self.healthy()
+        model = min(self.model_axis, len(devs))
+        while model > 1 and len(devs) % model:
+            model //= 2
+        dp = len(devs) // model
+        use = devs[: dp * model]
+        arr = np.array(use).reshape(dp, model)
+        return Mesh(arr, ("data", "model"))
+
+
+@dataclasses.dataclass
+class TaskTiming:
+    ewma: float = 0.0
+    n: int = 0
+
+    def update(self, dt: float, alpha: float = 0.3):
+        self.ewma = dt if self.n == 0 else (1 - alpha) * self.ewma + alpha * dt
+        self.n += 1
+
+
+class StragglerMonitor:
+    """Flags tasks whose runtime exceeds ``threshold x`` the median EWMA."""
+
+    def __init__(self, threshold: float = 2.0):
+        self.threshold = threshold
+        self.timings: Dict[Any, TaskTiming] = {}
+
+    def record(self, task_id: Any, dt: float):
+        self.timings.setdefault(task_id, TaskTiming()).update(dt)
+
+    def stragglers(self) -> List[Any]:
+        if len(self.timings) < 3:
+            return []
+        ew = {k: t.ewma for k, t in self.timings.items() if t.n > 0}
+        med = float(np.median(list(ew.values())))
+        if med <= 0:
+            return []
+        return [k for k, v in ew.items() if v > self.threshold * med]
+
+    def speculative_plan(self, pending: Sequence, k_workers: int):
+        """LPT-pack pending tasks; duplicate flagged stragglers onto the
+        least-loaded worker (first-finisher wins, the other is cancelled)."""
+        from ..core.scheduler import lpt_assign
+
+        weights = [self.timings.get(t, TaskTiming()).ewma or 1.0 for t in pending]
+        plan = lpt_assign(weights, k_workers)
+        strag = set(self.stragglers())
+        dups = [i for i, t in enumerate(pending) if t in strag]
+        if dups and plan:
+            loads = [sum(weights[i] for i in w) for w in plan]
+            target = int(np.argmin(loads))
+            for i in dups:
+                if i not in plan[target]:
+                    plan[target].append(i)
+        return plan

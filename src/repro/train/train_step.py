@@ -1,0 +1,78 @@
+"""Generic train-step factory: loss fn -> jittable (state, batch) -> state.
+
+Used by every family (LM / GNN / recsys) and by the dry-run: the lowered
+``train_step`` includes forward, backward and the AdamW update, so
+``compiled.memory_analysis()`` accounts for gradients and optimizer state
+— the numbers that actually gate large-scale runnability.
+
+Options (distributed-optimization tricks, DESIGN.md section 4):
+  * microbatch gradient accumulation (lax.scan over microbatches) —
+    overlaps the per-microbatch backward with the (GSPMD-inserted) grad
+    reduce-scatter of the previous microbatch;
+  * int8 gradient compression with error feedback (train/optimizer.py),
+    applied before the (data-parallel) gradient reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+TrainState = Dict[str, Any]
+
+
+def init_train_state(params, opt_cfg: AdamWConfig) -> TrainState:
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+def make_train_step(
+    loss_fn: Callable,                 # (params, batch) -> (loss, metrics)
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+) -> Callable[[TrainState, Any], Tuple[TrainState, Dict[str, jnp.ndarray]]]:
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        params = state["params"]
+        if microbatches > 1:
+            def micro(acc, mb):
+                (loss, metrics), g = grad_fn(params, mb)
+                return jax.tree.map(jnp.add, acc, g), (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            mbs = jax.tree.map(
+                lambda x: x.reshape(microbatches, -1, *x.shape[1:]), batch
+            )
+            gsum, (losses, metricss) = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = {k: jnp.mean(v) for k, v in metricss.items()}
+            metrics["loss"] = jnp.mean(losses)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+
+        if compress_grads:
+            from .optimizer import compress_int8, decompress_int8
+
+            def c(g):
+                q, s, _ = compress_int8(g, jnp.zeros_like(g, jnp.float32))
+                return decompress_int8(q, s).astype(g.dtype)
+
+            grads = jax.tree.map(c, grads)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], opt_cfg
+        )
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

@@ -1,0 +1,362 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 95 layers reports 1/95th of the real FLOPs, bytes and
+collectives (verified empirically; see EXPERIMENTS.md §Dry-run notes).
+This module re-derives the three roofline terms from ``as_text()`` with
+loop multiplicity:
+
+  * parse all computations + per-instruction output shapes,
+  * dot FLOPs = 2 * prod(out dims) * prod(contracted lhs dims),
+  * memory bytes = operand + output bytes of top-level (post-fusion)
+    instructions — fusion subcomputations touch no HBM,
+  * collectives with ring-cost wire bytes (see launch/roofline.py),
+  * while loops: body cost x trip count (parsed from the condition's
+    ``compare(counter, constant)``), cond x (trip+1),
+  * fusion/call/conditional children attributed to their callers.
+
+This is a static cost model of the partitioned per-device module: the
+numbers are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    """All array shapes in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_shapes: list
+    operands: List[str]
+    attrs: str
+    raw_args: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, list]            # instr name -> out shapes
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # rest: "TYPE op(operand, ...), attrs"
+        op_m = re.match(r"((?:\([^)]*\))|(?:[a-z0-9_]+\[[0-9,]*\][^\s]*))\s+([\w\-]+)\(", rest)
+        if not op_m:
+            continue
+        type_str, op = op_m.group(1), op_m.group(2)
+        # operands: inside the first balanced paren after op
+        args_start = rest.find(op + "(") + len(op) + 1
+        depth, i = 1, args_start
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        args = rest[args_start : i - 1]
+        operands = re.findall(r"%([\w.\-]+)", args)
+        attrs = rest[i:]
+        instr = Instr(name, op, _parse_shapes(type_str), operands, attrs, args)
+        cur.instrs.append(instr)
+        cur.shapes[name] = instr.out_shapes
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = sum(_nelems(d) for _, d in instr.out_shapes)
+    # contraction size from lhs shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    k = 1
+    if m and instr.operands:
+        lhs = comp.shapes.get(instr.operands[0])
+        if lhs:
+            dims = lhs[0][1]
+            for ax in m.group(1).split(","):
+                if ax and int(ax) < len(dims):
+                    k *= dims[int(ax)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = sum(_nelems(d) for _, d in instr.out_shapes)
+    rhs = comp.shapes.get(instr.operands[1]) if len(instr.operands) > 1 else None
+    k = _nelems(rhs[0][1]) if rhs else 1
+    return 2.0 * out_elems * k  # loose upper bound
+
+
+def _group_size(attrs: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(op: str, out_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if op == "all-gather":
+        return out_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return float(out_bytes) * (g - 1)
+    if op == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return float(out_bytes)  # collective-permute
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax loops: the condition compares the counter against a constant
+    (possibly through a wrapped-compare fusion); the constant's value is
+    the trip count."""
+    consts = {}
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.match(r"\s*(-?\d+)\s*$", ins.raw_args or "")
+            if m:
+                consts[ins.name] = int(m.group(1))
+    best = 0
+    for ins in cond.instrs:
+        if ins.op in ("compare", "fusion"):
+            for o in ins.operands:
+                if o in consts:
+                    best = max(best, consts[o])
+    if best == 0 and consts:
+        best = max(consts.values())
+    return max(best, 1)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    n_collectives: float = 0.0
+    coll_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-(op, shape) attributions with loop multiplicity — the "profile"
+    # the perf loop iterates on (no wall clock on CPU; this is the
+    # structural profile from the lowered IR)
+    mem_by_site: Dict[str, float] = dataclasses.field(default_factory=dict)
+    flops_by_site: Dict[str, float] = dataclasses.field(default_factory=dict)
+    wire_by_site: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        self.n_collectives += other.n_collectives * mult
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0.0) + v * mult
+        for field in ("mem_by_site", "flops_by_site", "wire_by_site"):
+            mine, theirs = getattr(self, field), getattr(other, field)
+            for k, v in theirs.items():
+                mine[k] = mine.get(k, 0.0) + v * mult
+
+    def top(self, field: str = "mem_by_site", n: int = 12):
+        d = getattr(self, field)
+        return sorted(d.items(), key=lambda kv: -kv[1])[:n]
+
+
+# ops whose operands/outputs we charge to HBM at top level
+_MEM_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+def _site(ins: Instr) -> str:
+    shp = ""
+    if ins.out_shapes:
+        dt, dims = ins.out_shapes[0]
+        shp = f"{dt}[{','.join(str(d) for d in dims)}]"
+    return f"{ins.op} {shp}"
+
+
+def analyze_text(text: str) -> Cost:
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:  # fall back: computation named main-ish
+        entry = next((n for n in comps if "main" in n), None)
+    memo: Dict[str, Cost] = {}
+
+    def cost_of(name: str, top: bool) -> Cost:
+        key = f"{name}|{top}"
+        if key in memo:
+            return memo[key]
+        c = Cost()
+        comp = comps.get(name)
+        if comp is None:
+            memo[key] = c
+            return c
+
+        def mem(ins, v):
+            c.hbm_bytes += v
+            s = _site(ins)
+            c.mem_by_site[s] = c.mem_by_site.get(s, 0.0) + v
+
+        def flop(ins, v):
+            c.flops += v
+            s = _site(ins)
+            c.flops_by_site[s] = c.flops_by_site.get(s, 0.0) + v
+
+        for ins in comp.instrs:
+            base_op = ins.op.replace("-start", "").replace("-done", "")
+            if ins.op == "dot":
+                flop(ins, _dot_flops(ins, comp))
+                if top:
+                    v = _nbytes(ins.out_shapes)
+                    for o in ins.operands:
+                        v += _nbytes(comp.shapes.get(o, []))
+                    mem(ins, v)
+            elif ins.op == "convolution":
+                flop(ins, _conv_flops(ins, comp))
+                if top:
+                    mem(ins, _nbytes(ins.out_shapes))
+            elif base_op in COLLECTIVE_OPS and "done" not in ins.op:
+                ob = _nbytes(ins.out_shapes)
+                g = _group_size(ins.attrs)
+                w = _wire_bytes(base_op, ob, g)
+                c.wire_bytes += w
+                c.n_collectives += 1
+                c.coll_by_op[base_op] = c.coll_by_op.get(base_op, 0.0) + w
+                s = _site(ins)
+                c.wire_by_site[s] = c.wire_by_site.get(s, 0.0) + w
+                if top:
+                    mem(ins, 2 * ob)
+            elif ins.op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                if m:
+                    # dots inside fusions still execute; bytes don't
+                    c.add(cost_of(m.group(1), False))
+                if top:
+                    v = _nbytes(ins.out_shapes)
+                    for o in ins.operands:
+                        v += _nbytes(comp.shapes.get(o, []))
+                    mem(ins, v)
+            elif ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                trips = (
+                    _trip_count(comps[cm.group(1)])
+                    if cm and cm.group(1) in comps else 1
+                )
+                if bm:
+                    c.add(cost_of(bm.group(1), top), trips)
+                if cm:
+                    c.add(cost_of(cm.group(1), False), trips + 1)
+            elif ins.op == "conditional":
+                for b in re.findall(r"%([\w.\-]+)", ins.attrs):
+                    if b in comps:
+                        c.add(cost_of(b, top))
+            elif ins.op in ("call", "custom-call"):
+                m = re.search(
+                    r"(?:to_apply|called_computations)=\{?%?([\w.\-]+)", ins.attrs
+                )
+                if m and m.group(1) in comps:
+                    c.add(cost_of(m.group(1), top))
+                if top:
+                    mem(ins, _nbytes(ins.out_shapes))
+            elif ins.op == "sort":
+                if top:
+                    mem(ins, 2 * _nbytes(ins.out_shapes))
+            elif ins.op == "dynamic-slice":
+                if top:  # reads only the slice, writes the slice
+                    mem(ins, 2 * _nbytes(ins.out_shapes))
+            elif ins.op == "dynamic-update-slice":
+                if top:  # touches only the update region (aliased buffer)
+                    upd = (
+                        comp.shapes.get(ins.operands[1], [])
+                        if len(ins.operands) > 1 else []
+                    )
+                    mem(ins, 2 * _nbytes(upd))
+            elif ins.op in ("gather", "scatter", "scatter-add"):
+                if top:
+                    mem(ins, 2 * _nbytes(ins.out_shapes))
+            elif ins.op in ("reshape", "bitcast-convert"):
+                pass  # layout-preserving; no HBM traffic
+            else:
+                if top and ins.op not in _MEM_FREE_OPS:
+                    v = _nbytes(ins.out_shapes)
+                    for o in ins.operands:
+                        v += _nbytes(comp.shapes.get(o, []))
+                    mem(ins, v)
+        memo[key] = c
+        return c
+
+    return cost_of(entry, True) if entry else Cost()

@@ -1,0 +1,52 @@
+"""Shared pytest fixtures.
+
+NOTE: XLA_FLAGS / device-count manipulation is deliberately NOT done here —
+smoke tests and benches must see the single real CPU device.  Multi-device
+tests spawn subprocesses with their own XLA_FLAGS (test_distributed.py,
+test_dryrun.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    BipartiteGraph,
+    paper_fig1_graph,
+    powerlaw_bipartite,
+    random_bipartite,
+)
+
+
+@pytest.fixture
+def fig1():
+    return paper_fig1_graph()
+
+
+def make_vhub_graph(n_u=300, n_v=60, n_hubs=6, seed=0) -> BipartiteGraph:
+    """TrU-like regime: V-side hubs, light U side (r >> 1, HUC fires)."""
+    rng = np.random.default_rng(seed)
+    eu, ev = [], []
+    for u in range(n_u):
+        hubs = rng.choice(n_hubs, size=rng.integers(1, 3), replace=False)
+        light = n_hubs + rng.choice(
+            n_v - n_hubs, size=rng.integers(1, 4), replace=False
+        )
+        cols = list(hubs) + list(light)
+        eu += [u] * len(cols)
+        ev += list(cols)
+    return BipartiteGraph.from_edges(n_u, n_v, eu, ev)
+
+
+GRAPH_CASES = {
+    "fig1": lambda: paper_fig1_graph(),
+    "er_small": lambda: random_bipartite(50, 30, 0.15, seed=3),
+    "er_dense": lambda: random_bipartite(40, 25, 0.45, seed=4),
+    "powerlaw": lambda: powerlaw_bipartite(200, 120, 1500, seed=5),
+    "vhub": lambda: make_vhub_graph(seed=6),
+    "empty_edges": lambda: BipartiteGraph.from_edges(10, 8, [], []),
+    "single_bfly": lambda: BipartiteGraph.from_edges(
+        2, 2, [0, 0, 1, 1], [0, 1, 0, 1]
+    ),
+    "star": lambda: BipartiteGraph.from_edges(
+        20, 1, list(range(20)), [0] * 20
+    ),
+}

@@ -1,0 +1,169 @@
+"""Pallas kernel sweeps: interpret-mode kernel body vs the pure-jnp oracle.
+
+Every (shape x block x dtype x mask) combination asserts allclose (exact,
+atol=0) against kernels/ref.py.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.butterfly import butterfly_support_pallas
+from repro.kernels.ops import butterfly_support, butterfly_update
+
+
+def _rand_adj(n_u, n_v, density, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.random((n_u, n_v)) < density).astype(np.float32)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (8, 16, 8), (16, 8, 32)])
+@pytest.mark.parametrize(
+    "shape", [(8, 8), (16, 32), (32, 16), (64, 64), (32, 128)]
+)
+@pytest.mark.parametrize("density", [0.0, 0.2, 0.9])
+def test_kernel_counting_sweep(blocks, shape, density):
+    bi, bj, bk = blocks
+    n_u, n_v = shape
+    if n_u % bi or n_u % bj or n_v % bk:
+        pytest.skip("shape not divisible by blocks")
+    a = _rand_adj(n_u, n_v, density, seed=n_u * n_v)
+    s = (np.random.default_rng(0).random(n_u) < 0.7).astype(np.float32)
+    want = np.asarray(ref.butterfly_support_ref(jnp.asarray(a), jnp.asarray(s)))
+    ids = jnp.arange(n_u, dtype=jnp.int32)
+    got = np.asarray(
+        butterfly_support_pallas(
+            jnp.asarray(a), jnp.asarray(a), jnp.asarray(s), ids, ids,
+            blocks=blocks, interpret=True,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtype_cast(dtype):
+    """Kernel casts inputs to f32 internally; bf16 0/1 inputs stay exact."""
+    a = _rand_adj(16, 32, 0.3, seed=1).astype(dtype)
+    s = jnp.ones(16, dtype)
+    ids = jnp.arange(16, dtype=jnp.int32)
+    want = np.asarray(
+        ref.butterfly_support_ref(jnp.asarray(a, jnp.float32), jnp.ones(16))
+    )
+    got = np.asarray(
+        butterfly_support_pallas(
+            jnp.asarray(a), jnp.asarray(a), s, ids, ids,
+            blocks=(8, 8, 8), interpret=True,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_kernel_gathered_update_self_pair_mask():
+    """Gathered peel rows must not count self-pairs (ids equality mask)."""
+    a = _rand_adj(32, 16, 0.4, seed=2)
+    peel_rows = np.array([3, 7, 7, 11, 0, 0, 0, 0], dtype=np.int32)  # padded
+    valid = np.array([1, 1, 0, 1, 0, 0, 0, 0], dtype=np.float32)
+    a_peel = a[peel_rows] * valid[:, None]
+    ids = jnp.arange(32, dtype=jnp.int32)
+    got = np.asarray(
+        butterfly_update(
+            jnp.asarray(a), jnp.asarray(a_peel), jnp.asarray(valid),
+            ids, jnp.asarray(peel_rows),
+            backend="interpret", blocks=(8, 8, 8),
+        )
+    )
+    # oracle: delta[i] = sum_{u in {3,7,11}, u != i} C(W[i,u], 2)
+    w = a @ a.T
+    b2 = w * (w - 1) / 2
+    want = np.zeros(32)
+    for u in (3, 7, 11):
+        want += np.where(np.arange(32) == u, 0.0, b2[:, u])
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_ops_xla_backend_matches_interpret():
+    a = jnp.asarray(_rand_adj(24, 24, 0.3, seed=3))
+    s = jnp.asarray((np.random.default_rng(1).random(24) < 0.5).astype(np.float32))
+    x = np.asarray(butterfly_support(a, s, backend="xla"))
+    i = np.asarray(butterfly_support(a, s, backend="interpret", blocks=(8, 8, 8)))
+    np.testing.assert_allclose(x, i, rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_u=st.sampled_from([8, 16, 24]),
+    n_v=st.sampled_from([8, 16, 40]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 10_000),
+)
+def test_property_kernel_exactness(n_u, n_v, density, seed):
+    a = _rand_adj(n_u, n_v, density, seed)
+    rng = np.random.default_rng(seed + 1)
+    s = (rng.random(n_u) < 0.5).astype(np.float32)
+    want = np.asarray(ref.butterfly_support_ref(jnp.asarray(a), jnp.asarray(s)))
+    got = np.asarray(
+        butterfly_support(
+            jnp.asarray(a), jnp.asarray(s),
+            backend="interpret", blocks=(8, 8, 8),
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_counting_paths_agree():
+    """dense kernel path == segment (scatter-reduce) path == numpy oracle."""
+    from repro.core.counting import (
+        butterfly_counts_dense,
+        butterfly_counts_numpy,
+        butterfly_counts_segment,
+        wedge_pair_table,
+    )
+    from repro.core.graph import random_bipartite
+
+    g = random_bipartite(60, 45, 0.2, seed=7)
+    want = butterfly_counts_numpy(g)
+    a = jnp.asarray(g.dense())
+    dense = np.asarray(butterfly_counts_dense(a, backend="xla"))[: g.n_u]
+    us, ups = wedge_pair_table(g)
+    seg = np.asarray(
+        butterfly_counts_segment(jnp.asarray(us), jnp.asarray(ups), g.n_u)
+    )
+    np.testing.assert_allclose(dense, want, rtol=0, atol=0)
+    np.testing.assert_allclose(seg, want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 16, 16)])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_sparse_kernel_staircase_skip_exact(blocks, seed):
+    """Block-sparse variant (degree-sort stripe skip) stays exact."""
+    from repro.core.graph import powerlaw_bipartite
+    from repro.kernels.butterfly_sparse import (
+        butterfly_support_pallas_sparse, column_extents,
+    )
+
+    bi, bj, bk = blocks
+    g = powerlaw_bipartite(100, 60, 700, seed=seed).relabel_by_degree()
+    a = g.dense(pad_u=bi, pad_v=bk)
+    kmax = column_extents(a, bi, bk)
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray((rng.random(a.shape[0]) < 0.6).astype(np.float32))
+    want = np.asarray(ref.butterfly_support_ref(jnp.asarray(a), s))
+    got = np.asarray(butterfly_support_pallas_sparse(
+        jnp.asarray(a), s, jnp.asarray(kmax), blocks=blocks, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_sparse_kernel_skips_something_on_powerlaw():
+    from repro.core.graph import powerlaw_bipartite
+    from repro.kernels.butterfly_sparse import column_extents
+
+    g = powerlaw_bipartite(300, 200, 2500, seed=1).relabel_by_degree()
+    a = g.dense(pad_u=16, pad_v=16)
+    kmax = column_extents(a, 16, 16)
+    n_i, n_k = a.shape[0] // 16, a.shape[1] // 16
+    skipped = sum(
+        max(0, n_k - min(kmax[i], kmax[j]))
+        for i in range(n_i) for j in range(n_i)
+    )
+    assert skipped / (n_i * n_i * n_k) > 0.15

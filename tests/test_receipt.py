@@ -1,0 +1,252 @@
+"""RECEIPT correctness: engine vs the exact BUP oracle (Theorems 1-2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import BipartiteGraph, paper_fig1_graph
+from repro.core.peeling import bup_oracle, parb_metrics
+from repro.core.receipt import ReceiptConfig, tip_decompose
+
+from conftest import GRAPH_CASES
+
+SMALL_BLOCKS = (8, 8, 8)
+
+
+def _cfg(**kw):
+    base = dict(
+        num_partitions=6, kernel_blocks=SMALL_BLOCKS, backend="xla"
+    )
+    base.update(kw)
+    return ReceiptConfig(**base)
+
+
+# --------------------------------------------------------------------- #
+# ground truth sanity
+# --------------------------------------------------------------------- #
+def test_fig1_bup(fig1):
+    theta, m = bup_oracle(fig1)
+    assert theta.tolist() == [2, 3, 3, 1]
+    assert m.rounds == 4
+
+
+def test_fig1_parb_matches_bup(fig1):
+    tb, _ = bup_oracle(fig1)
+    tp, mp = parb_metrics(fig1)
+    assert (tb == tp).all()
+    assert mp.rounds <= 4
+
+
+# --------------------------------------------------------------------- #
+# engine vs oracle across graph shapes and configs
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("case", sorted(GRAPH_CASES))
+def test_receipt_matches_bup(case):
+    g = GRAPH_CASES[case]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(g, _cfg())
+    np.testing.assert_array_equal(tb, tr)
+    assert stats.num_subsets >= 1
+
+
+@pytest.mark.parametrize("p", [1, 2, 4, 16, 64])
+def test_receipt_partition_sweep(p):
+    g = GRAPH_CASES["powerlaw"]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(g, _cfg(num_partitions=p))
+    np.testing.assert_array_equal(tb, tr)
+    assert stats.num_subsets <= max(p, 1)
+
+
+@pytest.mark.parametrize("fd_mode", ["b2", "matvec"])
+@pytest.mark.parametrize("huc", [True, False])
+@pytest.mark.parametrize("dgm", [True, False])
+def test_receipt_feature_matrix(fd_mode, huc, dgm):
+    g = GRAPH_CASES["vhub"]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(
+        g, _cfg(fd_mode=fd_mode, use_huc=huc, use_dgm=dgm)
+    )
+    np.testing.assert_array_equal(tb, tr)
+    if not huc:
+        assert stats.huc_recounts == 0
+    if not dgm:
+        assert stats.dgm_compactions == 0
+
+
+def test_huc_fires_and_saves_wedges_in_high_r_regime():
+    g = GRAPH_CASES["vhub"]()
+    _, s_on = tip_decompose(g, _cfg(use_huc=True, num_partitions=12))
+    _, s_off = tip_decompose(g, _cfg(use_huc=False, num_partitions=12))
+    assert s_on.huc_recounts > 0
+    assert s_on.wedges_total < s_off.wedges_total
+
+
+def test_degree_sort_invariance():
+    g = GRAPH_CASES["powerlaw"]()
+    tb, _ = bup_oracle(g)
+    t1, _ = tip_decompose(g, _cfg(degree_sort=True))
+    t2, _ = tip_decompose(g, _cfg(degree_sort=False))
+    np.testing.assert_array_equal(tb, t1)
+    np.testing.assert_array_equal(tb, t2)
+
+
+def test_interpret_backend_matches():
+    g = GRAPH_CASES["er_small"]()
+    tb, _ = bup_oracle(g)
+    tr, _ = tip_decompose(g, _cfg(backend="interpret", kernel_blocks=(8, 8, 16)))
+    np.testing.assert_array_equal(tb, tr)
+
+
+def test_sync_reduction_vs_parb():
+    """The paper's headline: RECEIPT drastically reduces rho."""
+    g = GRAPH_CASES["vhub"]()
+    _, mp = parb_metrics(g)
+    _, stats = tip_decompose(g, _cfg(num_partitions=8))
+    assert stats.rho_cd < mp.rounds
+
+
+def test_bounds_are_monotone_and_cover():
+    g = GRAPH_CASES["powerlaw"]()
+    tr, stats = tip_decompose(g, _cfg(num_partitions=8))
+    b = stats.bounds
+    assert all(b[i] < b[i + 1] for i in range(len(b) - 1))
+    assert b[0] == 0.0
+    assert tr.max() < b[-1]
+
+
+def test_subset_ranges_contain_theta():
+    """Theorem 1: every vertex's tip number lies in its subset's range."""
+    g = GRAPH_CASES["vhub"]()
+    cfg = _cfg(num_partitions=8)
+    from repro.core.receipt import receipt_cd, RunStats
+
+    stats = RunStats()
+    subset_id, init_sup, bounds, _ = receipt_cd(g, cfg, stats)
+    tb, _ = bup_oracle(g)
+    for u in range(g.n_u):
+        i = subset_id[u]
+        assert bounds[i] <= tb[u] < bounds[i + 1], (
+            f"u={u} theta={tb[u]} not in [{bounds[i]}, {bounds[i+1]})"
+        )
+
+
+def test_init_support_vector():
+    """FD init supports equal BUP supports after peeling lower subsets
+    (Lemma 1 — order independence)."""
+    g = GRAPH_CASES["er_small"]()
+    cfg = _cfg(num_partitions=4)
+    from repro.core.peeling import shared_butterfly_matrix
+    from repro.core.receipt import receipt_cd, RunStats
+
+    stats = RunStats()
+    subset_id, init_sup, bounds, _ = receipt_cd(g, cfg, stats)
+    b2 = shared_butterfly_matrix(g)
+    for i in range(subset_id.max() + 1):
+        geq = subset_id >= i
+        members = np.where(subset_id == i)[0]
+        for u in members:
+            expect = b2[u][geq].sum()
+            assert init_sup[u] == expect, (u, i, init_sup[u], expect)
+
+
+# --------------------------------------------------------------------- #
+# property-based: random graphs, random configs
+# --------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(
+    n_u=st.integers(2, 40),
+    n_v=st.integers(2, 30),
+    density=st.floats(0.05, 0.6),
+    p=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_receipt_equals_bup(n_u, n_v, density, p, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random((n_u, n_v)) < density
+    eu, ev = np.nonzero(a)
+    g = BipartiteGraph.from_edges(n_u, n_v, eu, ev)
+    tb, _ = bup_oracle(g)
+    tr, _ = tip_decompose(g, _cfg(num_partitions=p))
+    np.testing.assert_array_equal(tb, tr)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_u=st.integers(4, 30),
+    n_hubs=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_property_hub_graphs(n_u, n_hubs, seed):
+    """V-hub graphs (the HUC-firing regime) stay exact."""
+    rng = np.random.default_rng(seed)
+    n_v = n_hubs + 10
+    eu, ev = [], []
+    for u in range(n_u):
+        k = rng.integers(1, n_hubs + 1)
+        cols = list(rng.choice(n_hubs, size=k, replace=False))
+        cols += list(n_hubs + rng.choice(10, size=2, replace=False))
+        eu += [u] * len(cols)
+        ev += cols
+    g = BipartiteGraph.from_edges(n_u, n_v, eu, ev)
+    tb, _ = bup_oracle(g)
+    tr, _ = tip_decompose(g, _cfg(num_partitions=4))
+    np.testing.assert_array_equal(tb, tr)
+
+
+def test_cd_checkpoint_restart_exact():
+    """Fault tolerance of the peeling engine itself: interrupt CD at a
+    subset boundary, restore the checkpointed state (through the same
+    CheckpointManager as train states), continue, and get EXACTLY the
+    same tip numbers."""
+    import tempfile
+
+    from repro.core.receipt import RunStats, receipt_cd, receipt_fd
+    from repro.train.checkpoint import CheckpointManager
+
+    g = GRAPH_CASES["powerlaw"]()
+    cfg = _cfg(num_partitions=8, degree_sort=False)
+
+    # uninterrupted reference
+    tb, _ = bup_oracle(g)
+
+    # run 1: capture the state at the 3rd subset boundary, then "crash"
+    class Stop(Exception):
+        pass
+
+    captured = {}
+
+    def cb(state):
+        if int(state["i"]) == 3:
+            captured["state"] = state
+            raise Stop()
+
+    stats = RunStats()
+    try:
+        receipt_cd(g, cfg, stats, checkpoint_cb=cb)
+        assert False, "expected interruption"
+    except Stop:
+        pass
+    assert "state" in captured
+
+    # persist + restore through the real checkpoint manager
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d)
+        ck.save(3, captured["state"])
+        restored = ck.restore(captured["state"])
+
+    # run 2: resume from the restored state
+    stats2 = RunStats()
+    subset_id, init_sup, bounds, _ = receipt_cd(
+        g, cfg, stats2, resume_state=restored
+    )
+    theta = receipt_fd(g, subset_id, init_sup, bounds, cfg, stats2)
+    np.testing.assert_array_equal(np.round(theta).astype(np.int64), tb)
+
+
+def test_v_side_decomposition():
+    """side='V' peels the other vertex set (Table 3 *V rows)."""
+    g = GRAPH_CASES["powerlaw"]()
+    gt = BipartiteGraph.from_edges(g.n_v, g.n_u, g.edges_v, g.edges_u)
+    tb, _ = bup_oracle(gt)
+    tv, _ = tip_decompose(g, _cfg(), side="V")
+    np.testing.assert_array_equal(tb, tv)
