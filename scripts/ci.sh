@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI entrypoint: fast-fail import smoke, then the tier-1 suite on CPU
+# (Pallas kernels run through the interpreter / jnp oracle backends).
+# Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== import smoke: every module under src/repro =="
+python - <<'EOF'
+import importlib, pathlib, sys, traceback
+
+root = pathlib.Path("src")
+failed = []
+for p in sorted(root.rglob("*.py")):
+    mod = ".".join(p.with_suffix("").relative_to(root).parts)
+    if mod.endswith("__init__"):
+        mod = mod[: -len(".__init__")]
+    try:
+        importlib.import_module(mod)
+    except Exception:
+        failed.append(mod)
+        traceback.print_exc()
+if failed:
+    print(f"IMPORT SMOKE FAILED: {failed}", file=sys.stderr)
+    sys.exit(1)
+print(f"ok: {len(list(root.rglob('*.py')))} modules import cleanly")
+EOF
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q "$@"

@@ -152,7 +152,9 @@ def cd_sweep_shardmap(mesh: Mesh, *, chunk: int = 16384):
         # global row offset of this dp shard
         dp_idx = jax.lax.axis_index(dp[0])
         for ax in dp[1:]:
-            dp_idx = dp_idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            # mesh.shape (closed over) — jax.lax.axis_size only exists in
+            # newer jax releases
+            dp_idx = dp_idx * mesh.shape[ax] + jax.lax.axis_index(ax)
         row0 = dp_idx * n_u_loc
         tp_idx = jax.lax.axis_index(tp)
 
@@ -214,12 +216,81 @@ def cd_sweep_shardmap(mesh: Mesh, *, chunk: int = 16384):
     )
 
 
+def cd_fused_loop(a, support, alive, ids, hi, lo, *, peel_width: int,
+                  max_sweeps: int = 100_000, chunk: int = 16384):
+    """Device-resident CD range loop (the fused engine of core/receipt.py,
+    sharded): peel everything with support < ``hi`` until the range drains,
+    entirely inside one ``lax.while_loop`` — the host issues ONE dispatch
+    per subset instead of one (plus ~8 blocking transfers) per sweep.
+
+    Each iteration selects the peel set on device (global nonzero into a
+    fixed ``peel_width`` buffer; a wider set raises the overflow flag and
+    exits for the host to replay), then applies ``cd_sweep_step`` — so the
+    per-sweep collective schedule (row all-gather + model-axis reduce of
+    the wedge contraction) is IDENTICAL to the unfused path; fusion only
+    removes the host round trips between sweeps, which is RECEIPT's
+    synchronization argument applied to the dispatch layer itself.
+
+    Returns (support, alive, rho, overflow).
+    """
+
+    def cond_fn(st):
+        support, alive, rho, ovf = st
+        return jnp.any(alive & (support < hi)) & (rho < max_sweeps) & ~ovf
+
+    def body_fn(st):
+        support, alive, rho, ovf = st
+        peel = alive & (support < hi)
+        n_peel = jnp.sum(peel)
+
+        def on_overflow(support, alive):
+            return support, alive, rho, jnp.bool_(True)
+
+        def do_sweep(support, alive):
+            rows = jnp.nonzero(peel, size=peel_width, fill_value=0)[0]
+            rows = rows.astype(jnp.int32)
+            valid = (jnp.arange(peel_width) < n_peel).astype(jnp.float32)
+            support2, alive2 = cd_sweep_step(
+                a, support, alive, rows, valid, ids, lo, chunk=chunk
+            )
+            return support2, alive2, rho + 1, ovf
+
+        return jax.lax.cond(
+            n_peel > peel_width, on_overflow, do_sweep, support, alive
+        )
+
+    return jax.lax.while_loop(
+        cond_fn, body_fn, (support, alive, jnp.int32(0), jnp.bool_(False))
+    )
+
+
 def lower_cd_sweep(mesh: Mesh, *, n_u: int, n_v: int, peel_rows: int,
                    impl: str = "shardmap"):
-    """Abstract-lower one production-scale CD sweep on ``mesh``."""
+    """Abstract-lower one production-scale CD step on ``mesh``.
+
+    impl: "shardmap" (explicit collectives, single sweep), "gspmd"
+    (single sweep), or "fused" (the whole device-resident range loop —
+    ``peel_rows`` becomes the fixed peel-buffer width)."""
     sp = _specs(mesh)
     f32 = jnp.float32
     sds = jax.ShapeDtypeStruct
+    if impl == "fused":
+        args = (
+            sds((n_u, n_v), jnp.int8),   # a (0/1: int8 storage)
+            sds((n_u,), f32),            # support
+            sds((n_u,), jnp.bool_),      # alive
+            sds((n_u,), jnp.int32),      # ids
+            sds((), f32),                # hi
+            sds((), f32),                # lo
+        )
+        in_sh = (
+            sp["A"], sp["vec_u"], sp["vec_u"], sp["vec_u"],
+            sp["scalar"], sp["scalar"],
+        )
+        out_sh = (sp["vec_u"], sp["vec_u"], sp["scalar"], sp["scalar"])
+        fn = functools.partial(cd_fused_loop, peel_width=peel_rows)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        return jitted.lower(*args)
     args = (
         sds((n_u, n_v), jnp.int8),       # a (0/1: int8 storage)
         sds((n_u,), f32),                # support
@@ -338,6 +409,33 @@ def distributed_butterfly_support(mesh: Mesh, a: jnp.ndarray, s: jnp.ndarray):
     )
     with mesh:
         return jitted(a, s, ids)
+
+
+def distributed_cd_fused_loop(mesh: Mesh, a, support, alive, hi, lo, *,
+                              peel_width: int, max_sweeps: int = 100_000,
+                              chunk: int = 16384):
+    """Run a whole device-resident CD range loop on a live mesh (one
+    dispatch; the multi-device twin of receipt.py's ``_cd_device_loop``).
+
+    Returns (support, alive, rho, overflow)."""
+    sp = _specs(mesh)
+    n_u = a.shape[0]
+    ids = jnp.arange(n_u, dtype=jnp.int32)
+    fn = functools.partial(
+        cd_fused_loop, peel_width=peel_width, max_sweeps=max_sweeps,
+        chunk=chunk,
+    )
+    jitted = jax.jit(
+        fn,
+        in_shardings=(sp["A"], sp["vec_u"], sp["vec_u"], sp["vec_u"],
+                      sp["scalar"], sp["scalar"]),
+        out_shardings=(sp["vec_u"], sp["vec_u"], sp["scalar"], sp["scalar"]),
+    )
+    with mesh:
+        return jitted(
+            a.astype(jnp.int8), support, alive, ids,
+            jnp.asarray(hi, jnp.float32), jnp.asarray(lo, jnp.float32),
+        )
 
 
 def distributed_cd_sweep(mesh: Mesh, a, support, alive, rows, valid, lo,

@@ -158,10 +158,18 @@ class BipartiteGraph:
         a[self.edges_u, self.edges_v] = 1
         return a
 
-    def induced_on_u(self, members: np.ndarray) -> Tuple["BipartiteGraph", np.ndarray]:
+    def induced_on_u(
+        self, members: np.ndarray, *, min_degree_v: int = 1
+    ) -> Tuple["BipartiteGraph", np.ndarray]:
         """Subgraph induced on ``members`` (subset of U) and all of V,
         with V compacted to columns that still have an edge (the paper's
         FD subgraph induction + our DGM column compaction in one step).
+
+        ``min_degree_v`` additionally drops V columns whose *residual*
+        degree falls below the bound — the CD engine passes 2, since a
+        degree-<2 column cannot complete a wedge (DGM, DESIGN.md
+        section 2).  One pass suffices: dropping a column never changes
+        another column's degree.
 
         Returns (subgraph, v_map) where ``v_map[j]`` is the original V id of
         compacted column j.
@@ -171,6 +179,10 @@ class BipartiteGraph:
         keep[members] = True
         sel = keep[self.edges_u]
         eu, ev = self.edges_u[sel], self.edges_v[sel]
+        if min_degree_v > 1 and len(ev):
+            dv = np.bincount(ev, minlength=self.n_v)
+            good = dv[ev] >= min_degree_v
+            eu, ev = eu[good], ev[good]
         # compact U ids to 0..len(members)-1 in the order given
         u_map = np.full(self.n_u, -1, dtype=np.int64)
         u_map[members] = np.arange(len(members))

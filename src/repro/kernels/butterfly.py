@@ -47,6 +47,11 @@ __all__ = ["butterfly_kernel_body", "butterfly_support_pallas"]
 
 DEFAULT_BLOCKS = (128, 128, 512)
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
 
 def butterfly_kernel_body(
     a_ref,        # (BI, BK)  output-side rows
@@ -126,7 +131,7 @@ def butterfly_support_pallas(
         out_specs=pl.BlockSpec((1, bi), lambda i, j, k: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, n_a), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

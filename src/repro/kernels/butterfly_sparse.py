@@ -1,14 +1,25 @@
-"""Block-sparse butterfly kernel: degree-sort staircase skip.
+"""Block-sparse butterfly kernels: degree-sort staircase skip.
 
 After degree-descending relabeling (graph.relabel_by_degree), a power-law
 biadjacency's nonzeros concentrate toward low column indices within each
 row tile — each row-tile i has a column extent kmax[i] beyond which the
-tile row-range is entirely zero.  A wedge tile W_ij = A_i A_j^T receives
-zero contribution from any k-stripe beyond min(kmax[i], kmax[j]), so the
-kernel skips the MXU dot (and in the DMA-pipelined TPU lowering, the
-stripe's prefetch slot goes idle) for those steps via a scalar-prefetched
-extent vector — the Pallas analogue of the paper's "don't traverse wedges
+tile row-range is entirely zero.  A wedge tile W_ij = A_i B_j^T receives
+zero contribution from any k-stripe beyond min(kmax_a[i], kmax_b[j]), so
+the kernel skips the MXU dot (and in the DMA-pipelined TPU lowering, the
+stripe's prefetch slot goes idle) for those steps via scalar-prefetched
+extent vectors — the Pallas analogue of the paper's "don't traverse wedges
 of deleted/empty regions" (DGM).
+
+Two entry points (DESIGN.md section 2.1 backend table):
+
+* ``butterfly_update_pallas_sparse`` — the general gathered-B form used by
+  the CD peel update (B = gathered peel rows A[S]).  A-side extents come
+  from host-side ``column_extents`` metadata (recomputed at every DGM
+  compaction, where the staircase is steepest); B-side extents are reduced
+  on device from per-row extents of the gathered rows (``row_extents``),
+  since the peel set is only known inside the device-resident sweep loop.
+* ``butterfly_support_pallas_sparse`` — the counting form (A = B), a thin
+  wrapper over the update form with shared extents.
 
 Exactness is unconditional: skipped stripes are provably all-zero.
 benchmarks/kernel_bench measures the skippable fraction per graph.
@@ -24,28 +35,57 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["column_extents", "butterfly_support_pallas_sparse"]
+__all__ = [
+    "column_extents",
+    "row_extents",
+    "gathered_tile_extents",
+    "butterfly_support_pallas_sparse",
+    "butterfly_update_pallas_sparse",
+]
 
 
 def column_extents(a: np.ndarray, block_rows: int, block_k: int) -> np.ndarray:
-    """kmax[i] = number of k-stripes with any nonzero in row-tile i."""
-    n_u, n_v = a.shape
-    n_i = n_u // block_rows
+    """kmax[i] = index of the last nonzero k-stripe in row-tile i, + 1
+    (a per-tile max over ``row_extents``)."""
+    return row_extents(a, block_k).reshape(-1, block_rows).max(axis=1)
+
+
+def row_extents(a: np.ndarray, block_k: int) -> np.ndarray:
+    """ext[r] = index of the last k-stripe with any nonzero in row r, + 1
+    (0 for an all-zero row).  An upper bound, not a population count:
+    interior zero stripes don't reduce the extent and aren't skipped by
+    the kernel — which is what keeps the skip exact without a staircase
+    assumption.
+
+    Per-row resolution of ``column_extents``: the extent of any row *tile*
+    assembled from gathered rows S is max(ext[S]), which is how the CD
+    device loop derives B-side extents for a dynamically gathered peel set
+    without a host round trip.
+    """
+    n_rows, n_v = a.shape
     n_k = n_v // block_k
-    tiles = a.reshape(n_i, block_rows, n_k, block_k)
-    nz = tiles.sum(axis=(1, 3)) > 0           # (n_i, n_k)
-    # extent = last nonzero stripe + 1 (staircase assumption not required
-    # for correctness of the extent bound — interior zero stripes simply
-    # aren't skipped by this variant)
-    ext = np.zeros(n_i, np.int32)
-    for i in range(n_i):
-        idx = np.nonzero(nz[i])[0]
-        ext[i] = (idx[-1] + 1) if len(idx) else 0
-    return ext
+    nz = a.reshape(n_rows, n_k, block_k).sum(axis=2) > 0   # (n_rows, n_k)
+    any_nz = nz.any(axis=1)
+    last = n_k - np.argmax(nz[:, ::-1], axis=1)
+    return np.where(any_nz, last, 0).astype(np.int32)
 
 
-def _kernel(
-    kmax_ref,     # scalar prefetch: (n_tiles,) int32 column extents
+def gathered_tile_extents(row_ext: jnp.ndarray, rows: jnp.ndarray,
+                          valid: jnp.ndarray, block_rows: int) -> jnp.ndarray:
+    """Device-side extents for a gathered row-tile matrix B = A[rows].
+
+    row_ext: (n_rows,) int32 per-row extents of A; rows: (n_b,) gathered
+    row ids; valid: (n_b,) bool/0-1 padding mask.  Returns (n_b/block,)
+    int32 — padding rows contribute extent 0 (their gathered content is
+    zeroed by the mask, so skipping is exact).
+    """
+    ext = jnp.where(valid.astype(bool), row_ext[rows], 0)
+    return ext.reshape(-1, block_rows).max(axis=1).astype(jnp.int32)
+
+
+def _update_kernel(
+    kmax_a_ref,   # scalar prefetch: (n_i,) int32 A row-tile extents
+    kmax_b_ref,   # scalar prefetch: (n_j,) int32 B row-tile extents
     a_ref, b_ref, s_ref, ida_ref, idb_ref,
     out_ref, w_acc_ref,
     *,
@@ -62,7 +102,7 @@ def _kernel(
         out_ref[...] = jnp.zeros_like(out_ref)
 
     # staircase skip: stripes beyond either tile's extent contribute 0
-    live = k < jnp.minimum(kmax_ref[i], kmax_ref[j])
+    live = k < jnp.minimum(kmax_a_ref[i], kmax_b_ref[j])
 
     @pl.when(live)
     def _accumulate():
@@ -84,6 +124,66 @@ def _kernel(
 
 
 @functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def butterfly_update_pallas_sparse(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    s: jnp.ndarray,
+    ids_a: jnp.ndarray,
+    ids_b: jnp.ndarray,
+    kmax_a: jnp.ndarray,          # (n_a/bi,) int32 A row-tile extents
+    kmax_b: jnp.ndarray,          # (n_b/bj,) int32 B row-tile extents
+    *,
+    blocks: Tuple[int, int, int] = (128, 128, 512),
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gathered-B update form with staircase stripe skip.
+
+    out[i] = sum_{j: ids_b[j] != ids_a[i]} s[j] * C((A B^T)[i, j], 2)
+
+    Same contract as kernels/butterfly.py::butterfly_support_pallas plus
+    the two scalar-prefetched extent vectors; exact for any extents that
+    upper-bound the true tile extents (padding rows must be zeroed AND
+    carry extent 0 or their true extent).
+    """
+    n_a, n_v = a.shape
+    n_b = b.shape[0]
+    bi, bj, bk = blocks
+    if n_a % bi or n_b % bj or n_v % bk:
+        raise ValueError(f"shapes {a.shape}/{b.shape} not padded to {blocks}")
+    n_i, n_j, n_k = n_a // bi, n_b // bj, n_v // bk
+
+    kernel = functools.partial(_update_kernel, n_k=n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_i, n_j, n_k),
+        in_specs=[
+            pl.BlockSpec((bi, bk), lambda i, j, k, ka, kb: (i, k)),
+            pl.BlockSpec((bj, bk), lambda i, j, k, ka, kb: (j, k)),
+            pl.BlockSpec((1, bj), lambda i, j, k, ka, kb: (0, j)),
+            pl.BlockSpec((1, bi), lambda i, j, k, ka, kb: (0, i)),
+            pl.BlockSpec((1, bj), lambda i, j, k, ka, kb: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bi), lambda i, j, k, ka, kb: (0, i)),
+        scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n_a), jnp.float32),
+        interpret=interpret,
+    )(
+        kmax_a.astype(jnp.int32),
+        kmax_b.astype(jnp.int32),
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        s.reshape(1, n_b).astype(jnp.float32),
+        ids_a.reshape(1, n_a).astype(jnp.int32),
+        ids_b.reshape(1, n_b).astype(jnp.int32),
+    )
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
 def butterfly_support_pallas_sparse(
     a: jnp.ndarray,
     s: jnp.ndarray,
@@ -95,37 +195,10 @@ def butterfly_support_pallas_sparse(
     """Counting form with staircase stripe skip (A = B, square tiles)."""
     n_u, n_v = a.shape
     bi, bj, bk = blocks
-    assert bi == bj, "sparse variant uses square row tiles"
+    assert bi == bj, "sparse counting form uses square row tiles"
     if n_u % bi or n_v % bk:
         raise ValueError(f"shape {a.shape} not padded to blocks {blocks}")
-    n_i, n_k = n_u // bi, n_v // bk
-
     ids = jnp.arange(n_u, dtype=jnp.int32)
-    kernel = functools.partial(_kernel, n_k=n_k)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n_i, n_i, n_k),
-        in_specs=[
-            pl.BlockSpec((bi, bk), lambda i, j, k, kmax: (i, k)),
-            pl.BlockSpec((bj, bk), lambda i, j, k, kmax: (j, k)),
-            pl.BlockSpec((1, bj), lambda i, j, k, kmax: (0, j)),
-            pl.BlockSpec((1, bi), lambda i, j, k, kmax: (0, i)),
-            pl.BlockSpec((1, bj), lambda i, j, k, kmax: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, bi), lambda i, j, k, kmax: (0, i)),
-        scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
+    return butterfly_update_pallas_sparse(
+        a, a, s, ids, ids, kmax, kmax, blocks=blocks, interpret=interpret
     )
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((1, n_u), jnp.float32),
-        interpret=interpret,
-    )(
-        kmax.astype(jnp.int32),
-        a.astype(jnp.float32),
-        a.astype(jnp.float32),
-        s.reshape(1, n_u).astype(jnp.float32),
-        ids.reshape(1, n_u),
-        ids.reshape(1, n_u),
-    )
-    return out[0]

@@ -11,11 +11,16 @@ The wrappers:
   * keep everything jittable (fixed shapes; padding is the caller's
     responsibility via the bucketing helpers in core/receipt.py).
 
-Backends:
-    "pallas"      pl.pallas_call, compiled (TPU target)
-    "interpret"   pl.pallas_call(interpret=True) -- executes the kernel
-                  body via the interpreter, used for correctness on CPU
-    "xla"         pure-jnp oracle (kernels/ref.py), whole-matrix
+Backends (DESIGN.md section 2.1 routing table):
+    "pallas"            pl.pallas_call, compiled (TPU target), dense tiles
+    "pallas_sparse"     compiled block-sparse staircase kernel — skips
+                        k-stripes beyond the scalar-prefetched column
+                        extents (requires kmax_a/kmax_b metadata; falls
+                        back to conservative full extents when absent)
+    "interpret"         pl.pallas_call(interpret=True) -- executes the
+                        dense kernel body via the interpreter (CPU checks)
+    "interpret_sparse"  interpreter path of the block-sparse kernel
+    "xla"               pure-jnp oracle (kernels/ref.py), whole-matrix
 """
 from __future__ import annotations
 
@@ -27,8 +32,16 @@ import jax.numpy as jnp
 
 from . import ref
 from .butterfly import DEFAULT_BLOCKS, butterfly_support_pallas
+from .butterfly_sparse import butterfly_update_pallas_sparse
 
-__all__ = ["butterfly_support", "butterfly_update", "default_backend"]
+__all__ = [
+    "butterfly_support",
+    "butterfly_update",
+    "default_backend",
+    "SPARSE_BACKENDS",
+]
+
+SPARSE_BACKENDS = ("pallas_sparse", "interpret_sparse")
 
 
 def default_backend() -> str:
@@ -42,6 +55,12 @@ def _update_ref(a, b, s, ids_a, ids_b):
     return (b2 * not_self) @ s.astype(a.dtype)
 
 
+def _full_extents(n_rows: int, block_rows: int, n_k: int) -> jnp.ndarray:
+    """Conservative extents (no stripes skipped) — exact fallback when a
+    sparse backend is selected but no staircase metadata is available."""
+    return jnp.full((n_rows // block_rows,), n_k, jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("backend", "blocks"))
 def butterfly_update(
     a: jnp.ndarray,
@@ -52,16 +71,31 @@ def butterfly_update(
     *,
     backend: Optional[str] = None,
     blocks: tuple = DEFAULT_BLOCKS,
+    kmax_a: Optional[jnp.ndarray] = None,
+    kmax_b: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """out[i] = sum_{j: ids_b[j] != ids_a[i]} s[j] * C((A B^T)[i, j], 2).
 
     The general (gathered peel set) form.  Shapes must already be padded
-    to the kernel blocks for the pallas/interpret backends.
+    to the kernel blocks for the pallas/interpret backends.  ``kmax_a`` /
+    ``kmax_b`` are row-tile column extents ((n_a/bi,) / (n_b/bj,) int32)
+    consumed only by the sparse backends.
     """
     if backend is None:
         backend = default_backend()
     if backend == "xla":
         return _update_ref(a, b, s, ids_a, ids_b)
+    if backend in SPARSE_BACKENDS:
+        bi, bj, bk = blocks
+        n_k = a.shape[1] // bk
+        if kmax_a is None:
+            kmax_a = _full_extents(a.shape[0], bi, n_k)
+        if kmax_b is None:
+            kmax_b = _full_extents(b.shape[0], bj, n_k)
+        return butterfly_update_pallas_sparse(
+            a, b, s, ids_a, ids_b, kmax_a, kmax_b,
+            blocks=blocks, interpret=(backend == "interpret_sparse"),
+        )
     return butterfly_support_pallas(
         a, b, s, ids_a, ids_b, blocks=blocks, interpret=(backend == "interpret")
     )
@@ -74,6 +108,7 @@ def butterfly_support(
     *,
     backend: Optional[str] = None,
     blocks: tuple = DEFAULT_BLOCKS,
+    kmax: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """out[i] = sum_{j != i} s[j] * C((A A^T)[i, j], 2)  (counting form).
 
@@ -86,6 +121,7 @@ def butterfly_support(
         return ref.butterfly_support_ref(a, s)
     n_u = a.shape[0]
     ids = jnp.arange(n_u, dtype=jnp.int32)
-    return butterfly_support_pallas(
-        a, a, s, ids, ids, blocks=blocks, interpret=(backend == "interpret")
+    return butterfly_update(
+        a, a, s, ids, ids, backend=backend, blocks=blocks,
+        kmax_a=kmax, kmax_b=kmax,
     )

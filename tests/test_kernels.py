@@ -6,7 +6,7 @@ atol=0) against kernels/ref.py.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.butterfly import butterfly_support_pallas
@@ -152,6 +152,80 @@ def test_sparse_kernel_staircase_skip_exact(blocks, seed):
     got = np.asarray(butterfly_support_pallas_sparse(
         jnp.asarray(a), s, jnp.asarray(kmax), blocks=blocks, interpret=True))
     np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_sparse_gathered_update_matches_dense(seed):
+    """Gathered-B update form (the CD peel update) of the staircase
+    kernel == dense kernel == jnp oracle, incl. padding rows and
+    self-pair masking."""
+    from repro.core.graph import powerlaw_bipartite
+    from repro.kernels.butterfly_sparse import (
+        butterfly_update_pallas_sparse, column_extents,
+        gathered_tile_extents, row_extents,
+    )
+
+    bi, bj, bk = 8, 8, 8
+    g = powerlaw_bipartite(80, 50, 600, seed=seed).relabel_by_degree()
+    a = g.dense(pad_u=bi, pad_v=bk)
+    n_u = a.shape[0]
+    rng = np.random.default_rng(seed)
+    n_peel = int(rng.integers(1, 20))
+    n_pad = ((n_peel + bj - 1) // bj) * bj
+    rows = np.zeros(n_pad, np.int32)
+    rows[:n_peel] = rng.choice(g.n_u, size=n_peel, replace=False)
+    valid = (np.arange(n_pad) < n_peel)
+    a_peel = a[rows] * valid[:, None].astype(np.float32)
+
+    kmax_a = jnp.asarray(column_extents(a, bi, bk))
+    row_ext = jnp.asarray(row_extents(a, bk))
+    kmax_b = gathered_tile_extents(
+        row_ext, jnp.asarray(rows), jnp.asarray(valid), bj
+    )
+    ids = jnp.arange(n_u, dtype=jnp.int32)
+    got = np.asarray(butterfly_update_pallas_sparse(
+        jnp.asarray(a), jnp.asarray(a_peel),
+        jnp.asarray(valid.astype(np.float32)), ids, jnp.asarray(rows),
+        kmax_a, kmax_b, blocks=(bi, bj, bk), interpret=True,
+    ))
+    want = np.asarray(butterfly_support_pallas(
+        jnp.asarray(a), jnp.asarray(a_peel),
+        jnp.asarray(valid.astype(np.float32)), ids, jnp.asarray(rows),
+        blocks=(bi, bj, bk), interpret=True,
+    ))
+    oracle = np.asarray(butterfly_update(
+        jnp.asarray(a), jnp.asarray(a_peel),
+        jnp.asarray(valid.astype(np.float32)), ids, jnp.asarray(rows),
+        backend="xla",
+    ))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    np.testing.assert_allclose(got, oracle, rtol=0, atol=0)
+
+
+def test_sparse_update_via_ops_backend():
+    """ops.butterfly_update routes backend="interpret_sparse" (and the
+    conservative no-metadata fallback) to the staircase kernel."""
+    a = _rand_adj(16, 16, 0.4, seed=9)
+    s = jnp.ones(16, jnp.float32)
+    ids = jnp.arange(16, dtype=jnp.int32)
+    want = np.asarray(butterfly_update(
+        jnp.asarray(a), jnp.asarray(a), s, ids, ids, backend="xla"))
+    got = np.asarray(butterfly_update(
+        jnp.asarray(a), jnp.asarray(a), s, ids, ids,
+        backend="interpret_sparse", blocks=(8, 8, 8)))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_row_extents_consistent_with_column_extents():
+    from repro.core.graph import powerlaw_bipartite
+    from repro.kernels.butterfly_sparse import column_extents, row_extents
+
+    g = powerlaw_bipartite(100, 60, 700, seed=2).relabel_by_degree()
+    a = g.dense(pad_u=8, pad_v=8)
+    kmax = column_extents(a, 8, 8)
+    rext = row_extents(a, 8)
+    # tile extent == max over its rows' extents
+    np.testing.assert_array_equal(kmax, rext.reshape(-1, 8).max(axis=1))
 
 
 def test_sparse_kernel_skips_something_on_powerlaw():

@@ -1,7 +1,7 @@
 """RECEIPT correctness: engine vs the exact BUP oracle (Theorems 1-2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import BipartiteGraph, paper_fig1_graph
 from repro.core.peeling import bup_oracle, parb_metrics
@@ -191,6 +191,106 @@ def test_property_hub_graphs(n_u, n_hubs, seed):
     tb, _ = bup_oracle(g)
     tr, _ = tip_decompose(g, _cfg(num_partitions=4))
     np.testing.assert_array_equal(tb, tr)
+
+
+# --------------------------------------------------------------------- #
+# device-resident sweep loop vs the host-driven engine
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("case", ["er_small", "powerlaw", "vhub", "star",
+                                  "empty_edges"])
+def test_device_loop_equals_host_loop(case):
+    """The fused lax.while_loop engine must reproduce the host engine
+    EXACTLY: same theta, same rho/wedge/HUC/elision counters, same subset
+    structure — only the host round-trip count may differ."""
+    g = GRAPH_CASES[case]()
+    tr_d, s_d = tip_decompose(g, _cfg(device_loop=True))
+    tr_h, s_h = tip_decompose(g, _cfg(device_loop=False))
+    np.testing.assert_array_equal(tr_d, tr_h)
+    assert s_d.rho_cd == s_h.rho_cd
+    assert s_d.wedges_cd == s_h.wedges_cd
+    assert s_d.huc_recounts == s_h.huc_recounts
+    assert s_d.elided_sweeps == s_h.elided_sweeps
+    assert s_d.num_subsets == s_h.num_subsets
+    assert s_d.bounds == s_h.bounds
+    assert s_d.sweeps_per_subset == s_h.sweeps_per_subset
+
+
+def test_device_loop_reduces_host_round_trips():
+    """The point of the fused engine: O(1) blocking transfers per subset
+    instead of O(sweeps x ~4)."""
+    g = GRAPH_CASES["powerlaw"]()
+    _, s_d = tip_decompose(g, _cfg(device_loop=True))
+    _, s_h = tip_decompose(g, _cfg(device_loop=False))
+    assert s_d.host_round_trips * 5 <= s_h.host_round_trips
+    assert s_d.device_loop_calls >= s_d.num_subsets
+
+
+def test_device_loop_overflow_fallback_exact():
+    """A deliberately tiny peel buffer forces the bucket-overflow path
+    (host replays the oversized sweep, buffer doubles): still exact."""
+    g = GRAPH_CASES["powerlaw"]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(g, _cfg(device_loop=True, peel_width=8))
+    np.testing.assert_array_equal(tb, tr)
+    assert stats.overflow_fallbacks > 0
+
+
+def test_device_loop_matches_oracle_random():
+    """Randomized equivalence: device-resident CD theta == BUP oracle."""
+    rng = np.random.default_rng(123)
+    for trial in range(5):
+        n_u = int(rng.integers(5, 45))
+        n_v = int(rng.integers(4, 30))
+        a = rng.random((n_u, n_v)) < rng.uniform(0.05, 0.5)
+        eu, ev = np.nonzero(a)
+        g = BipartiteGraph.from_edges(n_u, n_v, eu, ev)
+        tb, _ = bup_oracle(g)
+        p = int(rng.integers(1, 9))
+        tr_d, s_d = tip_decompose(g, _cfg(num_partitions=p, device_loop=True))
+        tr_h, s_h = tip_decompose(g, _cfg(num_partitions=p, device_loop=False))
+        np.testing.assert_array_equal(tb, tr_d)
+        np.testing.assert_array_equal(tb, tr_h)
+        assert s_d.rho_cd == s_h.rho_cd, trial
+
+
+def test_sparse_backend_through_engine():
+    """The block-sparse staircase backend (gathered-B peel updates, HUC
+    recounts, counting) drives the full engine exactly."""
+    g = GRAPH_CASES["powerlaw"]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(g, _cfg(backend="interpret_sparse"))
+    np.testing.assert_array_equal(tb, tr)
+
+
+def test_parb_device_loop_equals_host():
+    """ParB baseline: device-resident min-schedule == host schedule,
+    including terminal-sweep elision."""
+    from repro.core.receipt import parb_tip_decompose
+
+    g = GRAPH_CASES["vhub"]()
+    tb, _ = bup_oracle(g)
+    td, sd = parb_tip_decompose(g, _cfg(device_loop=True))
+    th, sh = parb_tip_decompose(g, _cfg(device_loop=False))
+    np.testing.assert_array_equal(tb, td)
+    np.testing.assert_array_equal(tb, th)
+    assert sd.rho_cd == sh.rho_cd
+    assert sd.wedges_cd == sh.wedges_cd
+    assert sd.elided_sweeps == sh.elided_sweeps
+    assert sd.elided_sweeps >= 1          # terminal sweep skips the kernel
+    assert sd.host_round_trips < sh.host_round_trips
+
+
+def test_parb_device_loop_sweep_cap_reenters():
+    """A tiny max_sweeps forces repeated cap-exits of the device loop;
+    the driver must re-enter (the host schedule has no cap), not silently
+    return theta=0 for the survivors."""
+    from repro.core.receipt import parb_tip_decompose
+
+    g = GRAPH_CASES["er_small"]()
+    tb, _ = bup_oracle(g)
+    td, sd = parb_tip_decompose(g, _cfg(device_loop=True, max_sweeps=3))
+    np.testing.assert_array_equal(tb, td)
+    assert sd.device_loop_calls > 1
 
 
 def test_cd_checkpoint_restart_exact():

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.scheduler import lpt_assign, pack_by_shape
 from repro.train.checkpoint import CheckpointManager
