@@ -1,9 +1,22 @@
 #!/usr/bin/env bash
-# CI entrypoint: fast-fail import smoke, then the tier-1 suite on CPU
+# CI entrypoint: fast-fail import smoke, then the test suite on CPU
 # (Pallas kernels run through the interpreter / jnp oracle backends).
-# Usage: scripts/ci.sh [extra pytest args]
+#
+# Usage: scripts/ci.sh [quick|full] [extra pytest args]
+#   quick  (default) skip tests marked @pytest.mark.slow (-m "not slow")
+#          -- the per-push job; keeps the suite well under the runner
+#          timeout
+#   full   run everything, slow device-loop equivalence tests included
+#          -- the nightly job (and the tier-1 command:
+#          `PYTHONPATH=src python -m pytest -x -q` is equivalent)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+MODE="${1:-quick}"
+case "$MODE" in
+  quick|full) shift $(( $# > 0 ? 1 : 0 )) ;;
+  *) MODE="quick" ;;   # no mode given: remaining args go to pytest
+esac
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
@@ -29,5 +42,10 @@ if failed:
 print(f"ok: {len(list(root.rglob('*.py')))} modules import cleanly")
 EOF
 
-echo "== tier-1 test suite =="
-python -m pytest -x -q "$@"
+if [ "$MODE" = "quick" ]; then
+  echo "== test suite (quick: -m 'not slow') =="
+  python -m pytest -x -q -m "not slow" "$@"
+else
+  echo "== test suite (full, incl. slow device-loop equivalence) =="
+  python -m pytest -x -q "$@"
+fi

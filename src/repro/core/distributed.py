@@ -19,7 +19,10 @@ schedule cheap (ParB would issue it ~1.5M times on TrU).
 
 FD is a vmapped stack of independent subsets, one per device (subset dim
 sharded over ALL mesh axes): ZERO collectives, the paper's independence
-property preserved exactly.
+property preserved exactly.  ``distributed_fd_level_peel`` runs the
+unified core's batched LEVEL-peel loop (engine/peel_loop.py) per shard,
+with shape groups LPT-assigned to devices via scheduler.lpt_shard_plan
+(Graham's rule — the paper's workload-aware scheduling, Fig. 3).
 
 These functions serve three callers:
   * launch/dryrun.py — .lower()/.compile() on the 512-device meshes,
@@ -218,7 +221,7 @@ def cd_sweep_shardmap(mesh: Mesh, *, chunk: int = 16384):
 
 def cd_fused_loop(a, support, alive, ids, hi, lo, *, peel_width: int,
                   max_sweeps: int = 100_000, chunk: int = 16384):
-    """Device-resident CD range loop (the fused engine of core/receipt.py,
+    """Device-resident CD range loop (the fused engine of core/engine/,
     sharded): peel everything with support < ``hi`` until the range drains,
     entirely inside one ``lax.while_loop`` — the host issues ONE dispatch
     per subset instead of one (plus ~8 blocking transfers) per sweep.
@@ -322,6 +325,100 @@ def recount_step(a, alive, ids):
 
 
 # --------------------------------------------------------------------- #
+# FD level-peel (engine/peel_loop.batched_level_loop sharded over groups)
+# --------------------------------------------------------------------- #
+def shard_fd_stack(a_stack, sup0, nmem, lo, weights, n_shards):
+    """Reorder + pad an FD task stack so contiguous equal-size shards are
+    LPT-balanced (scheduler.lpt_shard_plan, Graham's 4/3 rule — the
+    paper's workload-aware scheduling mapped onto a mesh).
+
+    a_stack (G, M, C); sup0 (G, M); nmem (G,); lo (G,); weights (G,)
+    per-task wedge counts.  Returns (a, sup, alive, dv, lo, slots) where
+    the leading dim is ``n_shards * per_shard`` and ``slots[i]`` is the
+    original task index occupying stack slot i (-1 = padding slot, which
+    the level loop treats as an already-finished group).
+    """
+    from .scheduler import lpt_shard_plan
+
+    g_n, mm, cc = a_stack.shape
+    slots, per_shard = lpt_shard_plan(list(weights), n_shards)
+    n_slots = n_shards * per_shard
+    a = np.zeros((n_slots, mm, cc), np.float32)
+    sup = np.full((n_slots, mm), np.inf, np.float32)
+    alive = np.zeros((n_slots, mm), bool)
+    lo_out = np.zeros(n_slots, np.float32)
+    for s, t in enumerate(slots):
+        if t < 0:
+            continue
+        a[s] = a_stack[t]
+        sup[s] = sup0[t]
+        alive[s, : int(nmem[t])] = True
+        lo_out[s] = lo[t]
+    dv = a.sum(axis=1)
+    return a, sup, alive, dv, lo_out, np.asarray(slots)
+
+
+def fd_level_shardmap(mesh: Mesh, *, max_sweeps: int = 100_000):
+    """Batched level-peel with the group dim sharded over EVERY mesh axis:
+    each device runs the unified peel core's level loop on its local
+    shard with ZERO collectives (shard_map makes the paper's subset
+    independence explicit — each shard's while_loop exits as soon as ITS
+    groups drain, no global any(alive) all-reduce per sweep).
+
+    Returns a function (a, sup, alive, dv, lo) -> (theta, rho, wedges).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from .engine.peel_loop import batched_level_loop
+
+    all_axes = tuple(mesh.axis_names)
+
+    def local(a, sup, alive, dv, lo):
+        row_ext = jnp.zeros(a.shape[:2], jnp.int32)   # xla path ignores it
+        _sup, _alive, _dv, theta, rho, wedges, _sweeps = batched_level_loop(
+            a, row_ext, sup, alive, dv, lo,
+            backend="xla", blocks=(8, 8, 8),
+            peel_width=a.shape[1], max_sweeps=max_sweeps,
+            update_mode="b2",
+        )
+        return theta, rho, wedges
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(all_axes, None, None), P(all_axes, None),
+                  P(all_axes, None), P(all_axes, None), P(all_axes)),
+        out_specs=(P(all_axes, None), P(all_axes), P(all_axes)),
+        check_rep=False,
+    )
+
+
+def distributed_fd_level_peel(mesh: Mesh, a, sup, alive, dv, lo, *,
+                              max_sweeps: int = 100_000):
+    """Run the sharded FD level-peel on a live mesh.
+
+    Inputs are the ``shard_fd_stack`` layout (leading dim divisible by
+    ``mesh.size``).  Returns (theta, rho, wedges) per stack slot; the
+    caller maps slots back to tasks via the plan's ``slots`` array.
+    """
+    all_axes = tuple(mesh.axis_names)
+    stack = NamedSharding(mesh, P(all_axes, None, None))
+    vec = NamedSharding(mesh, P(all_axes, None))
+    g1 = NamedSharding(mesh, P(all_axes))
+    fn = fd_level_shardmap(mesh, max_sweeps=max_sweeps)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(stack, vec, vec, vec, g1),
+        out_shardings=(vec, g1, g1),
+    )
+    with mesh:
+        return jitted(
+            jnp.asarray(a, jnp.float32), jnp.asarray(sup, jnp.float32),
+            jnp.asarray(alive), jnp.asarray(dv, jnp.float32),
+            jnp.asarray(lo, jnp.float32),
+        )
+
+
+# --------------------------------------------------------------------- #
 # FD stack (independent subsets, one per device)
 # --------------------------------------------------------------------- #
 def fd_stack_step(a_stack, sup0, n_members, lo):
@@ -415,7 +512,7 @@ def distributed_cd_fused_loop(mesh: Mesh, a, support, alive, hi, lo, *,
                               peel_width: int, max_sweeps: int = 100_000,
                               chunk: int = 16384):
     """Run a whole device-resident CD range loop on a live mesh (one
-    dispatch; the multi-device twin of receipt.py's ``_cd_device_loop``).
+    dispatch; the multi-device twin of the engine's ``device_peel_loop``).
 
     Returns (support, alive, rho, overflow)."""
     sp = _specs(mesh)

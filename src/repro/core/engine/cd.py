@@ -1,0 +1,280 @@
+"""CD — coarse-grained decomposition (the paper's Alg. 3).
+
+Partitions U into subsets with non-overlapping tip-number ranges by
+running the unified peel core (`engine/peel_loop.py`) in **range-peel**
+mode, one device-resident ``while_loop`` per subset.  Host-side pieces:
+adaptive range determination (findHi on the per-subset support snapshot),
+DGM re-induction at subset boundaries, checkpointing, and the overflow
+replay through ``host_sweep``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...kernels import ops as kops
+from ..graph import BipartiteGraph
+from .peel_loop import (
+    _INF,
+    DeviceGraph,
+    ReceiptConfig,
+    RunStats,
+    bucket,
+    device_peel_loop,
+    host_sweep,
+    residual_dv,
+    support_all,
+)
+
+__all__ = ["receipt_cd", "cd_checkpoint_state", "find_hi_np"]
+
+
+def find_hi_np(support: np.ndarray, w: np.ndarray, alive: np.ndarray,
+               tgt: float) -> float:
+    """Adaptive range upper bound (Alg. 3 findHi) on the host snapshot.
+
+    Sort alive supports ascending, prefix-sum their wedge counts, pick the
+    smallest support whose cumulative wedge count reaches the target.
+    Falls back to max support + 1 (catch-all) when the target exceeds the
+    remaining wedge mass.  Runs on the per-subset host support snapshot
+    (which Alg. 3 needs anyway for the FD init vector), so it costs no
+    extra device round trip.
+    """
+    sup = np.where(alive, support, np.inf)
+    order = np.argsort(sup, kind="stable")
+    ws = np.where(alive, w, 0.0)[order]
+    cum = np.cumsum(ws)
+    hit = cum >= tgt
+    if hit.size and hit[-1]:
+        hi = sup[order][int(np.argmax(hit))]
+    else:
+        hi = float(np.max(np.where(alive, support, -np.inf)))
+    return float(hi) + 1.0
+
+
+def cd_checkpoint_state(subset_id, init_support, bounds, members, support_np,
+                        rem_wedges, scale, lo, i):
+    """CD loop state as a plain pytree — checkpointable through
+    train/checkpoint.py like any train state (fault tolerance for the
+    peeling engine itself; restart is exact because CD is deterministic
+    given this state)."""
+    return {
+        "subset_id": np.asarray(subset_id),
+        "init_support": np.asarray(init_support),
+        "bounds": np.asarray(bounds, np.float64),
+        "members": np.asarray(members),
+        "support": np.asarray(support_np, np.float64),
+        "rem_wedges": np.float64(rem_wedges),
+        "scale": np.float64(scale),
+        "lo": np.float64(lo),
+        "i": np.int64(i),
+    }
+
+
+def receipt_cd(
+    g: BipartiteGraph, cfg: ReceiptConfig, stats: RunStats,
+    *, checkpoint_cb=None, resume_state=None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Partition U into subsets with non-overlapping tip-number ranges.
+
+    Returns (subset_id[n_u], init_support[n_u], bounds[P+1], theta_hint)
+    where subset_id[u] in [0, P), init_support is the FD support
+    initialization vector (Alg. 3 line 7) and bounds[i] = theta(i+1) lower
+    bounds, bounds[-1] > theta_max.
+
+    With ``cfg.device_loop`` (default) each subset's sweep loop runs
+    device-resident (see ``device_peel_loop``); the host syncs ONCE per
+    subset to snapshot supports (needed for the FD init vector and findHi
+    anyway).  ``device_loop=False`` preserves the blocking host-driven
+    engine for apples-to-apples round-trip benchmarks.
+
+    checkpoint_cb(state): called with a cd_checkpoint_state pytree at
+    every subset boundary.  resume_state: continue an interrupted run
+    from such a state (tests/test_receipt.py::test_cd_checkpoint_restart).
+    """
+    backend = cfg.backend or kops.default_backend()
+    blocks = cfg.kernel_blocks
+    n_u = g.n_u
+    p_total = cfg.num_partitions
+
+    t0 = time.perf_counter()
+    if resume_state is not None:
+        st = resume_state
+        subset_id = np.asarray(st["subset_id"]).copy()
+        init_support = np.asarray(st["init_support"]).copy()
+        bounds = [float(b) for b in st["bounds"]]
+        members = np.asarray(st["members"])
+        dg = DeviceGraph(g, members, cfg)
+        stats.wedges_pvbcnt = g.counting_wedge_bound()
+        alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+        support = jnp.full(dg.rows_pad, _INF, cfg.dtype)
+        support = support.at[: dg.n_rows].set(
+            jnp.asarray(st["support"][: dg.n_rows], cfg.dtype)
+        )
+        dv = dg.dv0
+        sup_np = np.asarray(support, np.float64)
+        alive_np = np.asarray(alive)
+        stats.host_round_trips += 1
+        rem_wedges = float(st["rem_wedges"])
+        scale = float(st["scale"])
+        lo = float(st["lo"])
+        i = int(st["i"])
+    else:
+        subset_id = np.full(n_u, -1, np.int64)
+        init_support = np.zeros(n_u, np.float64)
+        bounds = [0.0]
+
+        dg = DeviceGraph(g, np.arange(n_u), cfg)
+        stats.wedges_pvbcnt = g.counting_wedge_bound()
+
+        # --- initial per-vertex counting (pvBcnt) ---------------------- #
+        sparse = backend in kops.SPARSE_BACKENDS
+        alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+        support = support_all(dg.a, alive, dg.ids,
+                              dg.kmax if sparse else None,
+                              backend=backend, blocks=blocks)
+        support = jnp.where(alive, support, _INF)
+        dv = dg.dv0
+        sup_np = np.asarray(support, np.float64)   # the blocking sync
+        alive_np = np.asarray(alive)
+        stats.host_round_trips += 1
+        stats.time_count = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        rem_wedges = dg.total_wedges
+        scale = 1.0
+        lo = 0.0
+        i = 0
+
+    peel_width = dg.initial_peel_width()
+    while alive_np.any():
+        if checkpoint_cb is not None:
+            live = np.where(alive_np)[0]
+            checkpoint_cb(cd_checkpoint_state(
+                subset_id, init_support, bounds, dg.members[live],
+                sup_np[live], rem_wedges, scale, lo, i,
+            ))
+        # final catch-all subset (paper: "puts all of them in U_{P+1}")
+        catch_all = i >= p_total - 1
+        tgt = np.inf if catch_all else max(rem_wedges / (p_total - i) * scale, 1.0)
+
+        # support snapshot -> FD init vector (Alg. 3 lines 6-7)
+        live_rows = np.where(alive_np)[0]
+        init_support[dg.members[live_rows]] = sup_np[live_rows]
+
+        if catch_all:
+            hi = float(np.max(np.where(alive_np, sup_np, -np.inf))) + 1.0
+        else:
+            hi = find_hi_np(sup_np, dg.w_np, alive_np, tgt)
+
+        sweeps = 0
+        covered_wedges = 0.0
+        if cfg.device_loop:
+            # -------- device-resident sweep loop (O(1) syncs) ---------- #
+            # the subset's FIRST sweep peels the whole initial range; its
+            # size is already known from the host snapshot, so size the
+            # peel buffer to fit it and overflow only on larger cascades
+            # (an explicit cfg.peel_width pins the initial width instead)
+            if cfg.peel_width is None:
+                n_first = int((alive_np & (sup_np < hi)).sum())
+                peel_width = max(peel_width, min(
+                    dg.rows_pad,
+                    bucket(max(n_first, blocks[1]), blocks[1]),
+                ))
+            while sweeps < cfg.max_sweeps:
+                (support, alive, dv, _th, peeled, d_rho, d_wedges, d_hucs,
+                 d_elided, d_covered, d_sweeps, ovf) = device_peel_loop(
+                    dg.a, dg.ids, dg.row_ext, dg.kmax, support, alive, dv,
+                    jnp.zeros(dg.rows_pad, jnp.float32), hi, lo, dg.c_rcnt,
+                    sweeps,
+                    backend=backend, blocks=blocks, use_huc=cfg.use_huc,
+                    peel_width=peel_width, max_sweeps=cfg.max_sweeps,
+                    minmode=False,
+                )
+                stats.device_loop_calls += 1
+                (peeled_np, alive_np, sup_f32, d_rho, d_wedges, d_hucs,
+                 d_elided, d_covered, d_sweeps, ovf_h) = jax.device_get(
+                    (peeled, alive, support, d_rho, d_wedges, d_hucs,
+                     d_elided, d_covered, d_sweeps, ovf))
+                stats.host_round_trips += 1
+                sup_np = np.asarray(sup_f32, np.float64)
+                stats.rho_cd += int(d_rho)
+                stats.wedges_cd += int(d_wedges)
+                stats.huc_recounts += int(d_hucs)
+                stats.elided_sweeps += int(d_elided)
+                sweeps = int(d_sweeps)        # cumulative (seeded by sweeps0)
+                covered_wedges += float(d_covered)
+                subset_id[dg.members[np.where(peeled_np)[0]]] = i
+                if not bool(ovf_h):
+                    break
+                # peel buffer overflow: replay this one sweep on the host
+                # at the precise bucket, then re-enter with a wider buffer
+                stats.overflow_fallbacks += 1
+                support, alive, info = host_sweep(
+                    dg, cfg, stats, support, alive, hi, lo, backend, blocks)
+                if info is not None:
+                    covered_wedges += info["c_peel"]
+                    sweeps += 1
+                    subset_id[dg.members[info["peel_np"].nonzero()[0]]] = i
+                dv = residual_dv(dg.a, alive)
+                sup_np = np.asarray(support, np.float64)
+                alive_np = np.asarray(alive)
+                stats.host_round_trips += 1
+                peel_width = min(dg.rows_pad, peel_width * 2)
+        else:
+            # -------- pre-PR engine: blocking host-driven sweeps ------- #
+            while sweeps < cfg.max_sweeps:
+                support, alive, info = host_sweep(
+                    dg, cfg, stats, support, alive, hi, lo, backend, blocks)
+                if info is None:
+                    break
+                sweeps += 1
+                covered_wedges += info["c_peel"]
+                subset_id[dg.members[info["peel_np"].nonzero()[0]]] = i
+            sup_np = np.asarray(support, np.float64)
+            alive_np = np.asarray(alive)
+            stats.host_round_trips += 1
+
+        stats.sweeps_per_subset.append(sweeps)
+        bounds.append(hi)
+        rem_wedges = max(rem_wedges - covered_wedges, 0.0)
+        if covered_wedges > 0 and not catch_all:
+            scale = min(1.0, tgt / covered_wedges)
+        lo = hi
+        i += 1
+        if catch_all:
+            break
+
+        # --- DGM: re-induce the residual graph into smaller buckets ---- #
+        n_alive = int(alive_np.sum())
+        if n_alive == 0:
+            break
+        if cfg.use_dgm and n_alive < cfg.dgm_row_threshold * dg.rows_pad:
+            live = np.where(alive_np)[0]
+            new_members = dg.members[live]
+            sup_keep = sup_np[live]
+            dg = DeviceGraph(g, new_members, cfg)
+            stats.dgm_compactions += 1
+            alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+            support = jnp.full(dg.rows_pad, _INF, cfg.dtype)
+            support = support.at[: dg.n_rows].set(
+                jnp.asarray(sup_keep, cfg.dtype)
+            )
+            dv = dg.dv0
+            alive_np = np.zeros(dg.rows_pad, bool)
+            alive_np[: dg.n_rows] = True
+            sup_np = np.full(dg.rows_pad, np.inf)
+            sup_np[: dg.n_rows] = sup_keep
+            rem_wedges = dg.total_wedges
+            peel_width = min(peel_width, dg.initial_peel_width())
+
+    stats.num_subsets = i
+    stats.bounds = [float(b) for b in bounds]
+    stats.time_cd = time.perf_counter() - t0
+    # every vertex must be assigned
+    assert (subset_id >= 0).all(), "CD left unassigned vertices"
+    return subset_id, init_support, np.asarray(bounds), None

@@ -1,0 +1,482 @@
+"""FD — fine-grained decomposition (the paper's Alg. 4) on the unified core.
+
+Each CD subset's induced subgraph is peeled independently.  Subsets are
+grouped into equal-padded-shape stacks (`core/scheduler.py` — the LPT /
+workload-aware scheduling analogue) and each stack is peeled by the
+unified peel core's **batched level-peel** loop
+(`engine/peel_loop.batched_level_loop`): every device sweep removes the
+whole current-minimum support level of every still-live subset in the
+stack — the ParButterfly / PBNG peel granularity, vmapped over the shape
+group and dispatched through the grouped butterfly kernels.
+
+Runtime structure (``fd_mode="level"``, the default):
+
+* **host first-level pre-peel** (``pre_peel_tasks``): the first level of
+  every subset is known from the host support snapshot, so its theta is
+  assigned host-side and the device stacks hold SURVIVORS only (the
+  catch-all subset typically shrinks severalfold); the level's delta
+  reaches the survivors through one grouped butterfly kernel call;
+* **one device dispatch + one blocking ``device_get`` per shape group**
+  (theta, per-subset sweep counts rho and dynamic wedge counters all ride
+  back in the same transfer);
+* **double-buffered group dispatch**: the host induces and stacks the
+  NEXT group's subgraphs while the device peels the current group (JAX
+  async dispatch; ``cfg.fd_overlap`` gates it for benchmarking);
+* ``RunStats.rho_fd`` counts actual level sweeps, ``RunStats.wedges_fd``
+  the dynamically traversed wedges (sum of per-sweep C_peel) — both were
+  previously static placeholders.
+
+The legacy engines are preserved as ``fd_mode="b2"`` (dense (M, M)
+shared-butterfly stacks, one-vertex-per-step ``fori_loop``) and
+``fd_mode="matvec"`` (recompute one B2 row per step): they are the
+equivalence comparators (tests/test_fd_engine.py) and the PR 1 baseline
+for benchmarks/bench_receipt.py.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...kernels import ops as kops
+from ...kernels.butterfly_sparse import batched_row_extents
+from ..graph import BipartiteGraph, pad_to_multiple
+from ..scheduler import pack_by_shape
+from .peel_loop import (
+    _INF,
+    ReceiptConfig,
+    RunStats,
+    batched_level_loop,
+    bucket,
+)
+
+__all__ = ["receipt_fd", "build_fd_tasks", "build_level_stack"]
+
+
+# ---------------------------------------------------------------------- #
+# legacy sequential peels (fd_mode="b2" / "matvec"; PR 1 comparators)
+# ---------------------------------------------------------------------- #
+def _fd_peel_b2(b2, sup0, n_members, lo):
+    """Exact sequential bottom-up peel of one padded subset (B2 mode).
+
+    b2: (M, M) pairwise shared butterflies (zero diag, zero on padding);
+    sup0: (M,) FD-initialized supports (+inf padding); returns theta (M,).
+    """
+    mm = b2.shape[0]
+
+    def body(t, st):
+        sup, alive, theta = st
+        masked = jnp.where(alive, sup, _INF)
+        u = jnp.argmin(masked)
+        th = jnp.maximum(masked[u], lo)
+        do = t < n_members
+        theta = jnp.where(do, theta.at[u].set(th), theta)
+        new_sup = jnp.maximum(sup - b2[u], th)
+        sup = jnp.where(do & alive, new_sup, sup)
+        alive = jnp.where(do, alive.at[u].set(False), alive)
+        return sup, alive, theta
+
+    alive0 = jnp.arange(mm) < n_members
+    theta0 = jnp.zeros(mm, sup0.dtype)
+    _, _, theta = jax.lax.fori_loop(0, mm, body, (sup0, alive0, theta0))
+    return theta
+
+
+_fd_peel_b2_vm = jax.jit(jax.vmap(_fd_peel_b2, in_axes=(0, 0, 0, 0)))
+
+
+def _fd_peel_matvec(a_sub, sup0, n_members, lo):
+    """Exact sequential peel recomputing one B2 row per step (matvec mode).
+
+    a_sub: (M, C) induced biadjacency; avoids materializing (M, M).
+    """
+    mm = a_sub.shape[0]
+
+    def body(t, st):
+        sup, alive, theta = st
+        masked = jnp.where(alive, sup, _INF)
+        u = jnp.argmin(masked)
+        th = jnp.maximum(masked[u], lo)
+        do = t < n_members
+        w_row = a_sub @ a_sub[u]                       # (M,) wedge counts
+        b2_row = w_row * (w_row - 1.0) * 0.5
+        b2_row = b2_row.at[u].set(0.0)
+        new_sup = jnp.maximum(sup - b2_row, th)
+        theta = jnp.where(do, theta.at[u].set(th), theta)
+        sup = jnp.where(do & alive, new_sup, sup)
+        alive = jnp.where(do, alive.at[u].set(False), alive)
+        return sup, alive, theta
+
+    alive0 = jnp.arange(mm) < n_members
+    theta0 = jnp.zeros(mm, sup0.dtype)
+    _, _, theta = jax.lax.fori_loop(0, mm, body, (sup0, alive0, theta0))
+    return theta
+
+
+_fd_peel_matvec_vm = jax.jit(jax.vmap(_fd_peel_matvec, in_axes=(0, 0, 0, 0)))
+
+
+# ---------------------------------------------------------------------- #
+# task construction + scheduling
+# ---------------------------------------------------------------------- #
+def build_fd_tasks(g: BipartiteGraph, subset_id: np.ndarray,
+                   bounds: np.ndarray, stats: RunStats) -> List[Dict]:
+    """Induce each subset's subgraph (the paper's "only traverse its
+    wedges" saving) and record per-subset size/wedge-bound stats."""
+    n_sub = int(subset_id.max()) + 1 if subset_id.size else 0
+    tasks = []
+    for i in range(n_sub):
+        members = np.where(subset_id == i)[0]
+        stats.subset_sizes.append(len(members))
+        if len(members) == 0:
+            stats.subset_wedges_fd.append(0)
+            continue
+        sub, _ = g.induced_on_u(members)
+        wsub = int(sub.wedge_counts_u().sum())
+        stats.subset_wedges_fd.append(wsub)
+        tasks.append(
+            dict(
+                members=members,
+                sub=sub,
+                lo=float(bounds[i]),
+                wedges=wsub,
+            )
+        )
+    return tasks
+
+
+def _aligns(cfg: ReceiptConfig, backend: str):
+    """Row/col padding multiples: kernel blocks for the pallas-family
+    backends, the legacy 8 for the pure-jnp oracle."""
+    bi, bj, bk = cfg.kernel_blocks
+    if backend == "xla":
+        return 8, 8, 8
+    return max(bi, bj), bk, bj
+
+
+def pre_peel_tasks(tasks: List[Dict], init_support: np.ndarray,
+                   theta: np.ndarray, stats: RunStats) -> List[Dict]:
+    """Host-side FIRST-LEVEL pre-peel (the CD first-sweep-sizing insight
+    applied to FD): a subset's first peel level is fully determined by
+    the host support snapshot — cap = max(min support, lo), level =
+    everyone at or below cap — so its theta (= cap, exact by the
+    simultaneous-peel argument) is assigned here, its wedge cost is
+    accounted here, and the DEVICE stack is built from the survivors
+    only.  On catch-all subsets the first level is the bulk of the
+    subset, so survivor compaction shrinks the padded stack (and the
+    B2/kernel contraction that dominates FD) by a large factor.
+
+    Mutates ``theta`` / ``stats`` (rho_fd += 1 and the level's dynamic
+    C_peel per non-empty task) and returns the survivor task list.
+    """
+    out = []
+    for t in tasks:
+        mems, sub, lo = t["members"], t["sub"], t["lo"]
+        sup = init_support[mems]
+        cap1 = max(float(sup.min()), lo) if len(sup) else lo
+        l1 = sup <= cap1
+        theta[mems[l1]] = cap1
+        # dynamic wedge cost of this sweep: colsum_L1 . max(dv - 1, 0)
+        dv_full = np.bincount(sub.edges_v, minlength=sub.n_v)
+        peel_e = l1[sub.edges_u]
+        colsum1 = np.bincount(sub.edges_v[peel_e], minlength=sub.n_v)
+        stats.wedges_fd += int(
+            (colsum1 * np.maximum(dv_full - 1, 0)).sum())
+        stats.rho_fd += 1
+        surv = np.where(~l1)[0]
+        if len(surv) == 0:
+            continue
+        out.append(dict(
+            t, surv=surv, l1=np.where(l1)[0], cap1=cap1,
+            sup_surv=sup[surv],
+        ))
+    return out
+
+
+def _level_pad(n: int, align: int) -> int:
+    """Level-stack padding: power-of-two-ish buckets.  Coarser buckets
+    merge more survivor subgraphs into one stack, and stack merging is
+    what amortizes the per-sweep loop overhead (sweeps are memory-bound
+    reads of W gathered rows, so the padded-flop penalty of pow2 buckets
+    stays secondary to running fewer, fatter level loops)."""
+    return bucket(n, align)
+
+
+def build_level_stack(group: List[Dict], cfg: ReceiptConfig,
+                      backend: str) -> Dict:
+    """Assemble one shape group into the batched level-peel stacks
+    (host-side work; overlapped with the previous group's device sweep
+    by the double-buffered driver).
+
+    Two stacks per group: the SURVIVOR stack ``a`` (G, mm, cc) the level
+    loop peels, and the first-level stack ``a_l1`` (G, w1, cc) whose
+    delta the launcher applies through one grouped butterfly kernel call
+    before entering the loop.  Group tasks must carry the
+    ``pre_peel_tasks`` fields (surv / l1 / cap1 / sup_surv).
+    """
+    row_align, col_align, w_align = _aligns(cfg, backend)
+    sparse = backend in kops.SPARSE_BACKENDS
+    n_g = len(group)
+    mm = _level_pad(max(len(t["surv"]) for t in group), row_align)
+    cc = _level_pad(max(max(t["sub"].n_v, 1) for t in group), col_align)
+    w1 = pad_to_multiple(max(len(t["l1"]) for t in group), w_align)
+
+    a = np.zeros((n_g, mm, cc), np.float32)
+    a_l1 = np.zeros((n_g, w1, cc), np.float32)
+    sup0 = np.full((n_g, mm), np.inf, np.float64)
+    nmem = np.zeros(n_g, np.int32)
+    n_l1 = np.zeros(n_g, np.int32)
+    los = np.zeros(n_g, np.float64)
+    cap1 = np.zeros(n_g, np.float64)
+    for k, t in enumerate(group):
+        surv, l1 = t["surv"], t["l1"]
+        nmem[k] = len(surv)
+        n_l1[k] = len(l1)
+        los[k] = t["lo"]
+        cap1[k] = t["cap1"]
+        sup0[k, : len(surv)] = t["sup_surv"]
+        s = t["sub"]
+        # scatter edges of survivor rows (compacted) and first-level rows
+        surv_pos = np.full(s.n_u, -1, np.int64)
+        surv_pos[surv] = np.arange(len(surv))
+        l1_pos = np.full(s.n_u, -1, np.int64)
+        l1_pos[l1] = np.arange(len(l1))
+        es = surv_pos[s.edges_u] >= 0
+        a[k, surv_pos[s.edges_u[es]], s.edges_v[es]] = 1.0
+        ep = l1_pos[s.edges_u] >= 0
+        a_l1[k, l1_pos[s.edges_u[ep]], s.edges_v[ep]] = 1.0
+
+    # support-update cost model (the HUC argument applied to FD): pay the
+    # (M, M) wedge contraction once when the B2 stack fits the budget,
+    # stream sweeps through the grouped butterfly kernel when it cannot
+    if cfg.fd_update_mode == "auto":
+        update_mode = ("b2" if n_g * mm * mm <= cfg.fd_b2_cells
+                       else "kernel")
+    else:
+        update_mode = cfg.fd_update_mode
+
+    if cfg.peel_width is not None:
+        peel_width = min(bucket(cfg.peel_width, w_align), mm)
+    else:
+        # post-first-level cascades are small, and a gathered sweep only
+        # touches W rows of A/B2 (sweeps are memory-bound, not
+        # flop-bound); oversized levels hit the on-device mask-form
+        # fallback, never the host
+        peel_width = min(bucket(max(mm // 8, w_align), w_align), mm)
+
+    dv0 = a.sum(axis=1)
+    alive0 = np.arange(mm)[None, :] < nmem[:, None]
+    bk = cfg.kernel_blocks[2]
+    row_ext = (batched_row_extents(a, bk)
+               if sparse else np.zeros((n_g, mm), np.int32))
+    row_ext_l1 = (batched_row_extents(a_l1, bk)
+                  if sparse else np.zeros((n_g, w1), np.int32))
+    return dict(
+        group=group, a=a, a_l1=a_l1, sup0=sup0, nmem=nmem, n_l1=n_l1,
+        los=los, cap1=cap1, dv0=dv0, alive0=alive0, row_ext=row_ext,
+        row_ext_l1=row_ext_l1, mm=mm, cc=cc, w1=w1,
+        peel_width=peel_width, update_mode=update_mode,
+        padded_cells=n_g * (mm + w1) * cc,
+        used_cells=int(sum(len(t["members"]) * max(t["sub"].n_v, 1)
+                           for t in group)),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# FD driver
+# ---------------------------------------------------------------------- #
+def receipt_fd(
+    g: BipartiteGraph,
+    subset_id: np.ndarray,
+    init_support: np.ndarray,
+    bounds: np.ndarray,
+    cfg: ReceiptConfig,
+    stats: RunStats,
+) -> np.ndarray:
+    """Exact tip numbers by independent peeling of induced subgraphs."""
+    if cfg.fd_mode not in ("level", "b2", "matvec"):
+        raise ValueError(f"unknown fd_mode {cfg.fd_mode!r}")
+    t0 = time.perf_counter()
+    theta = np.zeros(g.n_u, np.float64)
+    backend = cfg.backend or kops.default_backend()
+
+    tasks = build_fd_tasks(g, subset_id, bounds, stats)
+    if cfg.fd_mode != "level":
+        stats.wedges_fd += int(sum(t["wedges"] for t in tasks))
+
+    if cfg.fd_mode == "level":
+        theta = _run_level_groups(tasks, init_support, cfg, backend,
+                                  stats, theta)
+    else:
+        # workload-aware scheduling: equal-padded stacks (LPT analog)
+        groups = pack_by_shape(
+            tasks,
+            size_of=lambda t: (len(t["members"]), max(t["sub"].n_v, 1)),
+            weight_of=lambda t: t["wedges"],
+            bucket=lambda n: bucket(n, 8),
+        )
+        stats.fd_groups = len(groups)
+        theta = _run_legacy_groups(groups, init_support, cfg, stats, theta)
+
+    stats.time_fd = time.perf_counter() - t0
+    return theta
+
+
+def _run_level_groups(tasks, init_support, cfg, backend, stats, theta):
+    """Pre-peel first levels on the host, group the SURVIVOR subgraphs by
+    padded shape, and dispatch each group through the batched level-peel
+    loop — double-buffering host stack assembly against device compute."""
+    blocks = cfg.kernel_blocks
+    row_align, col_align, _ = _aligns(cfg, backend)
+    sparse = backend in kops.SPARSE_BACKENDS
+
+    tasks = pre_peel_tasks(tasks, init_support, theta, stats)
+    groups = pack_by_shape(
+        tasks,
+        size_of=lambda t: (len(t["surv"]), max(t["sub"].n_v, 1)),
+        weight_of=lambda t: t["wedges"],
+        bucket=lambda n: _level_pad(n, row_align),
+        bucket_cols=lambda n: _level_pad(n, col_align),
+    )
+    stats.fd_groups = len(groups)
+
+    padded = used = 0
+    pending = None           # (built, device outputs) one group in flight
+
+    def launch(built):
+        g_n, mm, w1 = built["a"].shape[0], built["mm"], built["w1"]
+        a_dev = jnp.asarray(built["a"], cfg.dtype)
+        sup_dev = jnp.asarray(built["sup0"], cfg.dtype)
+        alive_dev = jnp.asarray(built["alive0"])
+        dv_dev = jnp.asarray(built["dv0"], jnp.float32)
+        lo_dev = jnp.asarray(built["los"], jnp.float32)
+        rext_dev = jnp.asarray(built["row_ext"])
+        # first-level delta: ONE grouped kernel call sized to survivors
+        # (output side) x first level (gathered side)
+        a_l1 = jnp.asarray(built["a_l1"], cfg.dtype)
+        valid1 = (jnp.arange(w1)[None, :]
+                  < jnp.asarray(built["n_l1"])[:, None])
+        ids_s = jnp.broadcast_to(
+            jnp.arange(mm, dtype=jnp.int32)[None, :], (g_n, mm))
+        ids_l1 = jnp.broadcast_to(
+            mm + jnp.arange(w1, dtype=jnp.int32)[None, :], (g_n, w1))
+        if sparse:
+            bi, bj, _bk = blocks
+            kma = rext_dev.reshape(g_n, -1, bi).max(axis=2).astype(jnp.int32)
+            kmb = jnp.asarray(built["row_ext_l1"]).reshape(
+                g_n, -1, bj).max(axis=2).astype(jnp.int32)
+        else:
+            kma = kmb = None
+        delta1 = kops.butterfly_update_batched(
+            a_dev, a_l1, valid1, ids_s, ids_l1,
+            backend=backend, blocks=blocks, kmax_a=kma, kmax_b=kmb,
+        )
+        cap1 = jnp.asarray(built["cap1"], cfg.dtype)
+        sup1 = jnp.maximum(sup_dev - delta1, cap1[:, None])
+        out = batched_level_loop(
+            a_dev, rext_dev, sup1, alive_dev, dv_dev, lo_dev,
+            backend=backend, blocks=blocks,
+            peel_width=built["peel_width"], max_sweeps=cfg.max_sweeps,
+            update_mode=built["update_mode"],
+        )
+        stats.device_loop_calls += 1
+        built["_loop_args"] = (a_dev, rext_dev, lo_dev)
+        return out
+
+    def drain(built, out):
+        # one blocking sync per group in the common case; a loop that
+        # exits via the max_sweeps safety valve with survivors left is
+        # re-entered (the valve caps ONE invocation, not the schedule —
+        # same contract as the CD and ParB drivers)
+        th_acc = None
+        prev_alive = built["alive0"]
+        while True:
+            sup, alive, dv, th, rho, wedges, _sweeps = out
+            th_h, alive_h, rho_h, wedges_h = jax.device_get(
+                (th, alive, rho, wedges))
+            stats.host_round_trips += 1
+            d_rho = int(np.asarray(rho_h).sum())
+            stats.rho_fd += d_rho
+            stats.wedges_fd += int(np.asarray(wedges_h, np.float64).sum())
+            newly_dead = prev_alive & ~alive_h
+            th_h = np.asarray(th_h, np.float64)
+            th_acc = (np.where(newly_dead, th_h, th_acc)
+                      if th_acc is not None
+                      else np.where(newly_dead, th_h, 0.0))
+            if not alive_h.any() or d_rho == 0:
+                break
+            prev_alive = alive_h
+            a_dev, rext_dev, lo_dev = built["_loop_args"]
+            out = batched_level_loop(
+                a_dev, rext_dev, sup, alive, dv, lo_dev,
+                backend=backend, blocks=blocks,
+                peel_width=built["peel_width"], max_sweeps=cfg.max_sweeps,
+                update_mode=built["update_mode"],
+            )
+            stats.device_loop_calls += 1
+        for k, t in enumerate(built["group"]):
+            theta[t["members"][t["surv"]]] = th_acc[k, : built["nmem"][k]]
+
+    for group in groups:
+        built = build_level_stack(group, cfg, backend)
+        padded += built["padded_cells"]
+        used += built["used_cells"]
+        out = launch(built)                     # async dispatch
+        if pending is not None:
+            drain(*pending)
+        if cfg.fd_overlap:
+            pending = (built, out)              # fetch AFTER next build
+        else:
+            drain(built, out)
+    if pending is not None:
+        drain(*pending)
+
+    stats.fd_padding_waste = 1.0 - used / padded if padded else 0.0
+    return theta
+
+
+def _run_legacy_groups(groups, init_support, cfg, stats, theta):
+    """PR 1 engines: vmapped one-vertex-per-step sequential peels."""
+    padded = used = 0
+    for group in groups:
+        mm = max(bucket(max(len(t["members"]) for t in group), 8), 8)
+        cc = max(bucket(max(t["sub"].n_v for t in group), 8), 8)
+        n_g = len(group)
+        sup0 = np.full((n_g, mm), np.inf, np.float64)
+        nmem = np.zeros(n_g, np.int32)
+        los = np.zeros(n_g, np.float64)
+        a_stack = np.zeros((n_g, mm, cc), np.float32)
+        for k, t in enumerate(group):
+            mems = t["members"]
+            nmem[k] = len(mems)
+            los[k] = t["lo"]
+            sup0[k, : len(mems)] = init_support[mems]
+            s = t["sub"]
+            a_stack[k, s.edges_u, s.edges_v] = 1.0
+        padded += n_g * mm * cc
+        used += int(sum(len(t["members"]) * max(t["sub"].n_v, 1)
+                        for t in group))
+
+        a_dev = jnp.asarray(a_stack, cfg.dtype)
+        sup_dev = jnp.asarray(sup0, cfg.dtype)
+        nm_dev = jnp.asarray(nmem)
+        lo_dev = jnp.asarray(los, cfg.dtype)
+        if cfg.fd_mode == "b2":
+            w = jnp.einsum("gmc,gnc->gmn", a_dev, a_dev)
+            b2 = w * (w - 1.0) * 0.5
+            eye = jnp.eye(mm, dtype=cfg.dtype)
+            b2 = b2 * (1.0 - eye)[None]
+            th = _fd_peel_b2_vm(b2, sup_dev, nm_dev, lo_dev)
+        else:
+            th = _fd_peel_matvec_vm(a_dev, sup_dev, nm_dev, lo_dev)
+        th_np = np.asarray(th, np.float64)
+        stats.host_round_trips += 1
+        stats.rho_fd += int(nmem.sum())       # one sync-round per peel step
+        for k, t in enumerate(group):
+            theta[t["members"]] = th_np[k, : nmem[k]]
+
+    stats.fd_padding_waste = 1.0 - used / padded if padded else 0.0
+    return theta

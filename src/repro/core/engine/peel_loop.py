@@ -1,0 +1,708 @@
+"""The unified device-resident peel core (DESIGN.md section 2).
+
+ONE parameterized sweep engine drives every peel schedule in the repo:
+
+* **CD range-peel** (Alg. 3): peel everything with support < ``hi`` until
+  the range drains; support updates cap at ``lo`` = theta(i).
+  ``device_peel_loop(minmode=False)`` — used by `engine/cd.py`.
+* **ParB min-peel** (baseline): each sweep peels the current
+  minimum-support set; threshold recomputed on device per sweep.
+  ``device_peel_loop(minmode=True, lo=0)`` — used by `engine/baselines.py`.
+* **FD level-peel** (Alg. 4, ParButterfly/PBNG granularity): peel the
+  entire current-minimum support *level* per sweep, batched over a vmap
+  stack of independent induced subgraphs.  ``batched_level_loop`` — used
+  by `engine/fd.py`.  Level-peel is min-peel with a per-subset floor:
+  the threshold is ``cap = max(min support, lo_subset)`` so every level
+  below the subset's theta lower bound collapses into one sweep (exact:
+  all such vertices have tip number exactly ``cap``, and survivors floor
+  at ``cap`` either way — the ParB simultaneous-peel argument).
+
+The sweep-body LOGIC is shared, not duplicated: ``level_threshold``,
+``select_peel``, ``apply_delta``, ``record_theta`` and ``peel_cost``
+operate on the LAST axis with arbitrary leading batch dims, so the
+single-graph loop (shape ``(M,)`` state) and the batched loop (shape
+``(G, M)`` state) run the same code.  What legitimately differs is
+control flow: the single-graph loop branches per sweep with ``lax.cond``
+(HUC peel-vs-recount, terminal-sweep elision, peel-buffer overflow —
+scalar predicates), while the batched loop replaces data-dependent
+branching with masking (per-group predicates cannot drive ``lax.cond``)
+and needs neither HUC nor overflow: a level that exceeds the gather
+buffer falls back to the mask-form kernel *on device* (a scalar
+any-group cond), never to the host.
+
+Support updates route through the Pallas butterfly kernels: the
+single-graph loop through ``kernels.ops.butterfly_update`` and the
+batched loop through the grouped entry point
+``kernels.ops.butterfly_update_batched`` (leading batch dim over stacked
+subsets, staircase extents per group member for the sparse backends).
+
+`DeviceGraph` (the bucketed residual-graph container) and ``host_sweep``
+(the blocking host-driven sweep: pre-PR engine, overflow fallback and
+bench comparator) complete the module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...kernels import ops as kops
+from ...kernels.butterfly_sparse import (
+    batched_gathered_tile_extents,
+    gathered_tile_extents,
+    row_extents,
+)
+from ..graph import BipartiteGraph
+
+__all__ = [
+    "ReceiptConfig",
+    "RunStats",
+    "bucket",
+    "DeviceGraph",
+    "device_peel_loop",
+    "batched_level_loop",
+    "host_sweep",
+    "support_all",
+    "support_delta",
+    "sweep_info",
+    "residual_dv",
+    "apply_delta",
+    "level_threshold",
+    "select_peel",
+    "record_theta",
+    "peel_cost",
+]
+
+_INF = jnp.inf
+
+
+# ---------------------------------------------------------------------- #
+# config / stats
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ReceiptConfig:
+    num_partitions: int = 8                  # P
+    backend: Optional[str] = None            # kernel backend (None = auto)
+    kernel_blocks: Tuple[int, int, int] = (128, 128, 512)
+    use_huc: bool = True
+    use_dgm: bool = True
+    degree_sort: bool = True                 # Wang et al. relabel (tile density)
+    dgm_row_threshold: float = 0.7           # re-induce when alive < thresh*rows
+    fd_mode: str = "level"                   # "level" (batched level-peel)
+    #                                        # | "b2" | "matvec" (legacy seq)
+    dtype: Any = jnp.float32
+    max_sweeps: int = 100_000                # safety valve
+    device_loop: bool = True                 # fused lax.while_loop sweep engine
+    peel_width: Optional[int] = None         # device peel buffer (None = auto)
+    fd_overlap: bool = True                  # double-buffered FD group dispatch
+    fd_update_mode: str = "auto"             # level-peel support updates:
+    #   "auto"   cost model: precompute the (G, M, M) B2 stack when it fits
+    #            fd_b2_cells, else the grouped butterfly kernel (the HUC
+    #            argument applied to FD: pay the wedge contraction ONCE
+    #            when memory permits, stream it through the kernel when not)
+    #   "b2"     always precompute; "kernel" always stream (scale path)
+    fd_b2_cells: int = 1 << 24               # B2-stack budget: total cells
+    #                                        # (G * M * M) materialized per
+    #                                        # group stack
+
+
+@dataclasses.dataclass
+class RunStats:
+    """The paper's evaluation counters (Table 3 / Figs 5-9).
+
+    ``rho_fd`` counts FD peel sweeps: level-peel sweeps summed over
+    subsets in ``fd_mode="level"``, sequential peel steps (one per
+    member) in the legacy modes.  ``wedges_fd`` is the number of wedges
+    DYNAMICALLY traversed by the FD level-peel loop (sum of per-sweep
+    C_peel); the legacy modes keep the static induced-subgraph bound.
+    ``subset_wedges_fd`` always records the static per-subset bound —
+    it is the scheduler's workload proxy, known before peeling.
+    """
+
+    rho_cd: int = 0                 # CD sync rounds (peel sweeps)
+    rho_fd: int = 0                 # FD peel sweeps (see class docstring)
+    sweeps_per_subset: List[int] = dataclasses.field(default_factory=list)
+    wedges_pvbcnt: int = 0          # counting bound sum_E min(du, dv)
+    wedges_cd: int = 0              # wedges traversed peeling in CD
+    wedges_fd: int = 0              # wedges traversed in FD (see docstring)
+    huc_recounts: int = 0
+    dgm_compactions: int = 0
+    elided_sweeps: int = 0          # terminal-sweep elision (beyond-paper)
+    num_subsets: int = 0
+    bounds: List[int] = dataclasses.field(default_factory=list)
+    subset_sizes: List[int] = dataclasses.field(default_factory=list)
+    subset_wedges_fd: List[int] = dataclasses.field(default_factory=list)
+    host_round_trips: int = 0       # blocking device->host transfers
+    device_loop_calls: int = 0      # lax.while_loop invocations
+    overflow_fallbacks: int = 0     # peel buffer overflows -> host sweeps
+    fd_groups: int = 0              # FD shape groups dispatched
+    fd_padding_waste: float = 0.0   # 1 - used/(padded) cells of FD stacks
+    time_count: float = 0.0
+    time_cd: float = 0.0
+    time_fd: float = 0.0
+
+    @property
+    def wedges_total(self) -> int:
+        return self.wedges_pvbcnt + self.wedges_cd + self.wedges_fd
+
+
+# ---------------------------------------------------------------------- #
+# shape bucketing
+# ---------------------------------------------------------------------- #
+def bucket(n: int, block: int) -> int:
+    """Power-of-two-ish bucket >= n, multiple of ``block`` (bounds the
+    number of distinct jit shapes to O(log n))."""
+    b = block
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------- #
+# jitted device primitives (cached per bucketed shape)
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def support_all(a, alive, ids, kmax, *, backend, blocks):
+    """HUC recount / initial count: support of every row w.r.t. alive rows."""
+    return kops.butterfly_update(
+        a, a, alive.astype(a.dtype), ids, ids, backend=backend, blocks=blocks,
+        kmax_a=kmax, kmax_b=kmax,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def support_delta(a, a_peel, valid, ids, ids_peel, kmax_a, kmax_b, *,
+                  backend, blocks):
+    """CD peel update: delta[u'] = sum_{u in S} C(W[u, u'], 2)."""
+    return kops.butterfly_update(
+        a, a_peel, valid.astype(a.dtype), ids, ids_peel,
+        backend=backend, blocks=blocks, kmax_a=kmax_a, kmax_b=kmax_b,
+    )
+
+
+@jax.jit
+def sweep_info(a, support, alive, hi):
+    """Host-path sweep selection (pre-PR engine): recomputes the residual
+    V-degrees and per-row wedge counts with two dense contractions.
+
+    Returns (peel_mask, n_peel, c_peel) where c_peel is the dynamic wedge
+    cost  sum_{u in S} sum_{v in N_u} (d_v - 1)  of peeling S in the
+    residual graph (HUC's C_peel).
+    """
+    peel = alive & (support < hi)
+    dv = a.T @ alive.astype(a.dtype)                 # residual V degrees
+    wcur = a @ jnp.maximum(dv - 1.0, 0.0)            # per-row residual wedges
+    c_peel = jnp.sum(jnp.where(peel, wcur, 0.0))
+    return peel, jnp.sum(peel), c_peel
+
+
+@jax.jit
+def residual_dv(a, alive):
+    """Residual V degrees (used to re-seed the incremental vector after a
+    host-path fallback sweep or a checkpoint resume)."""
+    return a.T @ alive.astype(a.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# shared sweep-body pieces (last-axis semantics; leading dims broadcast,
+# so the SAME code runs shape-(M,) single-graph and shape-(G, M) batched)
+# ---------------------------------------------------------------------- #
+def level_threshold(support, alive, lo):
+    """Min-peel threshold: cap = max(min alive support, lo), hi = cap + 1.
+
+    ``lo = 0`` gives the ParB schedule (supports are non-negative);
+    a per-subset ``lo`` gives the FD level-peel schedule (sub-``lo``
+    levels collapse into one exact sweep).  Dead batch members yield
+    cap = inf, which makes every downstream piece a no-op.
+    """
+    mn = jnp.min(jnp.where(alive, support, _INF), axis=-1)
+    cap = jnp.maximum(mn, lo)
+    return cap + 1.0, cap
+
+
+def select_peel(support, alive, hi):
+    """Peel set of one sweep: alive rows with support below ``hi``."""
+    return alive & (support < jnp.expand_dims(hi, -1))
+
+
+@jax.jit
+def apply_delta(support, alive, peel, delta, lo):
+    """Alg. 2 update with the Alg. 3 range cap: cap at theta(i) = lo."""
+    alive_after = alive & ~peel
+    cap = jnp.expand_dims(jnp.asarray(lo), -1)
+    sup = jnp.where(alive_after, jnp.maximum(support - delta, cap), support)
+    return sup, alive_after
+
+
+def record_theta(theta, peel, cap):
+    """Min-peel theta recording: every peeled row gets the sweep's cap."""
+    return jnp.where(peel, jnp.expand_dims(cap, -1), theta)
+
+
+def peel_cost(colsum, dv):
+    """Dynamic wedge cost of a peel set from its column sums:
+    C_peel = colsum_S . max(dv - 1, 0)  (no per-row wedge vector needed)."""
+    return jnp.sum(colsum * jnp.maximum(dv - 1.0, 0.0), axis=-1)
+
+
+# ---------------------------------------------------------------------- #
+# single-graph device-resident sweep loop (CD range-peel / ParB min-peel)
+# ---------------------------------------------------------------------- #
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "blocks", "use_huc", "peel_width",
+                     "max_sweeps", "minmode"),
+)
+def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
+                     hi, lo, c_rcnt, sweeps0=0, *, backend, blocks, use_huc,
+                     peel_width, max_sweeps, minmode):
+    """Run an entire peel-sweep loop on device (``jax.lax.while_loop``).
+
+    Two schedules share the body:
+
+    * ``minmode=False`` (RECEIPT CD, Alg. 3): peel everything with
+      support < ``hi`` until the range drains; support updates cap at
+      ``lo`` = theta(i).
+    * ``minmode=True``  (ParB baseline & FD single-subset fallback):
+      each sweep peels the current minimum-support level; ``hi``/``cap``
+      are recomputed per sweep as ``level_threshold(support, alive, lo)``
+      and ``theta`` records the peel value.  ``lo = 0`` reproduces ParB
+      exactly; a positive ``lo`` gives FD level-peel semantics.
+
+    The peel set is gathered into a fixed (``peel_width``, n_v) buffer.
+    A sweep whose peel set exceeds the buffer sets the overflow flag and
+    exits WITHOUT applying the sweep; the host replays it at the precise
+    bucket and re-enters with a doubled buffer.  Residual V-degrees ``dv``
+    are maintained incrementally (peeled rows' column sums are subtracted)
+    so no sweep recomputes a dense ``a.T @ alive`` contraction.
+
+    Returns the full carried state; the caller fetches it in ONE blocking
+    transfer: (support, alive, dv, theta, peeled, rho, wedges, hucs,
+    elided, covered, sweeps, overflow).  ``sweeps`` counts from the traced
+    ``sweeps0`` (CUMULATIVE across overflow re-entries) so the
+    ``max_sweeps`` safety valve caps the subset total exactly like the
+    host engine; ``rho`` counts this invocation only.
+
+    Counter exactness: wedge counters accumulate in f32 and are exact
+    while every partial sum stays below 2^24 (DESIGN.md section 8).
+    """
+    sparse = backend in kops.SPARSE_BACKENDS
+    i32 = jnp.int32
+    f32 = jnp.float32
+    hi = jnp.asarray(hi, f32)
+    lo = jnp.asarray(lo, f32)
+    c_rcnt = jnp.asarray(c_rcnt, f32)
+
+    def hi_cap(support, alive):
+        if minmode:
+            return level_threshold(support, alive, lo)
+        return hi, lo
+
+    def cond_fn(st):
+        support, alive = st[0], st[1]
+        sweeps, ovf = st[10], st[11]
+        hi_cur, _ = hi_cap(support, alive)
+        return (
+            jnp.any(select_peel(support, alive, hi_cur))
+            & (sweeps < max_sweeps)
+            & ~ovf
+        )
+
+    def body_fn(st):
+        (support, alive, dv, theta, peeled, rho, wedges, hucs, elided,
+         covered, sweeps, ovf) = st
+        hi_cur, cap = hi_cap(support, alive)
+        peel = select_peel(support, alive, hi_cur)
+        n_peel = jnp.sum(peel)
+        is_elide = jnp.sum(alive) == n_peel
+
+        def br_elide(support, alive, dv, theta):
+            # terminal-sweep elision (beyond-paper, DESIGN.md): a sweep
+            # that peels EVERY survivor needs no update kernel — and no
+            # peel buffer either (checked BEFORE overflow): the full
+            # peel set's column sums are dv itself, so
+            # C_peel = dv . max(dv-1, 0) with no gather at all
+            c_peel = peel_cost(dv, dv)
+            theta2 = record_theta(theta, peel, cap) if minmode else theta
+            return (support, alive & ~peel, jnp.zeros_like(dv), theta2,
+                    peeled | peel, rho + 1, wedges, hucs, elided + 1,
+                    covered + c_peel, sweeps + 1, ovf)
+
+        def on_overflow(support, alive, dv, theta):
+            return (support, alive, dv, theta, peeled, rho, wedges, hucs,
+                    elided, covered, sweeps, jnp.bool_(True))
+
+        def do_sweep(support, alive, dv, theta):
+            rows = jnp.nonzero(peel, size=peel_width, fill_value=0)[0]
+            rows = rows.astype(jnp.int32)
+            valid = jnp.arange(peel_width) < n_peel
+            a_peel = a[rows] * valid[:, None].astype(a.dtype)
+            # incremental residual degrees: peeled rows' column sums
+            colsum = valid.astype(f32) @ a_peel.astype(f32)
+            c_peel = peel_cost(colsum, dv)
+
+            def br_peel(sup, alv):
+                if sparse:
+                    kb = gathered_tile_extents(row_ext, rows, valid,
+                                               blocks[1])
+                else:
+                    kb = None
+                delta = support_delta(
+                    a, a_peel, valid, ids, rows, kmax if sparse else None,
+                    kb, backend=backend, blocks=blocks,
+                )
+                s2, alv2 = apply_delta(sup, alv, peel, delta, cap)
+                return jnp.where(alv2, s2, _INF), alv2
+
+            if use_huc and not minmode:
+                use_rec = c_peel > c_rcnt
+
+                def br_recount(sup, alv):
+                    alv2 = alv & ~peel
+                    s2 = support_all(
+                        a, alv2, ids, kmax if sparse else None,
+                        backend=backend, blocks=blocks,
+                    )
+                    return jnp.where(alv2, jnp.maximum(s2, cap), _INF), alv2
+
+                support2, alive2 = jax.lax.cond(
+                    use_rec, br_recount, br_peel, support, alive
+                )
+            else:
+                use_rec = jnp.bool_(False)
+                support2, alive2 = br_peel(support, alive)
+
+            wedges2 = wedges + jnp.where(use_rec, c_rcnt, c_peel)
+            theta2 = record_theta(theta, peel, cap) if minmode else theta
+            return (
+                support2, alive2, dv - colsum, theta2, peeled | peel,
+                rho + 1, wedges2, hucs + use_rec.astype(i32),
+                elided, covered + c_peel, sweeps + 1, ovf,
+            )
+
+        def non_elide(support, alive, dv, theta):
+            return jax.lax.cond(
+                n_peel > peel_width, on_overflow, do_sweep,
+                support, alive, dv, theta,
+            )
+
+        return jax.lax.cond(
+            is_elide, br_elide, non_elide, support, alive, dv, theta,
+        )
+
+    state0 = (
+        support, alive, dv, theta, jnp.zeros_like(alive),
+        i32(0), f32(0), i32(0), i32(0), f32(0),
+        jnp.asarray(sweeps0, i32), jnp.bool_(False),
+    )
+    return jax.lax.while_loop(cond_fn, body_fn, state0)
+
+
+# ---------------------------------------------------------------------- #
+# batched level-peel loop (FD: a stack of independent subsets)
+# ---------------------------------------------------------------------- #
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "blocks", "peel_width", "max_sweeps",
+                     "update_mode"),
+)
+def batched_level_loop(a, row_ext, support, alive, dv, lo, *,
+                       backend, blocks, peel_width, max_sweeps,
+                       update_mode="kernel"):
+    """Peel a stack of G independent subsets by whole support levels.
+
+    One ``lax.while_loop`` carries the whole stack; each sweep peels, in
+    EVERY still-live group, the entire current-minimum support level
+    (``level_threshold`` with the group's theta lower bound ``lo[g]``).
+    This is the ParButterfly/PBNG peel granularity inside a subset,
+    batched over the scheduler's shape group — G subsets x L levels
+    collapse into max_g(L_g) device sweeps and ONE host sync.
+
+    a:       (G, M, C)  stacked induced biadjacencies (0/1)
+    row_ext: (G, M)     int32 per-row staircase extents (sparse backends;
+                        pass zeros otherwise — it is ignored)
+    support: (G, M)     FD-initialized supports (+inf on padding rows)
+    alive:   (G, M)     bool (False on padding rows)
+    dv:      (G, C)     residual V-degrees of each induced subgraph
+    lo:      (G,)       per-subset theta lower bounds (CD range floors)
+
+    The peel level is gathered into a fixed (G, ``peel_width``, C) buffer
+    and dispatched through the grouped butterfly kernel
+    (``butterfly_update_batched``; per-group staircase extents on the
+    sparse backends).  A sweep where ANY group's level exceeds the buffer
+    falls back — on device, via a scalar ``lax.cond`` — to the mask-form
+    kernel (B = A, s = peel mask): same output, no gather, no host
+    involvement.  ``peel_width >= M`` selects the mask form statically.
+
+    ``update_mode`` selects how a sweep's support delta is produced:
+
+    * ``"kernel"`` — stream every sweep through the grouped butterfly
+      kernel (wedge contraction recomputed per sweep; O(M) working set
+      per group member — the ONLY option when the (M, M) pairwise
+      butterfly matrix cannot be materialized);
+    * ``"b2"``     — contract the whole (G, M, M) shared-butterfly stack
+      ONCE before the loop and reduce gathered B2 rows per sweep.  Total
+      work M^2 C + sum_l W_l M versus the kernel route's
+      M C sum_l W_l >= M^2 C: strictly fewer flops whenever the stack
+      fits.  The driver's ``fd_update_mode="auto"`` cost model picks per
+      group (the HUC update-vs-recount argument applied to FD).
+
+    Both modes produce bit-identical deltas (integer regime, DESIGN.md
+    section 8); the equivalence suite pins them against each other.
+
+    Returns (support, alive, dv, theta, rho, wedges, sweeps):
+    ``theta`` (G, M) holds the tip numbers of peeled rows; ``rho`` (G,)
+    counts sweeps in which group g actually peeled (the FD analogue of
+    the paper's synchronization counter); ``wedges`` (G,) accumulates the
+    dynamic wedge cost C_peel per group (f32-exact below 2^24, DESIGN.md
+    section 8).  Groups finish independently; a finished group is a
+    no-op for the remaining sweeps (empty peel set).
+    """
+    sparse = backend in kops.SPARSE_BACKENDS
+    f32 = jnp.float32
+    g_n, mm, cc = a.shape
+    lo = jnp.asarray(lo, f32)
+    ids = jnp.broadcast_to(
+        jnp.arange(mm, dtype=jnp.int32)[None, :], (g_n, mm)
+    )
+    if sparse:
+        kmax_a = row_ext.reshape(g_n, -1, blocks[0]).max(axis=2)
+        kmax_a = kmax_a.astype(jnp.int32)
+    else:
+        kmax_a = None
+
+    if update_mode == "b2":
+        # one wedge contraction for the whole run; sweeps reduce its rows
+        wmat = jnp.einsum(
+            "gmc,gnc->gmn", a.astype(f32), a.astype(f32)
+        )
+        b2 = wmat * (wmat - 1.0) * 0.5
+        b2 = b2 * (1.0 - jnp.eye(mm, dtype=f32))[None]
+    elif update_mode != "kernel":
+        raise ValueError(f"unknown update_mode {update_mode!r}")
+
+    def full_mask_update(peel):
+        """Full-width update: B = A, s = peel mask (no gather)."""
+        if update_mode == "b2":
+            delta = jnp.einsum("gm,gmn->gn", peel.astype(f32), b2)
+        else:
+            delta = kops.butterfly_update_batched(
+                a, a, peel.astype(a.dtype), ids, ids,
+                backend=backend, blocks=blocks, kmax_a=kmax_a, kmax_b=kmax_a,
+            )
+        colsum = jnp.einsum("gm,gmc->gc", peel.astype(f32), a.astype(f32))
+        return delta, colsum
+
+    def gathered_update(peel, n_peel):
+        """Gathered update: peel level compacted to the fixed
+        (G, peel_width, ...) buffer (stable argsort puts peel rows
+        first), then either the grouped butterfly kernel (wedge
+        contraction against the gathered rows) or a reduction of the
+        precomputed B2 rows."""
+        order = jnp.argsort(~peel, axis=-1)
+        rows = order[:, :peel_width].astype(jnp.int32)
+        valid = jnp.arange(peel_width)[None, :] < n_peel[:, None]
+        a_peel = (
+            jnp.take_along_axis(a, rows[:, :, None], axis=1)
+            * valid[:, :, None].astype(a.dtype)
+        )
+        if update_mode == "b2":
+            b2_rows = jnp.take_along_axis(b2, rows[:, :, None], axis=1)
+            delta = jnp.einsum("gw,gwm->gm", valid.astype(f32), b2_rows)
+        else:
+            if sparse:
+                kb = batched_gathered_tile_extents(row_ext, rows, valid,
+                                                   blocks[1])
+            else:
+                kb = None
+            delta = kops.butterfly_update_batched(
+                a, a_peel, valid, ids, rows,
+                backend=backend, blocks=blocks, kmax_a=kmax_a, kmax_b=kb,
+            )
+        colsum = jnp.einsum(
+            "gw,gwc->gc", valid.astype(f32), a_peel.astype(f32)
+        )
+        return delta, colsum
+
+    def cond_fn(st):
+        alive, sweeps = st[1], st[6]
+        return jnp.any(alive) & (sweeps < max_sweeps)
+
+    def body_fn(st):
+        support, alive, dv, theta, rho, wedges, sweeps = st
+        hi, cap = level_threshold(support, alive, lo)     # (G,), (G,)
+        act = jnp.any(alive, axis=-1)                     # (G,)
+        peel = select_peel(support, alive, hi)            # (G, M)
+        n_peel = jnp.sum(peel, axis=-1)
+
+        if peel_width >= mm:
+            delta, colsum = full_mask_update(peel)
+        else:
+            delta, colsum = jax.lax.cond(
+                jnp.any(n_peel > peel_width),
+                lambda _: full_mask_update(peel),
+                lambda _: gathered_update(peel, n_peel),
+                operand=None,
+            )
+
+        c_peel = peel_cost(colsum, dv)                    # (G,)
+        theta = record_theta(theta, peel, cap)
+        support2, alive2 = apply_delta(support, alive, peel, delta, cap)
+        support2 = jnp.where(alive2, support2, _INF)
+        return (
+            support2, alive2, dv - colsum, theta,
+            rho + act.astype(jnp.int32),
+            wedges + jnp.where(act, c_peel, 0.0),
+            sweeps + 1,
+        )
+
+    theta0 = jnp.zeros((g_n, mm), f32)
+    state0 = (
+        support, alive, dv, theta0,
+        jnp.zeros(g_n, jnp.int32), jnp.zeros(g_n, f32), jnp.int32(0),
+    )
+    return jax.lax.while_loop(cond_fn, body_fn, state0)
+
+
+# ---------------------------------------------------------------------- #
+# device-graph container (bucketed, compacted view of the residual graph)
+# ---------------------------------------------------------------------- #
+class DeviceGraph:
+    """Bucket-padded dense residual graph on device.
+
+    rows 0..n_rows-1 are live U vertices (original ids in ``members``);
+    cols are the compacted V vertices with residual degree >= 2.  Alongside
+    the biadjacency it carries everything the device-resident sweep loop
+    needs resident: the initial residual V-degree vector (``dv0``), the
+    static per-row wedge counts (device ``w`` + host ``w_np`` for findHi),
+    and the block-sparse staircase metadata (``kmax`` row-tile column
+    extents + ``row_ext`` per-row extents) recomputed at every DGM
+    compaction — exactly where compaction makes the staircase steepest.
+    """
+
+    def __init__(self, g: BipartiteGraph, members: np.ndarray,
+                 cfg: ReceiptConfig):
+        self.cfg = cfg
+        bi, bj, bk = cfg.kernel_blocks
+        # induce on the live rows, dropping V columns that cannot form a
+        # wedge (residual degree < 2) — the DGM column compaction
+        sub, _ = g.induced_on_u(members, min_degree_v=2)
+        dvk = sub.degrees_v()
+        eu, ev = sub.edges_u, sub.edges_v
+
+        self.members = np.asarray(members)
+        self.n_rows = len(members)
+        self.n_cols = max(int(sub.n_v), 1)
+        self.rows_pad = bucket(self.n_rows, max(bi, bj))
+        self.cols_pad = bucket(self.n_cols, bk)
+
+        a = np.zeros((self.rows_pad, self.cols_pad), np.float32)
+        a[eu, ev] = 1.0
+        self.a = jnp.asarray(a, dtype=cfg.dtype)
+        self.ids = jnp.arange(self.rows_pad, dtype=jnp.int32)
+        # residual V degrees at construction (everything alive)
+        dv_pad = np.zeros(self.cols_pad, np.float32)
+        dv_pad[: len(dvk)] = dvk
+        self.dv0 = jnp.asarray(dv_pad)
+        # static per-row wedge counts in this residual graph (range proxy)
+        w = np.zeros(self.rows_pad, np.float64)
+        np.add.at(w, eu, (dvk[ev] - 1).astype(np.float64))
+        self.w_np = w
+        self.w = jnp.asarray(w, dtype=cfg.dtype)
+        # total residual wedges = sum of per-row counts (everything alive)
+        self.total_wedges = float(w.sum())
+        # Chiba-Nishizeki recount bound of this residual graph (HUC C_rcnt)
+        du = np.bincount(eu, minlength=self.rows_pad)
+        self.c_rcnt = float(np.minimum(du[eu], dvk[ev]).sum())
+        # block-sparse staircase metadata (scalar-prefetched by the
+        # pallas_sparse backend; cheap enough to keep fresh always)
+        backend = cfg.backend or kops.default_backend()
+        if backend in kops.SPARSE_BACKENDS and bi != bj:
+            raise ValueError("sparse backends require square row tiles")
+        rext = row_extents(a, bk)
+        self.row_ext = jnp.asarray(rext)
+        # tile extents = per-tile max of the row extents (one dense pass)
+        self.kmax = jnp.asarray(rext.reshape(-1, bi).max(axis=1))
+
+    def initial_peel_width(self) -> int:
+        """Auto-sized device peel buffer: a quarter of the padded rows
+        (bucketed), never below one kernel row tile.  Doubled by the
+        driver on overflow."""
+        cfg = self.cfg
+        if cfg.peel_width is not None:
+            w = bucket(cfg.peel_width, cfg.kernel_blocks[1])
+        else:
+            w = bucket(max(cfg.kernel_blocks[1], self.rows_pad // 4),
+                       cfg.kernel_blocks[1])
+        return min(w, self.rows_pad)
+
+
+# ---------------------------------------------------------------------- #
+# host-driven sweep (pre-PR engine; also the bucket-overflow fallback)
+# ---------------------------------------------------------------------- #
+def host_sweep(dg: DeviceGraph, cfg: ReceiptConfig, stats: RunStats,
+               support, alive, hi: float, lo: float, backend, blocks,
+               *, allow_huc: bool = True):
+    """One blocking host-driven sweep: select, decide, dispatch, fetch.
+
+    Returns (support, alive, info) where info is None when nothing was
+    peelable, else a dict with keys ``peel_np`` (host peel mask),
+    ``n_peel`` and ``c_peel``.  Every blocking transfer increments
+    ``stats.host_round_trips`` — this is the per-sweep cost the
+    device-resident loop removes.
+    """
+    sparse = backend in kops.SPARSE_BACKENDS
+    peel, n_peel, c_peel = sweep_info(dg.a, support, alive, hi)
+    n_peel = int(n_peel)
+    stats.host_round_trips += 1
+    if n_peel == 0:
+        return support, alive, None
+    c_peel = float(c_peel)
+    stats.host_round_trips += 1
+    stats.rho_cd += 1
+
+    n_alive_after = int(jnp.sum(alive)) - n_peel
+    stats.host_round_trips += 1
+    if n_alive_after == 0:
+        # terminal-sweep elision (beyond-paper, DESIGN.md): when a sweep
+        # peels every remaining vertex there is no survivor to update, so
+        # the update kernel is skipped entirely.  On hub-dominated graphs
+        # this removes the single most expensive sweep (the paper would
+        # traverse all its wedges).
+        alive = alive & ~peel
+        stats.elided_sweeps += 1
+    elif allow_huc and cfg.use_huc and c_peel > dg.c_rcnt:
+        # HUC: recount survivors instead of propagating peel updates
+        alive = alive & ~peel
+        support = support_all(
+            dg.a, alive, dg.ids, dg.kmax if sparse else None,
+            backend=backend, blocks=blocks,
+        )
+        support = jnp.where(alive, jnp.maximum(support, lo), _INF)
+        stats.huc_recounts += 1
+        stats.wedges_cd += int(dg.c_rcnt)
+    else:
+        # gather the peel rows into a bucketed matrix
+        peel_rows = jnp.nonzero(peel, size=dg.rows_pad, fill_value=0)[0]
+        n_peel_pad = bucket(n_peel, blocks[1])
+        rows = peel_rows[:n_peel_pad].astype(jnp.int32)
+        valid = jnp.arange(n_peel_pad) < n_peel
+        a_peel = dg.a[rows] * valid[:, None].astype(dg.a.dtype)
+        kb = (gathered_tile_extents(dg.row_ext, rows, valid, blocks[1])
+              if sparse else None)
+        delta = support_delta(
+            dg.a, a_peel, valid, dg.ids, rows,
+            dg.kmax if sparse else None, kb,
+            backend=backend, blocks=blocks,
+        )
+        support, alive = apply_delta(support, alive, peel, delta, lo)
+        support = jnp.where(alive, support, _INF)
+        stats.wedges_cd += int(c_peel)
+
+    peel_np = np.asarray(peel)
+    stats.host_round_trips += 1
+    return support, alive, dict(peel_np=peel_np, n_peel=n_peel, c_peel=c_peel)

@@ -1,1015 +1,73 @@
-"""RECEIPT — REfine CoarsE-grained IndePendent Tasks (the paper's Alg. 3+4).
+"""RECEIPT — compatibility facade over `core/engine/` (PR 2).
 
-TPU-native engine (DESIGN.md section 2):
+The engine that used to live here in one 1000-line module was split into
+the `core/engine/` package, built around a single parameterized
+device-resident peel core:
 
-* CD (coarse-grained decomposition, Alg. 3): a *device-resident* sweep
-  loop.  The whole peel loop of one subset — peel-set selection, the HUC
-  peel-vs-recount decision (lax.cond), terminal-sweep elision, support and
-  alive updates, and every per-sweep counter (rho, wedges, HUC recounts) —
-  runs inside a single ``jax.lax.while_loop``, so host round trips drop
-  from O(sweeps x ~8) blocking transfers to O(1) per subset.  Peel sets
-  are gathered into FIXED-width bucketed buffers (``ReceiptConfig.peel_width``,
-  doubled on overflow); a sweep whose peel set exceeds the buffer exits the
-  device loop and is replayed once by the preserved host-driven path (also
-  the ``device_loop=False`` reference engine and the ParB baseline's
-  pre-PR comparator).  The number of host round trips is tracked in
-  ``RunStats.host_round_trips`` — the engine-level analogue of the paper's
-  synchronization counter rho (1335 vs 1.5M on TrU).
+* `engine/peel_loop.py` — the unified ``lax.while_loop`` sweep core
+  (CD range-peel, ParB min-peel, batched FD level-peel modes), the
+  `DeviceGraph` container and the blocking host-sweep fallback;
+* `engine/cd.py`        — coarse-grained decomposition (Alg. 3);
+* `engine/fd.py`        — fine-grained decomposition (Alg. 4) on the
+  batched level-peel runtime (grouped Pallas kernel dispatch,
+  double-buffered shape-group scheduling);
+* `engine/baselines.py` — the ParButterfly baseline on the same core.
 
-* Incremental residual degrees: instead of recomputing ``a.T @ alive`` and
-  ``a @ max(dv-1, 0)`` every sweep, the loop carries the residual V-degree
-  vector ``dv`` and subtracts the peeled rows' column sums (one (W x n_v)
-  contraction proportional to the peel set); the dynamic wedge cost
-  C_peel = colsum_S . max(dv-1, 0) needs no per-row wedge vector at all.
-
-* Adaptive range determination (section 3.1.1): wedge-weighted support
-  histogram + prefix sum on the host support snapshot (one snapshot per
-  subset), with the paper's dynamic target and overshoot scaling factor s_i.
-
-* HUC (section 4.1): per sweep, compare the wedge cost of peeling the
-  active set against the Chiba-Nishizeki recount bound of the residual
-  graph; recount the survivors when cheaper (a lax.cond inside the loop).
-
-* DGM (section 4.2): at subset boundaries, re-induce the residual graph
-  (drop peeled rows, drop V columns with residual degree < 2) into freshly
-  bucketed (smaller) device arrays.  Shape compaction is the TPU analogue
-  of adjacency-list compaction; the block-sparse staircase metadata
-  (column extents) is recomputed here, where the staircase is steepest.
-
-* FD (fine-grained decomposition, Alg. 4): each subset's induced subgraph
-  is peeled independently by exact sequential min-peeling; subsets are
-  grouped into equal-padded-shape stacks (core/scheduler.py — the LPT /
-  workload-aware scheduling analogue) and peeled concurrently with vmap.
-
-Correctness mirrors the paper's Theorems 1-2 and is tested against the
-numpy BUP oracle on random graphs (tests/test_receipt.py, incl. hypothesis
-property tests) plus device-loop vs host-loop equivalence on both theta
-and every counter.
+Every public name (and the private aliases older call sites used) is
+re-exported here, so ``from repro.core.receipt import ...`` keeps
+working.  New code should import from ``repro.core.engine``.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
-from typing import Any, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..kernels import ops as kops
-from ..kernels.butterfly_sparse import gathered_tile_extents, row_extents
-from .graph import BipartiteGraph, pad_to_multiple
-from .scheduler import pack_by_shape
-
-__all__ = ["ReceiptConfig", "RunStats", "tip_decompose", "receipt_cd", "receipt_fd"]
-
-_INF = jnp.inf
-
-
-# ---------------------------------------------------------------------- #
-# config / stats
-# ---------------------------------------------------------------------- #
-@dataclasses.dataclass
-class ReceiptConfig:
-    num_partitions: int = 8                  # P
-    backend: Optional[str] = None            # kernel backend (None = auto)
-    kernel_blocks: Tuple[int, int, int] = (128, 128, 512)
-    use_huc: bool = True
-    use_dgm: bool = True
-    degree_sort: bool = True                 # Wang et al. relabel (tile density)
-    dgm_row_threshold: float = 0.7           # re-induce when alive < thresh*rows
-    fd_mode: str = "b2"                      # "b2" (precompute) | "matvec"
-    dtype: Any = jnp.float32
-    max_sweeps: int = 100_000                # safety valve
-    device_loop: bool = True                 # fused lax.while_loop sweep engine
-    peel_width: Optional[int] = None         # device peel buffer (None = auto)
-
-
-@dataclasses.dataclass
-class RunStats:
-    """The paper's evaluation counters (Table 3 / Figs 5-9)."""
-
-    rho_cd: int = 0                 # CD sync rounds (peel sweeps)
-    rho_fd: int = 0                 # FD sync rounds (0 by construction)
-    sweeps_per_subset: List[int] = dataclasses.field(default_factory=list)
-    wedges_pvbcnt: int = 0          # counting bound sum_E min(du, dv)
-    wedges_cd: int = 0              # wedges traversed peeling in CD
-    wedges_fd: int = 0              # wedges in FD induced subgraphs
-    huc_recounts: int = 0
-    dgm_compactions: int = 0
-    elided_sweeps: int = 0          # terminal-sweep elision (beyond-paper)
-    num_subsets: int = 0
-    bounds: List[int] = dataclasses.field(default_factory=list)
-    subset_sizes: List[int] = dataclasses.field(default_factory=list)
-    subset_wedges_fd: List[int] = dataclasses.field(default_factory=list)
-    host_round_trips: int = 0       # blocking device->host transfers
-    device_loop_calls: int = 0      # lax.while_loop invocations
-    overflow_fallbacks: int = 0     # peel buffer overflows -> host sweeps
-    time_count: float = 0.0
-    time_cd: float = 0.0
-    time_fd: float = 0.0
-
-    @property
-    def wedges_total(self) -> int:
-        return self.wedges_pvbcnt + self.wedges_cd + self.wedges_fd
-
-
-# ---------------------------------------------------------------------- #
-# shape bucketing
-# ---------------------------------------------------------------------- #
-def _bucket(n: int, block: int) -> int:
-    """Power-of-two-ish bucket >= n, multiple of ``block`` (bounds the
-    number of distinct jit shapes to O(log n))."""
-    b = block
-    while b < n:
-        b *= 2
-    return b
-
-
-# ---------------------------------------------------------------------- #
-# jitted device primitives (cached per bucketed shape)
-# ---------------------------------------------------------------------- #
-@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
-def _support_all(a, alive, ids, kmax, *, backend, blocks):
-    """HUC recount / initial count: support of every row w.r.t. alive rows."""
-    return kops.butterfly_update(
-        a, a, alive.astype(a.dtype), ids, ids, backend=backend, blocks=blocks,
-        kmax_a=kmax, kmax_b=kmax,
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
-def _support_delta(a, a_peel, valid, ids, ids_peel, kmax_a, kmax_b, *,
-                   backend, blocks):
-    """CD peel update: delta[u'] = sum_{u in S} C(W[u, u'], 2)."""
-    return kops.butterfly_update(
-        a, a_peel, valid.astype(a.dtype), ids, ids_peel,
-        backend=backend, blocks=blocks, kmax_a=kmax_a, kmax_b=kmax_b,
-    )
-
-
-@jax.jit
-def _sweep_info(a, support, alive, hi):
-    """Host-path sweep selection (pre-PR engine): recomputes the residual
-    V-degrees and per-row wedge counts with two dense contractions.
-
-    Returns (peel_mask, n_peel, c_peel) where c_peel is the dynamic wedge
-    cost  sum_{u in S} sum_{v in N_u} (d_v - 1)  of peeling S in the
-    residual graph (HUC's C_peel).
-    """
-    peel = alive & (support < hi)
-    dv = a.T @ alive.astype(a.dtype)                 # residual V degrees
-    wcur = a @ jnp.maximum(dv - 1.0, 0.0)            # per-row residual wedges
-    c_peel = jnp.sum(jnp.where(peel, wcur, 0.0))
-    return peel, jnp.sum(peel), c_peel
-
-
-@jax.jit
-def _residual_dv(a, alive):
-    """Residual V degrees (used to re-seed the incremental vector after a
-    host-path fallback sweep or a checkpoint resume)."""
-    return a.T @ alive.astype(a.dtype)
-
-
-def _find_hi_np(support: np.ndarray, w: np.ndarray, alive: np.ndarray,
-                tgt: float) -> float:
-    """Adaptive range upper bound (Alg. 3 findHi) on the host snapshot.
-
-    Sort alive supports ascending, prefix-sum their wedge counts, pick the
-    smallest support whose cumulative wedge count reaches the target.
-    Falls back to max support + 1 (catch-all) when the target exceeds the
-    remaining wedge mass.  Runs on the per-subset host support snapshot
-    (which Alg. 3 needs anyway for the FD init vector), so it costs no
-    extra device round trip.
-    """
-    sup = np.where(alive, support, np.inf)
-    order = np.argsort(sup, kind="stable")
-    ws = np.where(alive, w, 0.0)[order]
-    cum = np.cumsum(ws)
-    hit = cum >= tgt
-    if hit.size and hit[-1]:
-        hi = sup[order][int(np.argmax(hit))]
-    else:
-        hi = float(np.max(np.where(alive, support, -np.inf)))
-    return float(hi) + 1.0
-
-
-@jax.jit
-def _apply_delta(support, alive, peel, delta, lo):
-    """Alg. 2 update with the Alg. 3 range cap: cap at theta(i) = lo."""
-    alive_after = alive & ~peel
-    sup = jnp.where(alive_after, jnp.maximum(support - delta, lo), support)
-    return sup, alive_after
-
-
-# ---------------------------------------------------------------------- #
-# device-resident sweep loop (the tentpole of DESIGN.md section 2)
-# ---------------------------------------------------------------------- #
-@functools.partial(
-    jax.jit,
-    static_argnames=("backend", "blocks", "use_huc", "peel_width",
-                     "max_sweeps", "minmode"),
+from .engine import (
+    DeviceGraph,
+    ReceiptConfig,
+    RunStats,
+    batched_level_loop,
+    bucket,
+    cd_checkpoint_state,
+    device_peel_loop,
+    find_hi_np,
+    host_sweep,
+    parb_tip_decompose,
+    receipt_cd,
+    receipt_fd,
+    tip_decompose,
 )
-def _cd_device_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
-                    hi, lo, c_rcnt, sweeps0=0, *, backend, blocks, use_huc,
-                    peel_width, max_sweeps, minmode):
-    """Run an entire peel-sweep loop on device (``jax.lax.while_loop``).
-
-    Two schedules share the body:
-
-    * ``minmode=False`` (RECEIPT CD, Alg. 3): peel everything with
-      support < ``hi`` until the range drains; support updates cap at
-      ``lo`` = theta(i).
-    * ``minmode=True``  (ParB baseline): each sweep peels the current
-      minimum-support set; ``hi``/``lo`` are recomputed per sweep as
-      min+1 / min and ``theta`` records the peel value.
-
-    The peel set is gathered into a fixed (``peel_width``, n_v) buffer.
-    A sweep whose peel set exceeds the buffer sets the overflow flag and
-    exits WITHOUT applying the sweep; the host replays it at the precise
-    bucket and re-enters with a doubled buffer.  Residual V-degrees ``dv``
-    are maintained incrementally (peeled rows' column sums are subtracted)
-    so no sweep recomputes a dense ``a.T @ alive`` contraction.
-
-    Returns the full carried state; the caller fetches it in ONE blocking
-    transfer: (support, alive, dv, theta, peeled, rho, wedges, hucs,
-    elided, covered, sweeps, overflow).  ``sweeps`` counts from the traced
-    ``sweeps0`` (CUMULATIVE across overflow re-entries) so the
-    ``max_sweeps`` safety valve caps the subset total exactly like the
-    host engine; ``rho`` counts this invocation only.
-
-    Counter exactness: wedge counters accumulate in f32 and are exact
-    while every partial sum stays below 2^24 (DESIGN.md section 8).
-    """
-    sparse = backend in kops.SPARSE_BACKENDS
-    i32 = jnp.int32
-    f32 = jnp.float32
-    hi = jnp.asarray(hi, f32)
-    lo = jnp.asarray(lo, f32)
-    c_rcnt = jnp.asarray(c_rcnt, f32)
-
-    def hi_cap(support, alive):
-        if minmode:
-            mn = jnp.min(jnp.where(alive, support, _INF))
-            return mn + 1.0, mn
-        return hi, lo
-
-    def cond_fn(st):
-        support, alive = st[0], st[1]
-        sweeps, ovf = st[10], st[11]
-        hi_cur, _ = hi_cap(support, alive)
-        return (
-            jnp.any(alive & (support < hi_cur))
-            & (sweeps < max_sweeps)
-            & ~ovf
-        )
-
-    def body_fn(st):
-        (support, alive, dv, theta, peeled, rho, wedges, hucs, elided,
-         covered, sweeps, ovf) = st
-        hi_cur, cap = hi_cap(support, alive)
-        peel = alive & (support < hi_cur)
-        n_peel = jnp.sum(peel)
-        is_elide = jnp.sum(alive) == n_peel
-
-        def br_elide(support, alive, dv, theta):
-            # terminal-sweep elision (beyond-paper, DESIGN.md): a sweep
-            # that peels EVERY survivor needs no update kernel — and no
-            # peel buffer either (checked BEFORE overflow): the full
-            # peel set's column sums are dv itself, so
-            # C_peel = dv . max(dv-1, 0) with no gather at all
-            c_peel = dv @ jnp.maximum(dv - 1.0, 0.0)
-            theta2 = jnp.where(peel, cap, theta) if minmode else theta
-            return (support, alive & ~peel, jnp.zeros_like(dv), theta2,
-                    peeled | peel, rho + 1, wedges, hucs, elided + 1,
-                    covered + c_peel, sweeps + 1, ovf)
-
-        def on_overflow(support, alive, dv, theta):
-            return (support, alive, dv, theta, peeled, rho, wedges, hucs,
-                    elided, covered, sweeps, jnp.bool_(True))
-
-        def do_sweep(support, alive, dv, theta):
-            rows = jnp.nonzero(peel, size=peel_width, fill_value=0)[0]
-            rows = rows.astype(jnp.int32)
-            valid = jnp.arange(peel_width) < n_peel
-            a_peel = a[rows] * valid[:, None].astype(a.dtype)
-            # incremental residual degrees: peeled rows' column sums
-            colsum = valid.astype(f32) @ a_peel.astype(f32)
-            c_peel = colsum @ jnp.maximum(dv - 1.0, 0.0)
-
-            def br_peel(sup, alv):
-                if sparse:
-                    kb = gathered_tile_extents(row_ext, rows, valid,
-                                               blocks[1])
-                else:
-                    kb = None
-                delta = _support_delta(
-                    a, a_peel, valid, ids, rows, kmax if sparse else None,
-                    kb, backend=backend, blocks=blocks,
-                )
-                s2, alv2 = _apply_delta(sup, alv, peel, delta, cap)
-                return jnp.where(alv2, s2, _INF), alv2
-
-            if use_huc and not minmode:
-                use_rec = c_peel > c_rcnt
-
-                def br_recount(sup, alv):
-                    alv2 = alv & ~peel
-                    s2 = _support_all(
-                        a, alv2, ids, kmax if sparse else None,
-                        backend=backend, blocks=blocks,
-                    )
-                    return jnp.where(alv2, jnp.maximum(s2, cap), _INF), alv2
-
-                support2, alive2 = jax.lax.cond(
-                    use_rec, br_recount, br_peel, support, alive
-                )
-            else:
-                use_rec = jnp.bool_(False)
-                support2, alive2 = br_peel(support, alive)
-
-            wedges2 = wedges + jnp.where(use_rec, c_rcnt, c_peel)
-            theta2 = jnp.where(peel, cap, theta) if minmode else theta
-            return (
-                support2, alive2, dv - colsum, theta2, peeled | peel,
-                rho + 1, wedges2, hucs + use_rec.astype(i32),
-                elided, covered + c_peel, sweeps + 1, ovf,
-            )
-
-        def non_elide(support, alive, dv, theta):
-            return jax.lax.cond(
-                n_peel > peel_width, on_overflow, do_sweep,
-                support, alive, dv, theta,
-            )
-
-        return jax.lax.cond(
-            is_elide, br_elide, non_elide, support, alive, dv, theta,
-        )
-
-    state0 = (
-        support, alive, dv, theta, jnp.zeros_like(alive),
-        i32(0), f32(0), i32(0), i32(0), f32(0),
-        jnp.asarray(sweeps0, i32), jnp.bool_(False),
-    )
-    return jax.lax.while_loop(cond_fn, body_fn, state0)
-
-
-# ---------------------------------------------------------------------- #
-# device-graph container (bucketed, compacted view of the residual graph)
-# ---------------------------------------------------------------------- #
-class _DeviceGraph:
-    """Bucket-padded dense residual graph on device.
-
-    rows 0..n_rows-1 are live U vertices (original ids in ``members``);
-    cols are the compacted V vertices with residual degree >= 2.  Alongside
-    the biadjacency it carries everything the device-resident sweep loop
-    needs resident: the initial residual V-degree vector (``dv0``), the
-    static per-row wedge counts (device ``w`` + host ``w_np`` for findHi),
-    and the block-sparse staircase metadata (``kmax`` row-tile column
-    extents + ``row_ext`` per-row extents) recomputed at every DGM
-    compaction — exactly where compaction makes the staircase steepest.
-    """
-
-    def __init__(self, g: BipartiteGraph, members: np.ndarray, cfg: ReceiptConfig):
-        self.cfg = cfg
-        bi, bj, bk = cfg.kernel_blocks
-        # induce on the live rows, dropping V columns that cannot form a
-        # wedge (residual degree < 2) — the DGM column compaction
-        sub, _ = g.induced_on_u(members, min_degree_v=2)
-        dvk = sub.degrees_v()
-        eu, ev = sub.edges_u, sub.edges_v
-
-        self.members = np.asarray(members)
-        self.n_rows = len(members)
-        self.n_cols = max(int(sub.n_v), 1)
-        self.rows_pad = _bucket(self.n_rows, max(bi, bj))
-        self.cols_pad = _bucket(self.n_cols, bk)
-
-        a = np.zeros((self.rows_pad, self.cols_pad), np.float32)
-        a[eu, ev] = 1.0
-        self.a = jnp.asarray(a, dtype=cfg.dtype)
-        self.ids = jnp.arange(self.rows_pad, dtype=jnp.int32)
-        # residual V degrees at construction (everything alive)
-        dv_pad = np.zeros(self.cols_pad, np.float32)
-        dv_pad[: len(dvk)] = dvk
-        self.dv0 = jnp.asarray(dv_pad)
-        # static per-row wedge counts in this residual graph (range proxy)
-        w = np.zeros(self.rows_pad, np.float64)
-        np.add.at(w, eu, (dvk[ev] - 1).astype(np.float64))
-        self.w_np = w
-        self.w = jnp.asarray(w, dtype=cfg.dtype)
-        # total residual wedges = sum of per-row counts (everything alive)
-        self.total_wedges = float(w.sum())
-        # Chiba-Nishizeki recount bound of this residual graph (HUC C_rcnt)
-        du = np.bincount(eu, minlength=self.rows_pad)
-        self.c_rcnt = float(np.minimum(du[eu], dvk[ev]).sum())
-        # block-sparse staircase metadata (scalar-prefetched by the
-        # pallas_sparse backend; cheap enough to keep fresh always)
-        backend = cfg.backend or kops.default_backend()
-        if backend in kops.SPARSE_BACKENDS and bi != bj:
-            raise ValueError("sparse backends require square row tiles")
-        rext = row_extents(a, bk)
-        self.row_ext = jnp.asarray(rext)
-        # tile extents = per-tile max of the row extents (one dense pass)
-        self.kmax = jnp.asarray(rext.reshape(-1, bi).max(axis=1))
-
-    def initial_peel_width(self) -> int:
-        """Auto-sized device peel buffer: a quarter of the padded rows
-        (bucketed), never below one kernel row tile.  Doubled by the
-        driver on overflow."""
-        cfg = self.cfg
-        if cfg.peel_width is not None:
-            w = _bucket(cfg.peel_width, cfg.kernel_blocks[1])
-        else:
-            w = _bucket(max(cfg.kernel_blocks[1], self.rows_pad // 4),
-                        cfg.kernel_blocks[1])
-        return min(w, self.rows_pad)
-
-
-# ---------------------------------------------------------------------- #
-# host-driven sweep (pre-PR engine; also the bucket-overflow fallback)
-# ---------------------------------------------------------------------- #
-def _host_sweep(dg: _DeviceGraph, cfg: ReceiptConfig, stats: RunStats,
-                support, alive, hi: float, lo: float, backend, blocks,
-                *, allow_huc: bool = True):
-    """One blocking host-driven sweep: select, decide, dispatch, fetch.
-
-    Returns (support, alive, info) where info is None when nothing was
-    peelable, else a dict with keys ``peel_np`` (host peel mask),
-    ``n_peel`` and ``c_peel``.  Every blocking transfer increments
-    ``stats.host_round_trips`` — this is the per-sweep cost the
-    device-resident loop removes.
-    """
-    sparse = backend in kops.SPARSE_BACKENDS
-    peel, n_peel, c_peel = _sweep_info(dg.a, support, alive, hi)
-    n_peel = int(n_peel)
-    stats.host_round_trips += 1
-    if n_peel == 0:
-        return support, alive, None
-    c_peel = float(c_peel)
-    stats.host_round_trips += 1
-    stats.rho_cd += 1
-
-    n_alive_after = int(jnp.sum(alive)) - n_peel
-    stats.host_round_trips += 1
-    if n_alive_after == 0:
-        # terminal-sweep elision (beyond-paper, DESIGN.md): when a sweep
-        # peels every remaining vertex there is no survivor to update, so
-        # the update kernel is skipped entirely.  On hub-dominated graphs
-        # this removes the single most expensive sweep (the paper would
-        # traverse all its wedges).
-        alive = alive & ~peel
-        stats.elided_sweeps += 1
-    elif allow_huc and cfg.use_huc and c_peel > dg.c_rcnt:
-        # HUC: recount survivors instead of propagating peel updates
-        alive = alive & ~peel
-        support = _support_all(
-            dg.a, alive, dg.ids, dg.kmax if sparse else None,
-            backend=backend, blocks=blocks,
-        )
-        support = jnp.where(alive, jnp.maximum(support, lo), _INF)
-        stats.huc_recounts += 1
-        stats.wedges_cd += int(dg.c_rcnt)
-    else:
-        # gather the peel rows into a bucketed matrix
-        peel_rows = jnp.nonzero(peel, size=dg.rows_pad, fill_value=0)[0]
-        n_peel_pad = _bucket(n_peel, blocks[1])
-        rows = peel_rows[:n_peel_pad].astype(jnp.int32)
-        valid = jnp.arange(n_peel_pad) < n_peel
-        a_peel = dg.a[rows] * valid[:, None].astype(dg.a.dtype)
-        kb = (gathered_tile_extents(dg.row_ext, rows, valid, blocks[1])
-              if sparse else None)
-        delta = _support_delta(
-            dg.a, a_peel, valid, dg.ids, rows,
-            dg.kmax if sparse else None, kb,
-            backend=backend, blocks=blocks,
-        )
-        support, alive = _apply_delta(support, alive, peel, delta, lo)
-        support = jnp.where(alive, support, _INF)
-        stats.wedges_cd += int(c_peel)
-
-    peel_np = np.asarray(peel)
-    stats.host_round_trips += 1
-    return support, alive, dict(peel_np=peel_np, n_peel=n_peel, c_peel=c_peel)
-
-
-# ---------------------------------------------------------------------- #
-# CD — coarse-grained decomposition (Alg. 3)
-# ---------------------------------------------------------------------- #
-def cd_checkpoint_state(subset_id, init_support, bounds, members, support_np,
-                        rem_wedges, scale, lo, i):
-    """CD loop state as a plain pytree — checkpointable through
-    train/checkpoint.py like any train state (fault tolerance for the
-    peeling engine itself; restart is exact because CD is deterministic
-    given this state)."""
-    return {
-        "subset_id": np.asarray(subset_id),
-        "init_support": np.asarray(init_support),
-        "bounds": np.asarray(bounds, np.float64),
-        "members": np.asarray(members),
-        "support": np.asarray(support_np, np.float64),
-        "rem_wedges": np.float64(rem_wedges),
-        "scale": np.float64(scale),
-        "lo": np.float64(lo),
-        "i": np.int64(i),
-    }
-
-
-def receipt_cd(
-    g: BipartiteGraph, cfg: ReceiptConfig, stats: RunStats,
-    *, checkpoint_cb=None, resume_state=None,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Partition U into subsets with non-overlapping tip-number ranges.
-
-    Returns (subset_id[n_u], init_support[n_u], bounds[P+1], theta_hint)
-    where subset_id[u] in [0, P), init_support is the FD support
-    initialization vector (Alg. 3 line 7) and bounds[i] = theta(i+1) lower
-    bounds, bounds[-1] > theta_max.
-
-    With ``cfg.device_loop`` (default) each subset's sweep loop runs
-    device-resident (see ``_cd_device_loop``); the host syncs ONCE per
-    subset to snapshot supports (needed for the FD init vector and findHi
-    anyway).  ``device_loop=False`` preserves the blocking host-driven
-    engine for apples-to-apples round-trip benchmarks.
-
-    checkpoint_cb(state): called with a cd_checkpoint_state pytree at
-    every subset boundary.  resume_state: continue an interrupted run
-    from such a state (tests/test_receipt.py::test_cd_checkpoint_restart).
-    """
-    backend = cfg.backend or kops.default_backend()
-    blocks = cfg.kernel_blocks
-    n_u = g.n_u
-    p_total = cfg.num_partitions
-
-    t0 = time.perf_counter()
-    if resume_state is not None:
-        st = resume_state
-        subset_id = np.asarray(st["subset_id"]).copy()
-        init_support = np.asarray(st["init_support"]).copy()
-        bounds = [float(b) for b in st["bounds"]]
-        members = np.asarray(st["members"])
-        dg = _DeviceGraph(g, members, cfg)
-        stats.wedges_pvbcnt = g.counting_wedge_bound()
-        alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
-        support = jnp.full(dg.rows_pad, _INF, cfg.dtype)
-        support = support.at[: dg.n_rows].set(
-            jnp.asarray(st["support"][: dg.n_rows], cfg.dtype)
-        )
-        dv = dg.dv0
-        sup_np = np.asarray(support, np.float64)
-        alive_np = np.asarray(alive)
-        stats.host_round_trips += 1
-        rem_wedges = float(st["rem_wedges"])
-        scale = float(st["scale"])
-        lo = float(st["lo"])
-        i = int(st["i"])
-    else:
-        subset_id = np.full(n_u, -1, np.int64)
-        init_support = np.zeros(n_u, np.float64)
-        bounds = [0.0]
-
-        dg = _DeviceGraph(g, np.arange(n_u), cfg)
-        stats.wedges_pvbcnt = g.counting_wedge_bound()
-
-        # --- initial per-vertex counting (pvBcnt) ---------------------- #
-        sparse = backend in kops.SPARSE_BACKENDS
-        alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
-        support = _support_all(dg.a, alive, dg.ids,
-                               dg.kmax if sparse else None,
-                               backend=backend, blocks=blocks)
-        support = jnp.where(alive, support, _INF)
-        dv = dg.dv0
-        sup_np = np.asarray(support, np.float64)   # the blocking sync
-        alive_np = np.asarray(alive)
-        stats.host_round_trips += 1
-        stats.time_count = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        rem_wedges = dg.total_wedges
-        scale = 1.0
-        lo = 0.0
-        i = 0
-
-    peel_width = dg.initial_peel_width()
-    while alive_np.any():
-        if checkpoint_cb is not None:
-            live = np.where(alive_np)[0]
-            checkpoint_cb(cd_checkpoint_state(
-                subset_id, init_support, bounds, dg.members[live],
-                sup_np[live], rem_wedges, scale, lo, i,
-            ))
-        # final catch-all subset (paper: "puts all of them in U_{P+1}")
-        catch_all = i >= p_total - 1
-        tgt = np.inf if catch_all else max(rem_wedges / (p_total - i) * scale, 1.0)
-
-        # support snapshot -> FD init vector (Alg. 3 lines 6-7)
-        live_rows = np.where(alive_np)[0]
-        init_support[dg.members[live_rows]] = sup_np[live_rows]
-
-        if catch_all:
-            hi = float(np.max(np.where(alive_np, sup_np, -np.inf))) + 1.0
-        else:
-            hi = _find_hi_np(sup_np, dg.w_np, alive_np, tgt)
-
-        sweeps = 0
-        covered_wedges = 0.0
-        if cfg.device_loop:
-            # -------- device-resident sweep loop (O(1) syncs) ---------- #
-            # the subset's FIRST sweep peels the whole initial range; its
-            # size is already known from the host snapshot, so size the
-            # peel buffer to fit it and overflow only on larger cascades
-            # (an explicit cfg.peel_width pins the initial width instead)
-            if cfg.peel_width is None:
-                n_first = int((alive_np & (sup_np < hi)).sum())
-                peel_width = max(peel_width, min(
-                    dg.rows_pad,
-                    _bucket(max(n_first, blocks[1]), blocks[1]),
-                ))
-            while sweeps < cfg.max_sweeps:
-                (support, alive, dv, _th, peeled, d_rho, d_wedges, d_hucs,
-                 d_elided, d_covered, d_sweeps, ovf) = _cd_device_loop(
-                    dg.a, dg.ids, dg.row_ext, dg.kmax, support, alive, dv,
-                    jnp.zeros(dg.rows_pad, jnp.float32), hi, lo, dg.c_rcnt,
-                    sweeps,
-                    backend=backend, blocks=blocks, use_huc=cfg.use_huc,
-                    peel_width=peel_width, max_sweeps=cfg.max_sweeps,
-                    minmode=False,
-                )
-                stats.device_loop_calls += 1
-                (peeled_np, alive_np, sup_f32, d_rho, d_wedges, d_hucs,
-                 d_elided, d_covered, d_sweeps, ovf_h) = jax.device_get(
-                    (peeled, alive, support, d_rho, d_wedges, d_hucs,
-                     d_elided, d_covered, d_sweeps, ovf))
-                stats.host_round_trips += 1
-                sup_np = np.asarray(sup_f32, np.float64)
-                stats.rho_cd += int(d_rho)
-                stats.wedges_cd += int(d_wedges)
-                stats.huc_recounts += int(d_hucs)
-                stats.elided_sweeps += int(d_elided)
-                sweeps = int(d_sweeps)        # cumulative (seeded by sweeps0)
-                covered_wedges += float(d_covered)
-                subset_id[dg.members[np.where(peeled_np)[0]]] = i
-                if not bool(ovf_h):
-                    break
-                # peel buffer overflow: replay this one sweep on the host
-                # at the precise bucket, then re-enter with a wider buffer
-                stats.overflow_fallbacks += 1
-                support, alive, info = _host_sweep(
-                    dg, cfg, stats, support, alive, hi, lo, backend, blocks)
-                if info is not None:
-                    covered_wedges += info["c_peel"]
-                    sweeps += 1
-                    subset_id[dg.members[info["peel_np"].nonzero()[0]]] = i
-                dv = _residual_dv(dg.a, alive)
-                sup_np = np.asarray(support, np.float64)
-                alive_np = np.asarray(alive)
-                stats.host_round_trips += 1
-                peel_width = min(dg.rows_pad, peel_width * 2)
-        else:
-            # -------- pre-PR engine: blocking host-driven sweeps ------- #
-            while sweeps < cfg.max_sweeps:
-                support, alive, info = _host_sweep(
-                    dg, cfg, stats, support, alive, hi, lo, backend, blocks)
-                if info is None:
-                    break
-                sweeps += 1
-                covered_wedges += info["c_peel"]
-                subset_id[dg.members[info["peel_np"].nonzero()[0]]] = i
-            sup_np = np.asarray(support, np.float64)
-            alive_np = np.asarray(alive)
-            stats.host_round_trips += 1
-
-        stats.sweeps_per_subset.append(sweeps)
-        bounds.append(hi)
-        rem_wedges = max(rem_wedges - covered_wedges, 0.0)
-        if covered_wedges > 0 and not catch_all:
-            scale = min(1.0, tgt / covered_wedges)
-        lo = hi
-        i += 1
-        if catch_all:
-            break
-
-        # --- DGM: re-induce the residual graph into smaller buckets ---- #
-        n_alive = int(alive_np.sum())
-        if n_alive == 0:
-            break
-        if cfg.use_dgm and n_alive < cfg.dgm_row_threshold * dg.rows_pad:
-            live = np.where(alive_np)[0]
-            new_members = dg.members[live]
-            sup_keep = sup_np[live]
-            dg = _DeviceGraph(g, new_members, cfg)
-            stats.dgm_compactions += 1
-            alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
-            support = jnp.full(dg.rows_pad, _INF, cfg.dtype)
-            support = support.at[: dg.n_rows].set(
-                jnp.asarray(sup_keep, cfg.dtype)
-            )
-            dv = dg.dv0
-            alive_np = np.zeros(dg.rows_pad, bool)
-            alive_np[: dg.n_rows] = True
-            sup_np = np.full(dg.rows_pad, np.inf)
-            sup_np[: dg.n_rows] = sup_keep
-            rem_wedges = dg.total_wedges
-            peel_width = min(peel_width, dg.initial_peel_width())
-
-    stats.num_subsets = i
-    stats.bounds = [float(b) for b in bounds]
-    stats.time_cd = time.perf_counter() - t0
-    # every vertex must be assigned
-    assert (subset_id >= 0).all(), "CD left unassigned vertices"
-    return subset_id, init_support, np.asarray(bounds), None
-
-
-# ---------------------------------------------------------------------- #
-# FD — fine-grained decomposition (Alg. 4)
-# ---------------------------------------------------------------------- #
-def _fd_peel_b2(b2, sup0, n_members, lo):
-    """Exact sequential bottom-up peel of one padded subset (B2 mode).
-
-    b2: (M, M) pairwise shared butterflies (zero diag, zero on padding);
-    sup0: (M,) FD-initialized supports (+inf padding); returns theta (M,).
-    """
-    mm = b2.shape[0]
-
-    def body(t, st):
-        sup, alive, theta = st
-        masked = jnp.where(alive, sup, _INF)
-        u = jnp.argmin(masked)
-        th = jnp.maximum(masked[u], lo)
-        do = t < n_members
-        theta = jnp.where(do, theta.at[u].set(th), theta)
-        new_sup = jnp.maximum(sup - b2[u], th)
-        sup = jnp.where(do & alive, new_sup, sup)
-        alive = jnp.where(do, alive.at[u].set(False), alive)
-        return sup, alive, theta
-
-    alive0 = jnp.arange(mm) < n_members
-    theta0 = jnp.zeros(mm, sup0.dtype)
-    _, _, theta = jax.lax.fori_loop(0, mm, body, (sup0, alive0, theta0))
-    return theta
-
-
-_fd_peel_b2_vm = jax.jit(jax.vmap(_fd_peel_b2, in_axes=(0, 0, 0, 0)))
-
-
-def _fd_peel_matvec(a_sub, sup0, n_members, lo):
-    """Exact sequential peel recomputing one B2 row per step (matvec mode).
-
-    a_sub: (M, C) induced biadjacency; avoids materializing (M, M).
-    """
-    mm = a_sub.shape[0]
-
-    def body(t, st):
-        sup, alive, theta = st
-        masked = jnp.where(alive, sup, _INF)
-        u = jnp.argmin(masked)
-        th = jnp.maximum(masked[u], lo)
-        do = t < n_members
-        w_row = a_sub @ a_sub[u]                       # (M,) wedge counts
-        b2_row = w_row * (w_row - 1.0) * 0.5
-        b2_row = b2_row.at[u].set(0.0)
-        new_sup = jnp.maximum(sup - b2_row, th)
-        theta = jnp.where(do, theta.at[u].set(th), theta)
-        sup = jnp.where(do & alive, new_sup, sup)
-        alive = jnp.where(do, alive.at[u].set(False), alive)
-        return sup, alive, theta
-
-    alive0 = jnp.arange(mm) < n_members
-    theta0 = jnp.zeros(mm, sup0.dtype)
-    _, _, theta = jax.lax.fori_loop(0, mm, body, (sup0, alive0, theta0))
-    return theta
-
-
-_fd_peel_matvec_vm = jax.jit(jax.vmap(_fd_peel_matvec, in_axes=(0, 0, 0, 0)))
-
-
-def receipt_fd(
-    g: BipartiteGraph,
-    subset_id: np.ndarray,
-    init_support: np.ndarray,
-    bounds: np.ndarray,
-    cfg: ReceiptConfig,
-    stats: RunStats,
-) -> np.ndarray:
-    """Exact tip numbers by independent peeling of induced subgraphs."""
-    t0 = time.perf_counter()
-    n_sub = int(subset_id.max()) + 1
-    theta = np.zeros(g.n_u, np.float64)
-
-    # build per-subset induced subgraphs (host; this IS the paper's
-    # "induce subgraph + only traverse its wedges" saving)
-    tasks = []
-    for i in range(n_sub):
-        members = np.where(subset_id == i)[0]
-        stats.subset_sizes.append(len(members))
-        if len(members) == 0:
-            stats.subset_wedges_fd.append(0)
-            continue
-        sub, _ = g.induced_on_u(members)
-        wsub = int(sub.wedge_counts_u().sum())
-        stats.subset_wedges_fd.append(wsub)
-        stats.wedges_fd += wsub
-        tasks.append(
-            dict(
-                members=members,
-                sub=sub,
-                lo=float(bounds[i]),
-                wedges=wsub,
-            )
-        )
-
-    # workload-aware scheduling: group into equal-padded stacks (LPT analog)
-    groups = pack_by_shape(
-        tasks,
-        size_of=lambda t: (len(t["members"]), max(t["sub"].n_v, 1)),
-        weight_of=lambda t: t["wedges"],
-        bucket=lambda n: _bucket(n, 8),
-    )
-
-    for group in groups:
-        mm = max(_bucket(max(len(t["members"]) for t in group), 8), 8)
-        cc = max(_bucket(max(t["sub"].n_v for t in group), 8), 8)
-        n_g = len(group)
-        sup0 = np.full((n_g, mm), np.inf, np.float64)
-        nmem = np.zeros(n_g, np.int32)
-        los = np.zeros(n_g, np.float64)
-        a_stack = np.zeros((n_g, mm, cc), np.float32)
-        for k, t in enumerate(group):
-            mems = t["members"]
-            nmem[k] = len(mems)
-            los[k] = t["lo"]
-            sup0[k, : len(mems)] = init_support[mems]
-            s = t["sub"]
-            a_stack[k, s.edges_u, s.edges_v] = 1.0
-
-        a_dev = jnp.asarray(a_stack, cfg.dtype)
-        sup_dev = jnp.asarray(sup0, cfg.dtype)
-        nm_dev = jnp.asarray(nmem)
-        lo_dev = jnp.asarray(los, cfg.dtype)
-        if cfg.fd_mode == "b2":
-            w = jnp.einsum("gmc,gnc->gmn", a_dev, a_dev)
-            b2 = w * (w - 1.0) * 0.5
-            eye = jnp.eye(mm, dtype=cfg.dtype)
-            b2 = b2 * (1.0 - eye)[None]
-            th = _fd_peel_b2_vm(b2, sup_dev, nm_dev, lo_dev)
-        else:
-            th = _fd_peel_matvec_vm(a_dev, sup_dev, nm_dev, lo_dev)
-        th_np = np.asarray(th, np.float64)
-        stats.host_round_trips += 1
-        for k, t in enumerate(group):
-            theta[t["members"]] = th_np[k, : nmem[k]]
-
-    stats.time_fd = time.perf_counter() - t0
-    return theta
-
-
-# ---------------------------------------------------------------------- #
-# ParB baseline in the SAME engine (same kernels, bottom-up schedule)
-# ---------------------------------------------------------------------- #
-def parb_tip_decompose(
-    g: BipartiteGraph, cfg: Optional[ReceiptConfig] = None
-) -> Tuple[np.ndarray, RunStats]:
-    """PARBUTTERFLY-style batch peeling on the dense engine.
-
-    Identical kernels/dispatch machinery to RECEIPT, but each sweep peels
-    only the CURRENT MINIMUM support set (the ParB schedule).  This is the
-    apples-to-apples wall-clock baseline for Table 3: the only difference
-    from RECEIPT is the number of synchronization rounds.  The same
-    device-resident while_loop engine drives it (``minmode=True``: the
-    min-support threshold is recomputed ON DEVICE each sweep, and theta is
-    recorded in the loop state), including terminal-sweep elision;
-    ``cfg.device_loop=False`` preserves the blocking host schedule.
-    """
-    cfg = cfg or ReceiptConfig()
-    stats = RunStats()
-    backend = cfg.backend or kops.default_backend()
-    blocks = cfg.kernel_blocks
-    sparse = backend in kops.SPARSE_BACKENDS
-
-    dg = _DeviceGraph(g, np.arange(g.n_u), cfg)
-    stats.wedges_pvbcnt = g.counting_wedge_bound()
-    alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
-    support = _support_all(dg.a, alive, dg.ids,
-                           dg.kmax if sparse else None,
-                           backend=backend, blocks=blocks)
-    support = jnp.where(alive, support, _INF)
-    dv = dg.dv0
-
-    theta = np.zeros(g.n_u, np.int64)
-    t0 = time.perf_counter()
-    if cfg.device_loop:
-        theta_dev = jnp.zeros(dg.rows_pad, jnp.float32)
-        # min-support sets are small (ParB's whole problem is that there
-        # are MANY of them): start at one kernel tile and let the
-        # overflow path double on demand
-        peel_width = min(dg.rows_pad, _bucket(
-            cfg.peel_width if cfg.peel_width is not None else blocks[1],
-            blocks[1],
-        ))
-        while True:
-            (support, alive, dv, theta_dev, peeled, d_rho, d_wedges, _h,
-             d_elided, _c, _s, ovf) = _cd_device_loop(
-                dg.a, dg.ids, dg.row_ext, dg.kmax, support, alive, dv,
-                theta_dev, 0.0, 0.0, 0.0,
-                backend=backend, blocks=blocks, use_huc=False,
-                peel_width=peel_width, max_sweeps=cfg.max_sweeps,
-                minmode=True,
-            )
-            stats.device_loop_calls += 1
-            (peeled_np, alive_np, th_np, d_rho, d_wedges, d_elided,
-             ovf_h) = jax.device_get(
-                (peeled, alive, theta_dev, d_rho, d_wedges, d_elided, ovf))
-            stats.host_round_trips += 1
-            stats.rho_cd += int(d_rho)
-            stats.wedges_cd += int(d_wedges)
-            stats.elided_sweeps += int(d_elided)
-            sel = peeled_np[: dg.n_rows].nonzero()[0]
-            theta[dg.members[sel]] = np.round(th_np[: dg.n_rows][sel]).astype(
-                np.int64)
-            if not bool(ovf_h):
-                if not alive_np.any():
-                    break
-                # max_sweeps cap-exit with survivors left (the host
-                # schedule has no cap): re-enter — the loop reseeds its
-                # sweep counter.  d_rho == 0 means no progress is
-                # possible (max_sweeps <= 0): bail instead of spinning.
-                if int(d_rho) == 0:
-                    break
-                continue
-            # overflow: replay the min-sweep on the host, widen, re-enter
-            stats.overflow_fallbacks += 1
-            sup_np = np.asarray(support, np.float64)
-            stats.host_round_trips += 1
-            mn = float(np.min(np.where(alive_np, sup_np, np.inf)))
-            support, alive, info = _host_sweep(
-                dg, cfg, stats, support, alive, mn + 1.0, mn, backend,
-                blocks, allow_huc=False)
-            if info is not None:
-                sel = info["peel_np"][: dg.n_rows].nonzero()[0]
-                theta[dg.members[sel]] = int(mn)
-            dv = _residual_dv(dg.a, alive)
-            peel_width = min(dg.rows_pad, peel_width * 2)
-    else:
-        while True:
-            n_alive = int(jnp.sum(alive))
-            stats.host_round_trips += 1
-            if n_alive == 0:
-                break
-            mn = float(jnp.min(jnp.where(alive, support, _INF)))
-            stats.host_round_trips += 1
-            support, alive, info = _host_sweep(
-                dg, cfg, stats, support, alive, mn + 1.0, mn, backend,
-                blocks, allow_huc=False)
-            if info is None:
-                break
-            sel = info["peel_np"][: dg.n_rows].nonzero()[0]
-            theta[dg.members[sel]] = int(mn)
-    stats.time_cd = time.perf_counter() - t0
-    return theta, stats
-
-
-# ---------------------------------------------------------------------- #
-# top level
-# ---------------------------------------------------------------------- #
-def tip_decompose(
-    g: BipartiteGraph, cfg: Optional[ReceiptConfig] = None,
-    *, side: str = "U",
-) -> Tuple[np.ndarray, RunStats]:
-    """Full RECEIPT tip decomposition of one side of ``g``.
-
-    side="V" peels the other vertex set (the paper decomposes both sides
-    of every dataset — *U/*V rows of Table 3); implemented by transposing
-    the bipartite graph, which is exact by symmetry.
-
-    Returns (theta int64[n_side], RunStats).
-    """
-    cfg = cfg or ReceiptConfig()
-    if side == "V":
-        g = BipartiteGraph.from_edges(g.n_v, g.n_u, g.edges_v, g.edges_u)
-    elif side != "U":
-        raise ValueError(f"side must be 'U' or 'V', got {side!r}")
-    stats = RunStats()
-    if cfg.degree_sort:
-        # relabel for tile density; map results back at the end
-        du = g.degrees_u()
-        perm_u = np.argsort(-du, kind="stable")
-        dv = g.degrees_v()
-        perm_v = np.argsort(-dv, kind="stable")
-        inv_u = np.empty_like(perm_u)
-        inv_u[perm_u] = np.arange(g.n_u)
-        inv_v = np.empty_like(perm_v)
-        inv_v[perm_v] = np.arange(g.n_v)
-        g_work = BipartiteGraph.from_edges(
-            g.n_u, g.n_v, inv_u[g.edges_u], inv_v[g.edges_v]
-        )
-    else:
-        perm_u = np.arange(g.n_u)
-        g_work = g
-
-    subset_id, init_support, bounds, _ = receipt_cd(g_work, cfg, stats)
-    theta_work = receipt_fd(g_work, subset_id, init_support, bounds, cfg, stats)
-
-    theta = np.zeros(g.n_u, np.int64)
-    theta[perm_u] = np.round(theta_work).astype(np.int64)
-    return theta, stats
+from .engine.fd import _fd_peel_b2, _fd_peel_matvec  # noqa: F401 (compat)
+from .engine.peel_loop import (  # noqa: F401 (compat)
+    apply_delta,
+    residual_dv,
+    support_all,
+    support_delta,
+    sweep_info,
+)
+
+# pre-split private aliases (kept so downstream forks / notebooks that
+# reached into the module keep working)
+_DeviceGraph = DeviceGraph
+_cd_device_loop = device_peel_loop
+_host_sweep = host_sweep
+_bucket = bucket
+_find_hi_np = find_hi_np
+_support_all = support_all
+_support_delta = support_delta
+_sweep_info = sweep_info
+_residual_dv = residual_dv
+_apply_delta = apply_delta
+
+__all__ = [
+    "ReceiptConfig",
+    "RunStats",
+    "tip_decompose",
+    "receipt_cd",
+    "receipt_fd",
+    "parb_tip_decompose",
+    "cd_checkpoint_state",
+    "DeviceGraph",
+    "device_peel_loop",
+    "batched_level_loop",
+    "host_sweep",
+    "bucket",
+    "find_hi_np",
+]

@@ -14,9 +14,9 @@ TPU has no device-side work stealing, so the analogue is *static packing*:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-__all__ = ["pack_by_shape", "lpt_assign"]
+__all__ = ["pack_by_shape", "lpt_assign", "lpt_shard_plan"]
 
 
 def pack_by_shape(
@@ -25,17 +25,21 @@ def pack_by_shape(
     size_of: Callable,
     weight_of: Callable,
     bucket: Callable[[int], int],
+    bucket_cols: Optional[Callable[[int], int]] = None,
 ) -> List[List]:
     """Group tasks by bucketed padded shape; LPT order inside each group.
 
     size_of(task) -> (rows, cols); weight_of(task) -> workload proxy
-    (wedge count); bucket(n) -> padded size.  Returns a list of groups
-    (each a list of tasks), heaviest groups first.
+    (wedge count); bucket(n) -> padded size (rows; also cols unless
+    ``bucket_cols`` overrides it — kernel row/contraction tiles usually
+    differ).  Returns a list of groups (each a list of tasks), heaviest
+    groups first.
     """
+    bucket_cols = bucket_cols or bucket
     groups: Dict[Tuple[int, int], List] = {}
     for t in tasks:
         r, c = size_of(t)
-        key = (bucket(max(r, 1)), bucket(max(c, 1)))
+        key = (bucket(max(r, 1)), bucket_cols(max(c, 1)))
         groups.setdefault(key, []).append(t)
     out = []
     for key in sorted(groups, key=lambda k: -(k[0] * k[1])):
@@ -59,3 +63,23 @@ def lpt_assign(weights: Sequence[float], k: int) -> List[List[int]]:
         assign[j].append(i)
         loads[j] += weights[i]
     return assign
+
+
+def lpt_shard_plan(weights: Sequence[float], k: int) -> Tuple[List[int], int]:
+    """LPT assignment flattened into a shardable layout.
+
+    Returns (slots, per_shard): ``slots`` is a length ``k * per_shard``
+    list where slot ``s * per_shard + j`` holds the task index placed at
+    position j of shard s, or -1 for a padding slot.  Reordering a task
+    stack by this plan makes contiguous equal-size shards LPT-balanced —
+    the layout the distributed FD driver feeds to a mesh whose group dim
+    is sharded over all axes (core/distributed.py).
+    """
+    assign = lpt_assign(weights, k)
+    per_shard = max((len(a) for a in assign), default=0)
+    per_shard = max(per_shard, 1)
+    slots = []
+    for a in assign:
+        slots.extend(a)
+        slots.extend([-1] * (per_shard - len(a)))
+    return slots, per_shard

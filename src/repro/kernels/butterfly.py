@@ -43,7 +43,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["butterfly_kernel_body", "butterfly_support_pallas"]
+__all__ = [
+    "butterfly_kernel_body",
+    "butterfly_support_pallas",
+    "butterfly_update_pallas_batched",
+]
 
 DEFAULT_BLOCKS = (128, 128, 512)
 
@@ -143,3 +147,105 @@ def butterfly_support_pallas(
         ids_b.reshape(1, n_b).astype(jnp.int32),
     )
     return out[0]
+
+
+# ---------------------------------------------------------------------- #
+# grouped / batched entry point (FD level-peel stacks)
+# ---------------------------------------------------------------------- #
+def butterfly_batched_kernel_body(
+    a_ref,        # (1, BI, BK)  output-side rows of one group
+    b_ref,        # (1, BJ, BK)  mask-side rows of one group
+    s_ref,        # (1, 1, BJ)   row mask tile
+    ida_ref,      # (1, 1, BI)   local U ids of output rows
+    idb_ref,      # (1, 1, BJ)   local U ids of mask rows
+    out_ref,      # (1, 1, BI)   output tile
+    w_acc_ref,    # (BI, BJ)     VMEM scratch: wedge tile accumulator
+    *,
+    n_k: int,
+):
+    """Group-batched variant of ``butterfly_kernel_body``: grid gains a
+    leading group dimension (one independent FD subset per group slot), so
+    a whole vmap stack of induced subgraphs is swept by ONE kernel launch.
+    The per-group computation is identical to the single-graph body."""
+    j, k = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero_wedge_acc():
+        w_acc_ref[...] = jnp.zeros_like(w_acc_ref)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _zero_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w_acc_ref[...] += jax.lax.dot_general(
+        a_ref[0],
+        b_ref[0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        w = w_acc_ref[...]
+        not_self = (
+            ida_ref[0, 0, :][:, None] != idb_ref[0, 0, :][None, :]
+        ).astype(w.dtype)
+        b2 = w * (w - 1.0) * 0.5
+        contrib = b2 * not_self * s_ref[0, 0, :][None, :]
+        out_ref[...] += jnp.sum(contrib, axis=1)[None, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def butterfly_update_pallas_batched(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    s: jnp.ndarray,
+    ids_a: jnp.ndarray,
+    ids_b: jnp.ndarray,
+    *,
+    blocks: tuple = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """out[g, i] = sum_{j: ids_b[g,j] != ids_a[g,i]} s[g,j] * C((A_g B_g^T)[i,j], 2).
+
+    a: (G, n_a, n_v); b: (G, n_b, n_v); s: (G, n_b); ids: (G, n) int32
+    LOCAL row ids within each group.  Row/col dims must be pre-padded to
+    blocks; the group dim is unconstrained (block size 1).  One launch
+    sweeps every stacked subset — the grouped entry point the FD
+    level-peel runtime dispatches through.
+    """
+    g_n, n_a, n_v = a.shape
+    n_b = b.shape[1]
+    bi, bj, bk = blocks
+    if n_a % bi or n_b % bj or n_v % bk:
+        raise ValueError(f"shapes {a.shape}/{b.shape} not padded to {blocks}")
+    n_i, n_j, n_k = n_a // bi, n_b // bj, n_v // bk
+
+    kernel = functools.partial(butterfly_batched_kernel_body, n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(g_n, n_i, n_j, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bi, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bj, bk), lambda g, i, j, k: (g, j, k)),
+            pl.BlockSpec((1, 1, bj), lambda g, i, j, k: (g, 0, j)),
+            pl.BlockSpec((1, 1, bi), lambda g, i, j, k: (g, 0, i)),
+            pl.BlockSpec((1, 1, bj), lambda g, i, j, k: (g, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bi), lambda g, i, j, k: (g, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((g_n, 1, n_a), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=(
+                "parallel", "parallel", "arbitrary", "arbitrary",
+            ),
+        ),
+        interpret=interpret,
+    )(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        s.reshape(g_n, 1, n_b).astype(jnp.float32),
+        ids_a.reshape(g_n, 1, n_a).astype(jnp.int32),
+        ids_b.reshape(g_n, 1, n_b).astype(jnp.int32),
+    )
+    return out[:, 0, :]

@@ -38,9 +38,12 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "column_extents",
     "row_extents",
+    "batched_row_extents",
     "gathered_tile_extents",
+    "batched_gathered_tile_extents",
     "butterfly_support_pallas_sparse",
     "butterfly_update_pallas_sparse",
+    "butterfly_update_pallas_sparse_batched",
 ]
 
 
@@ -81,6 +84,34 @@ def gathered_tile_extents(row_ext: jnp.ndarray, rows: jnp.ndarray,
     """
     ext = jnp.where(valid.astype(bool), row_ext[rows], 0)
     return ext.reshape(-1, block_rows).max(axis=1).astype(jnp.int32)
+
+
+def batched_row_extents(a_stack: np.ndarray, block_k: int) -> np.ndarray:
+    """Per-row extents for a (G, M, C) stack: ext[g, r] = last nonzero
+    k-stripe of row r in group g, + 1 (host-side, one vectorized pass)."""
+    g_n, n_rows, n_v = a_stack.shape
+    n_k = n_v // block_k
+    nz = a_stack.reshape(g_n, n_rows, n_k, block_k).sum(axis=3) > 0
+    any_nz = nz.any(axis=2)
+    last = n_k - np.argmax(nz[:, :, ::-1], axis=2)
+    return np.where(any_nz, last, 0).astype(np.int32)
+
+
+def batched_gathered_tile_extents(row_ext: jnp.ndarray, rows: jnp.ndarray,
+                                  valid: jnp.ndarray,
+                                  block_rows: int) -> jnp.ndarray:
+    """Per-group device-side extents for gathered row-tile stacks.
+
+    row_ext: (G, M) int32; rows: (G, W) gathered local row ids; valid:
+    (G, W) padding mask.  Returns (G, W/block_rows) int32 — the B-side
+    staircase metadata of the batched sparse kernel, one staircase per
+    group member.
+    """
+    ext = jnp.where(
+        valid.astype(bool), jnp.take_along_axis(row_ext, rows, axis=1), 0
+    )
+    return ext.reshape(ext.shape[0], -1, block_rows).max(axis=2).astype(
+        jnp.int32)
 
 
 def _update_kernel(
@@ -181,6 +212,104 @@ def butterfly_update_pallas_sparse(
         ids_b.reshape(1, n_b).astype(jnp.int32),
     )
     return out[0]
+
+
+def _batched_update_kernel(
+    kmax_a_ref,   # scalar prefetch: (G, n_i) int32 per-group A tile extents
+    kmax_b_ref,   # scalar prefetch: (G, n_j) int32 per-group B tile extents
+    a_ref, b_ref, s_ref, ida_ref, idb_ref,
+    out_ref, w_acc_ref,
+    *,
+    n_k: int,
+):
+    """Group-batched staircase kernel: the stripe skip consults the
+    extents OF THIS GROUP MEMBER (each stacked subset has its own
+    staircase after per-subset degree relabeling / induction)."""
+    g = pl.program_id(0)
+    i, j, k = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero_wedge_acc():
+        w_acc_ref[...] = jnp.zeros_like(w_acc_ref)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _zero_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    live = k < jnp.minimum(kmax_a_ref[g, i], kmax_b_ref[g, j])
+
+    @pl.when(live)
+    def _accumulate():
+        w_acc_ref[...] += jax.lax.dot_general(
+            a_ref[0], b_ref[0],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        w = w_acc_ref[...]
+        not_self = (
+            ida_ref[0, 0, :][:, None] != idb_ref[0, 0, :][None, :]
+        ).astype(w.dtype)
+        b2 = w * (w - 1.0) * 0.5
+        contrib = b2 * not_self * s_ref[0, 0, :][None, :]
+        out_ref[...] += jnp.sum(contrib, axis=1)[None, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def butterfly_update_pallas_sparse_batched(
+    a: jnp.ndarray,               # (G, n_a, n_v)
+    b: jnp.ndarray,               # (G, n_b, n_v)
+    s: jnp.ndarray,               # (G, n_b)
+    ids_a: jnp.ndarray,           # (G, n_a) int32 local ids
+    ids_b: jnp.ndarray,           # (G, n_b) int32 local ids
+    kmax_a: jnp.ndarray,          # (G, n_a/bi) int32 per-group A extents
+    kmax_b: jnp.ndarray,          # (G, n_b/bj) int32 per-group B extents
+    *,
+    blocks: Tuple[int, int, int] = (128, 128, 512),
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched gathered-B staircase update: one launch per FD group stack,
+    scalar-prefetched extents PER GROUP MEMBER.  Same per-group contract
+    as ``butterfly_update_pallas_sparse``; exact for any per-group extent
+    upper bounds."""
+    g_n, n_a, n_v = a.shape
+    n_b = b.shape[1]
+    bi, bj, bk = blocks
+    if n_a % bi or n_b % bj or n_v % bk:
+        raise ValueError(f"shapes {a.shape}/{b.shape} not padded to {blocks}")
+    n_i, n_j, n_k = n_a // bi, n_b // bj, n_v // bk
+
+    kernel = functools.partial(_batched_update_kernel, n_k=n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(g_n, n_i, n_j, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bi, bk), lambda g, i, j, k, ka, kb: (g, i, k)),
+            pl.BlockSpec((1, bj, bk), lambda g, i, j, k, ka, kb: (g, j, k)),
+            pl.BlockSpec((1, 1, bj), lambda g, i, j, k, ka, kb: (g, 0, j)),
+            pl.BlockSpec((1, 1, bi), lambda g, i, j, k, ka, kb: (g, 0, i)),
+            pl.BlockSpec((1, 1, bj), lambda g, i, j, k, ka, kb: (g, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bi), lambda g, i, j, k, ka, kb: (g, 0, i)),
+        scratch_shapes=[pltpu.VMEM((bi, bj), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g_n, 1, n_a), jnp.float32),
+        interpret=interpret,
+    )(
+        kmax_a.astype(jnp.int32),
+        kmax_b.astype(jnp.int32),
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        s.reshape(g_n, 1, n_b).astype(jnp.float32),
+        ids_a.reshape(g_n, 1, n_a).astype(jnp.int32),
+        ids_b.reshape(g_n, 1, n_b).astype(jnp.int32),
+    )
+    return out[:, 0, :]
 
 
 @functools.partial(jax.jit, static_argnames=("blocks", "interpret"))

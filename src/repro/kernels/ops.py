@@ -9,7 +9,7 @@ The wrappers:
     validation of the same kernel body), or the pure-jnp oracle
     (fast CPU execution path for benchmarks),
   * keep everything jittable (fixed shapes; padding is the caller's
-    responsibility via the bucketing helpers in core/receipt.py).
+    responsibility via the bucketing helpers in core/engine/peel_loop.py).
 
 Backends (DESIGN.md section 2.1 routing table):
     "pallas"            pl.pallas_call, compiled (TPU target), dense tiles
@@ -31,12 +31,20 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .butterfly import DEFAULT_BLOCKS, butterfly_support_pallas
-from .butterfly_sparse import butterfly_update_pallas_sparse
+from .butterfly import (
+    DEFAULT_BLOCKS,
+    butterfly_support_pallas,
+    butterfly_update_pallas_batched,
+)
+from .butterfly_sparse import (
+    butterfly_update_pallas_sparse,
+    butterfly_update_pallas_sparse_batched,
+)
 
 __all__ = [
     "butterfly_support",
     "butterfly_update",
+    "butterfly_update_batched",
     "default_backend",
     "SPARSE_BACKENDS",
 ]
@@ -98,6 +106,59 @@ def butterfly_update(
         )
     return butterfly_support_pallas(
         a, b, s, ids_a, ids_b, blocks=blocks, interpret=(backend == "interpret")
+    )
+
+
+def _update_ref_batched(a, b, s, ids_a, ids_b):
+    w = jnp.einsum("gic,gjc->gij", a, b)
+    b2 = w * (w - 1.0) * 0.5
+    not_self = (ids_a[:, :, None] != ids_b[:, None, :]).astype(a.dtype)
+    return jnp.einsum("gij,gj->gi", b2 * not_self, s.astype(a.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def butterfly_update_batched(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    s: jnp.ndarray,
+    ids_a: jnp.ndarray,
+    ids_b: jnp.ndarray,
+    *,
+    backend: Optional[str] = None,
+    blocks: tuple = DEFAULT_BLOCKS,
+    kmax_a: Optional[jnp.ndarray] = None,
+    kmax_b: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Grouped/batched butterfly update over a stack of independent
+    subgraphs (the FD level-peel hot op):
+
+        out[g, i] = sum_{j: ids_b[g,j] != ids_a[g,i]} s[g,j]
+                    * C((A_g B_g^T)[i, j], 2)
+
+    a: (G, n_a, n_v); b: (G, n_b, n_v); s: (G, n_b); ids (G, n) LOCAL
+    row ids.  ``kmax_a`` / ``kmax_b`` are per-group row-tile column
+    extents ((G, n_a/bi) / (G, n_b/bj) int32) consumed only by the sparse
+    backends — each stacked subset carries its own staircase.
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend == "xla":
+        return _update_ref_batched(a, b, s, ids_a, ids_b)
+    if backend in SPARSE_BACKENDS:
+        bi, bj, bk = blocks
+        n_k = a.shape[2] // bk
+        g_n = a.shape[0]
+        if kmax_a is None:
+            kmax_a = jnp.full((g_n, a.shape[1] // bi), n_k, jnp.int32)
+        if kmax_b is None:
+            kmax_b = jnp.full((g_n, b.shape[1] // bj), n_k, jnp.int32)
+        return butterfly_update_pallas_sparse_batched(
+            a, b, s, ids_a, ids_b, kmax_a, kmax_b,
+            blocks=blocks, interpret=(backend == "interpret_sparse"),
+        )
+    return butterfly_update_pallas_batched(
+        a, b, s, ids_a, ids_b, blocks=blocks,
+        interpret=(backend == "interpret"),
     )
 
 

@@ -196,6 +196,7 @@ def test_property_hub_graphs(n_u, n_hubs, seed):
 # --------------------------------------------------------------------- #
 # device-resident sweep loop vs the host-driven engine
 # --------------------------------------------------------------------- #
+@pytest.mark.slow
 @pytest.mark.parametrize("case", ["er_small", "powerlaw", "vhub", "star",
                                   "empty_edges"])
 def test_device_loop_equals_host_loop(case):
@@ -225,6 +226,7 @@ def test_device_loop_reduces_host_round_trips():
     assert s_d.device_loop_calls >= s_d.num_subsets
 
 
+@pytest.mark.slow
 def test_device_loop_overflow_fallback_exact():
     """A deliberately tiny peel buffer forces the bucket-overflow path
     (host replays the oversized sweep, buffer doubles): still exact."""
@@ -235,6 +237,7 @@ def test_device_loop_overflow_fallback_exact():
     assert stats.overflow_fallbacks > 0
 
 
+@pytest.mark.slow
 def test_device_loop_matches_oracle_random():
     """Randomized equivalence: device-resident CD theta == BUP oracle."""
     rng = np.random.default_rng(123)
@@ -253,6 +256,7 @@ def test_device_loop_matches_oracle_random():
         assert s_d.rho_cd == s_h.rho_cd, trial
 
 
+@pytest.mark.slow
 def test_sparse_backend_through_engine():
     """The block-sparse staircase backend (gathered-B peel updates, HUC
     recounts, counting) drives the full engine exactly."""
@@ -262,6 +266,7 @@ def test_sparse_backend_through_engine():
     np.testing.assert_array_equal(tb, tr)
 
 
+@pytest.mark.slow
 def test_parb_device_loop_equals_host():
     """ParB baseline: device-resident min-schedule == host schedule,
     including terminal-sweep elision."""
@@ -280,6 +285,7 @@ def test_parb_device_loop_equals_host():
     assert sd.host_round_trips < sh.host_round_trips
 
 
+@pytest.mark.slow
 def test_parb_device_loop_sweep_cap_reenters():
     """A tiny max_sweeps forces repeated cap-exits of the device loop;
     the driver must re-enter (the host schedule has no cap), not silently
