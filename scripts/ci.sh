@@ -42,7 +42,12 @@ if failed:
 print(f"ok: {len(list(root.rglob('*.py')))} modules import cleanly")
 EOF
 
+echo "== docs lint (README/DESIGN anchors, links, algorithm map) =="
+python scripts/docs_lint.py
+
 if [ "$MODE" = "quick" ]; then
+  echo "== collect-only gate (imports + test ids resolve) =="
+  python -m pytest --collect-only -q > /dev/null
   echo "== test suite (quick: -m 'not slow') =="
   python -m pytest -x -q -m "not slow" "$@"
 else

@@ -21,10 +21,17 @@ FD is a vmapped stack of independent subsets, one per device (subset dim
 sharded over ALL mesh axes): ZERO collectives, the paper's independence
 property preserved exactly.  ``distributed_fd_level_peel`` runs the
 unified core's batched LEVEL-peel loop (engine/peel_loop.py) per shard,
-with shape groups LPT-assigned to devices via scheduler.lpt_shard_plan
-(Graham's rule — the paper's workload-aware scheduling, Fig. 3).
+with subsets LPT-assigned to devices via scheduler.lpt_shard_plan
+(Graham's rule — the paper's workload-aware scheduling, Fig. 3).  It is
+wired END TO END into ``receipt_fd(mesh=...)`` (DESIGN.md §4):
+``shard_level_group`` lays out each shape group's survivor +
+first-level stacks (load carryover across groups via
+``lpt_assign(init_loads=...)``), the shard_map local body replays the
+single-device launch sequence (first-level delta, then the level loop),
+and the driver reconciles per-shard rho/wedge loads into one RunStats.
 
-These functions serve three callers:
+These functions serve four callers:
+  * core/engine/fd.py — ``receipt_fd(mesh=...)``, the production driver,
   * launch/dryrun.py — .lower()/.compile() on the 512-device meshes,
   * tests/test_distributed.py — real 8-device CPU runs vs the
     single-device engine,
@@ -358,14 +365,82 @@ def shard_fd_stack(a_stack, sup0, nmem, lo, weights, n_shards):
     return a, sup, alive, dv, lo_out, np.asarray(slots)
 
 
-def fd_level_shardmap(mesh: Mesh, *, max_sweeps: int = 100_000):
+def shard_level_group(built: dict, n_shards: int, init_loads=None):
+    """Reorder one FD shape group's level stacks into the LPT shard layout.
+
+    ``built`` is `engine/fd.build_level_stack` output (survivor stack +
+    first-level stack + per-subset metadata).  Tasks are LPT-assigned to
+    ``n_shards`` equal-size contiguous shards by their static wedge
+    bound (``scheduler.lpt_shard_plan`` — Graham's 4/3 rule, the paper's
+    workload-aware scheduling mapped onto the mesh); ``init_loads``
+    carries accumulated shard loads across shape groups so the whole-run
+    assignment balances, not just each group's.  Padding slots are dead
+    groups (``alive`` all False, ``sup`` all inf) the level loop no-ops
+    over.
+
+    Returns (arrays, slots): ``arrays`` has the
+    ``distributed_fd_level_peel`` inputs plus ``per_shard`` and
+    ``shard_load`` (this group's static wedge mass per shard);
+    ``slots[s]`` is the group-list index occupying stack slot ``s``
+    (-1 = padding).
+    """
+    from .scheduler import lpt_shard_plan
+
+    group = built["group"]
+    weights = [t["wedges"] for t in group]
+    slots, per_shard = lpt_shard_plan(weights, n_shards, init_loads)
+    n_slots = n_shards * per_shard
+    mm, cc, w1 = built["mm"], built["cc"], built["w1"]
+    a = np.zeros((n_slots, mm, cc), np.float32)
+    a_l1 = np.zeros((n_slots, w1, cc), np.float32)
+    sup = np.full((n_slots, mm), np.inf, np.float32)
+    alive = np.zeros((n_slots, mm), bool)
+    n_l1 = np.zeros(n_slots, np.int32)
+    cap1 = np.full(n_slots, -np.inf, np.float32)
+    lo = np.zeros(n_slots, np.float32)
+    for s, t in enumerate(slots):
+        if t < 0:
+            continue
+        a[s] = built["a"][t]
+        a_l1[s] = built["a_l1"][t]
+        sup[s] = built["sup0"][t]
+        alive[s] = built["alive0"][t]
+        n_l1[s] = built["n_l1"][t]
+        cap1[s] = built["cap1"][t]
+        lo[s] = built["los"][t]
+    dv = a.sum(axis=1)
+    shard_load = np.array([
+        sum(weights[t] for t in slots[i * per_shard:(i + 1) * per_shard]
+            if t >= 0)
+        for i in range(n_shards)
+    ], np.float64)
+    return dict(a=a, a_l1=a_l1, sup=sup, alive=alive, dv=dv, n_l1=n_l1,
+                cap1=cap1, lo=lo, per_shard=per_shard,
+                shard_load=shard_load), np.asarray(slots)
+
+
+def fd_level_shardmap(mesh: Mesh, *, max_sweeps: int = 100_000,
+                      update_mode: str = "b2",
+                      peel_width: Optional[int] = None,
+                      full_state: bool = False):
     """Batched level-peel with the group dim sharded over EVERY mesh axis:
     each device runs the unified peel core's level loop on its local
     shard with ZERO collectives (shard_map makes the paper's subset
     independence explicit — each shard's while_loop exits as soon as ITS
     groups drain, no global any(alive) all-reduce per sweep).
 
-    Returns a function (a, sup, alive, dv, lo) -> (theta, rho, wedges).
+    The local body is the SAME launch sequence as the single-device FD
+    driver (`engine/fd._run_level_groups`): apply the host pre-peel's
+    first-level support delta (group-local — L1 rows are distinct
+    vertices from the survivor rows, so no self-pair masking), then run
+    ``batched_level_loop`` with the group's update mode and peel width.
+    Callers without a first level pass ``n_l1 = 0`` / ``cap1 = -inf``
+    (the delta and the floor both become no-ops).
+
+    Returns a function (a, a_l1, n_l1, cap1, sup, alive, dv, lo) ->
+    (theta, rho, wedges), or with ``full_state=True`` the whole carried
+    state (sup, alive, dv, theta, rho, wedges) so the end-to-end driver
+    can re-enter after a ``max_sweeps`` cap-exit.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -373,48 +448,103 @@ def fd_level_shardmap(mesh: Mesh, *, max_sweeps: int = 100_000):
 
     all_axes = tuple(mesh.axis_names)
 
-    def local(a, sup, alive, dv, lo):
+    def local(a, a_l1, n_l1, cap1, sup, alive, dv, lo):
+        f32 = jnp.float32
+        valid1 = (jnp.arange(a_l1.shape[1])[None, :]
+                  < n_l1[:, None]).astype(f32)
+        w1 = jnp.einsum("gmc,gwc->gmw", a.astype(f32), a_l1.astype(f32))
+        delta1 = jnp.einsum("gmw,gw->gm", w1 * (w1 - 1.0) * 0.5, valid1)
+        sup = jnp.maximum(sup - delta1, cap1[:, None])
         row_ext = jnp.zeros(a.shape[:2], jnp.int32)   # xla path ignores it
-        _sup, _alive, _dv, theta, rho, wedges, _sweeps = batched_level_loop(
+        pw = a.shape[1] if peel_width is None else min(peel_width,
+                                                       a.shape[1])
+        sup2, alive2, dv2, theta, rho, wedges, _sweeps = batched_level_loop(
             a, row_ext, sup, alive, dv, lo,
             backend="xla", blocks=(8, 8, 8),
-            peel_width=a.shape[1], max_sweeps=max_sweeps,
-            update_mode="b2",
+            peel_width=pw, max_sweeps=max_sweeps,
+            update_mode=update_mode,
         )
+        if full_state:
+            return sup2, alive2, dv2, theta, rho, wedges
         return theta, rho, wedges
 
+    vec = P(all_axes, None)
+    g1 = P(all_axes)
+    out_specs = ((vec, vec, vec, vec, g1, g1) if full_state
+                 else (vec, g1, g1))
     return shard_map(
         local, mesh=mesh,
-        in_specs=(P(all_axes, None, None), P(all_axes, None),
-                  P(all_axes, None), P(all_axes, None), P(all_axes)),
-        out_specs=(P(all_axes, None), P(all_axes), P(all_axes)),
+        in_specs=(P(all_axes, None, None), P(all_axes, None, None),
+                  g1, g1, vec, vec, vec, g1),
+        out_specs=out_specs,
         check_rep=False,
     )
 
 
-def distributed_fd_level_peel(mesh: Mesh, a, sup, alive, dv, lo, *,
-                              max_sweeps: int = 100_000):
-    """Run the sharded FD level-peel on a live mesh.
-
-    Inputs are the ``shard_fd_stack`` layout (leading dim divisible by
-    ``mesh.size``).  Returns (theta, rho, wedges) per stack slot; the
-    caller maps slots back to tasks via the plan's ``slots`` array.
-    """
+@functools.lru_cache(maxsize=64)
+def _fd_level_jitted(mesh: Mesh, max_sweeps: int, update_mode: str,
+                     peel_width: Optional[int], full_state: bool):
+    """Compile-once cache for the sharded level loop.  jax's jit cache is
+    keyed on FUNCTION IDENTITY, and both ``fd_level_shardmap`` and
+    ``jax.jit`` build fresh closures — without this cache every
+    shape-group dispatch and every cap-exit re-entry of the mesh FD
+    driver would retrace and recompile an identical program."""
     all_axes = tuple(mesh.axis_names)
     stack = NamedSharding(mesh, P(all_axes, None, None))
     vec = NamedSharding(mesh, P(all_axes, None))
     g1 = NamedSharding(mesh, P(all_axes))
-    fn = fd_level_shardmap(mesh, max_sweeps=max_sweeps)
-    jitted = jax.jit(
+    fn = fd_level_shardmap(mesh, max_sweeps=max_sweeps,
+                           update_mode=update_mode, peel_width=peel_width,
+                           full_state=full_state)
+    out_sh = ((vec, vec, vec, vec, g1, g1) if full_state
+              else (vec, g1, g1))
+    return jax.jit(
         fn,
-        in_shardings=(stack, vec, vec, vec, g1),
-        out_shardings=(vec, g1, g1),
+        in_shardings=(stack, stack, g1, g1, vec, vec, vec, g1),
+        out_shardings=out_sh,
     )
+
+
+def fd_stack_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding of an FD stack's leading (group) dim over every mesh
+    axis.  Pre-placing the big biadjacency stack with ``jax.device_put``
+    lets cap-exit re-entries reuse the device-resident copy instead of
+    re-uploading the padded host array every time."""
+    return NamedSharding(mesh, P(tuple(mesh.axis_names), None, None))
+
+
+def distributed_fd_level_peel(mesh: Mesh, a, sup, alive, dv, lo, *,
+                              a_l1=None, n_l1=None, cap1=None,
+                              update_mode: str = "b2",
+                              peel_width: Optional[int] = None,
+                              max_sweeps: int = 100_000,
+                              full_state: bool = False):
+    """Run the sharded FD level-peel on a live mesh.
+
+    Inputs are the ``shard_fd_stack`` / ``shard_level_group`` layout
+    (leading dim divisible by ``mesh.size``).  ``a_l1`` / ``n_l1`` /
+    ``cap1`` carry the host pre-peel's first level (optional — omitted
+    means no first-level delta is applied).  Returns (theta, rho,
+    wedges) per stack slot — or the full carried state (sup, alive, dv,
+    theta, rho, wedges) with ``full_state=True``, which the end-to-end
+    driver (`engine/fd._run_level_groups_mesh`) feeds back on a
+    ``max_sweeps`` cap-exit.  The caller maps slots back to tasks via
+    the plan's ``slots`` array.
+    """
+    f32 = jnp.float32
+    g_n, _mm, cc = a.shape
+    if a_l1 is None:
+        a_l1 = np.zeros((g_n, 8, cc), np.float32)
+        n_l1 = np.zeros(g_n, np.int32)
+        cap1 = np.full(g_n, -np.inf, np.float32)
+    jitted = _fd_level_jitted(mesh, max_sweeps, update_mode, peel_width,
+                              full_state)
     with mesh:
         return jitted(
-            jnp.asarray(a, jnp.float32), jnp.asarray(sup, jnp.float32),
-            jnp.asarray(alive), jnp.asarray(dv, jnp.float32),
-            jnp.asarray(lo, jnp.float32),
+            jnp.asarray(a, f32), jnp.asarray(a_l1, f32),
+            jnp.asarray(n_l1, jnp.int32), jnp.asarray(cap1, f32),
+            jnp.asarray(sup, f32), jnp.asarray(alive),
+            jnp.asarray(dv, f32), jnp.asarray(lo, f32),
         )
 
 

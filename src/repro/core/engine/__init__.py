@@ -28,6 +28,7 @@ from .peel_loop import (
     RunStats,
     batched_level_loop,
     bucket,
+    device_cd_graph_loop,
     device_peel_loop,
     host_sweep,
 )
@@ -45,6 +46,7 @@ __all__ = [
     "build_level_stack",
     "DeviceGraph",
     "device_peel_loop",
+    "device_cd_graph_loop",
     "batched_level_loop",
     "host_sweep",
     "bucket",
@@ -53,13 +55,22 @@ __all__ = [
 
 def tip_decompose(
     g: BipartiteGraph, cfg: Optional[ReceiptConfig] = None,
-    *, side: str = "U",
+    *, side: str = "U", mesh=None,
 ) -> Tuple[np.ndarray, RunStats]:
     """Full RECEIPT tip decomposition of one side of ``g``.
 
     side="V" peels the other vertex set (the paper decomposes both sides
     of every dataset — *U/*V rows of Table 3); implemented by transposing
     the bipartite graph, which is exact by symmetry.
+
+    ``mesh``: a ``jax.sharding.Mesh`` routes the FD phase through the
+    sharded level-peel driver (`core/distributed.py` — subsets
+    LPT-assigned to devices, zero collectives, per-shard stats
+    reconciled into the returned RunStats).  CD runs single-device
+    either way (its multi-device twin ``distributed_cd_fused_loop`` is
+    a separate entry point: CD is one global range loop, not an
+    embarrassingly parallel stack).  Tip numbers are identical with and
+    without a mesh (DESIGN.md §4).
 
     Returns (theta int64[n_side], RunStats).
     """
@@ -87,7 +98,8 @@ def tip_decompose(
         g_work = g
 
     subset_id, init_support, bounds, _ = receipt_cd(g_work, cfg, stats)
-    theta_work = receipt_fd(g_work, subset_id, init_support, bounds, cfg, stats)
+    theta_work = receipt_fd(g_work, subset_id, init_support, bounds, cfg,
+                            stats, mesh=mesh)
 
     theta = np.zeros(g.n_u, np.int64)
     theta[perm_u] = np.round(theta_work).astype(np.int64)

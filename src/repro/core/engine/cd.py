@@ -2,10 +2,21 @@
 
 Partitions U into subsets with non-overlapping tip-number ranges by
 running the unified peel core (`engine/peel_loop.py`) in **range-peel**
-mode, one device-resident ``while_loop`` per subset.  Host-side pieces:
-adaptive range determination (findHi on the per-subset support snapshot),
-DGM re-induction at subset boundaries, checkpointing, and the overflow
-replay through ``host_sweep``.
+mode.  Two dispatch granularities (``cfg.cd_dispatch``, DESIGN.md
+§2.0/§2.3):
+
+* ``"subset"`` — one device-resident ``while_loop`` per subset.
+  Host-side pieces: adaptive range determination (findHi on the
+  per-subset support snapshot), DGM re-induction at subset boundaries,
+  checkpointing, and the overflow replay through ``host_sweep``.
+* ``"graph"`` — the ENTIRE CD phase is one device dispatch
+  (``device_cd_graph_loop``): subset boundaries, the findHi wedge-mass
+  reduction (``kernels.ops.find_hi_device``), the FD init-vector
+  snapshot and the subset-id stamping all run inside one
+  ``lax.while_loop``; the host blocks O(1) times per GRAPH instead of
+  O(subsets) — the dispatch-layer analogue of the paper's 1100x sync
+  reduction.  DGM and checkpointing are subset-dispatch features (both
+  need the host at subset boundaries).
 """
 from __future__ import annotations
 
@@ -24,6 +35,8 @@ from .peel_loop import (
     ReceiptConfig,
     RunStats,
     bucket,
+    cd_graph_state0,
+    device_cd_graph_loop,
     device_peel_loop,
     host_sweep,
     residual_dv,
@@ -95,7 +108,28 @@ def receipt_cd(
     checkpoint_cb(state): called with a cd_checkpoint_state pytree at
     every subset boundary.  resume_state: continue an interrupted run
     from such a state (tests/test_receipt.py::test_cd_checkpoint_restart).
+
+    ``cfg.cd_dispatch="graph"`` routes to the whole-graph single-dispatch
+    driver (``_receipt_cd_graph``); checkpointing needs the host at
+    subset boundaries and therefore ``cd_dispatch="subset"``.
     """
+    if cfg.max_sweeps < 1:
+        raise ValueError(
+            f"max_sweeps must be >= 1 (got {cfg.max_sweeps}): the valve "
+            "bounds one device-loop invocation; a sub-1 cap can make no "
+            "progress and would break Theorem 1's range containment")
+    if cfg.cd_dispatch not in ("subset", "graph"):
+        raise ValueError(f"unknown cd_dispatch {cfg.cd_dispatch!r}")
+    if cfg.cd_dispatch == "graph":
+        if not cfg.device_loop:
+            raise ValueError(
+                "cd_dispatch='graph' runs the whole CD phase on device "
+                "and requires device_loop=True")
+        if checkpoint_cb is not None or resume_state is not None:
+            raise ValueError(
+                "CD checkpointing captures subset-boundary state on the "
+                "host; use cd_dispatch='subset'")
+        return _receipt_cd_graph(g, cfg, stats)
     backend = cfg.backend or kops.default_backend()
     blocks = cfg.kernel_blocks
     n_u = g.n_u
@@ -185,49 +219,63 @@ def receipt_cd(
                     dg.rows_pad,
                     bucket(max(n_first, blocks[1]), blocks[1]),
                 ))
-            while sweeps < cfg.max_sweeps:
+            while True:
                 (support, alive, dv, _th, peeled, d_rho, d_wedges, d_hucs,
-                 d_elided, d_covered, d_sweeps, ovf) = device_peel_loop(
+                 d_elided, d_covered, _d_sweeps, ovf) = device_peel_loop(
                     dg.a, dg.ids, dg.row_ext, dg.kmax, support, alive, dv,
                     jnp.zeros(dg.rows_pad, jnp.float32), hi, lo, dg.c_rcnt,
-                    sweeps,
+                    0,
                     backend=backend, blocks=blocks, use_huc=cfg.use_huc,
                     peel_width=peel_width, max_sweeps=cfg.max_sweeps,
                     minmode=False,
                 )
                 stats.device_loop_calls += 1
                 (peeled_np, alive_np, sup_f32, d_rho, d_wedges, d_hucs,
-                 d_elided, d_covered, d_sweeps, ovf_h) = jax.device_get(
+                 d_elided, d_covered, ovf_h) = jax.device_get(
                     (peeled, alive, support, d_rho, d_wedges, d_hucs,
-                     d_elided, d_covered, d_sweeps, ovf))
+                     d_elided, d_covered, ovf))
                 stats.host_round_trips += 1
                 sup_np = np.asarray(sup_f32, np.float64)
                 stats.rho_cd += int(d_rho)
                 stats.wedges_cd += int(d_wedges)
                 stats.huc_recounts += int(d_hucs)
                 stats.elided_sweeps += int(d_elided)
-                sweeps = int(d_sweeps)        # cumulative (seeded by sweeps0)
+                sweeps += int(d_rho)
                 covered_wedges += float(d_covered)
                 subset_id[dg.members[np.where(peeled_np)[0]]] = i
-                if not bool(ovf_h):
+                if bool(ovf_h):
+                    # peel buffer overflow: replay this one sweep on the
+                    # host at the precise bucket, re-enter with a wider
+                    # buffer
+                    stats.overflow_fallbacks += 1
+                    support, alive, info = host_sweep(
+                        dg, cfg, stats, support, alive, hi, lo, backend,
+                        blocks)
+                    if info is not None:
+                        covered_wedges += info["c_peel"]
+                        sweeps += 1
+                        subset_id[dg.members[info["peel_np"].nonzero()[0]]] = i
+                    dv = residual_dv(dg.a, alive)
+                    sup_np = np.asarray(support, np.float64)
+                    alive_np = np.asarray(alive)
+                    stats.host_round_trips += 1
+                    peel_width = min(dg.rows_pad, peel_width * 2)
+                    continue
+                # max_sweeps valve: caps ONE invocation, never the subset
+                # — a cap-exit with range left re-enters (Theorem 1 needs
+                # [lo, hi) fully drained before the bound is recorded)
+                if not (alive_np & (sup_np < hi)).any():
                     break
-                # peel buffer overflow: replay this one sweep on the host
-                # at the precise bucket, then re-enter with a wider buffer
-                stats.overflow_fallbacks += 1
-                support, alive, info = host_sweep(
-                    dg, cfg, stats, support, alive, hi, lo, backend, blocks)
-                if info is not None:
-                    covered_wedges += info["c_peel"]
-                    sweeps += 1
-                    subset_id[dg.members[info["peel_np"].nonzero()[0]]] = i
-                dv = residual_dv(dg.a, alive)
-                sup_np = np.asarray(support, np.float64)
-                alive_np = np.asarray(alive)
-                stats.host_round_trips += 1
-                peel_width = min(dg.rows_pad, peel_width * 2)
+                if int(d_rho) == 0:
+                    raise RuntimeError(
+                        "CD device loop made no progress on a non-empty "
+                        "range (max_sweeps misconfigured?)")
         else:
             # -------- pre-PR engine: blocking host-driven sweeps ------- #
-            while sweeps < cfg.max_sweeps:
+            # (no valve here: the host regains control at every sweep, and
+            # each sweep peels >= 1 row, so the loop terminates in
+            # <= n_rows sweeps — draining fully preserves Theorem 1)
+            while True:
                 support, alive, info = host_sweep(
                     dg, cfg, stats, support, alive, hi, lo, backend, blocks)
                 if info is None:
@@ -276,5 +324,129 @@ def receipt_cd(
     stats.bounds = [float(b) for b in bounds]
     stats.time_cd = time.perf_counter() - t0
     # every vertex must be assigned
+    assert (subset_id >= 0).all(), "CD left unassigned vertices"
+    return subset_id, init_support, np.asarray(bounds), None
+
+
+def _receipt_cd_graph(
+    g: BipartiteGraph, cfg: ReceiptConfig, stats: RunStats,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Whole-graph CD: every subset under ONE device dispatch.
+
+    The host's entire involvement per graph is: build the device graph,
+    launch the initial counting + ``device_cd_graph_loop``, and fetch the
+    final state in ONE blocking transfer — subset boundaries, findHi, the
+    FD init snapshot and subset-id stamping all happen inside the loop
+    (DESIGN.md §2.3).  Re-entry happens only on a peel-buffer overflow
+    (host replays that one sweep at the precise bucket, folds its effect
+    into the carried state, doubles the buffer) or a ``max_sweeps``
+    cap-exit (state fed straight back with a fresh iteration budget), so
+    ``RunStats.host_round_trips`` is O(1) per graph instead of
+    O(subsets).
+
+    DGM re-induction is intentionally absent — compaction restructures
+    the matrix on the host, which is exactly the synchronization this
+    driver eliminates.  The cost is that late sweeps run at the full
+    padded shape; the benefit is a single dispatch.  Bounds may differ
+    from the subset driver (fresh residual wedge counts at every
+    boundary, f32 findHi prefix sums, whole-graph HUC bound) but tip
+    numbers cannot (Theorem 1 holds for any subset bounds).
+    """
+    backend = cfg.backend or kops.default_backend()
+    blocks = cfg.kernel_blocks
+    sparse = backend in kops.SPARSE_BACKENDS
+    n_u = g.n_u
+    p_total = cfg.num_partitions
+
+    t0 = time.perf_counter()
+    subset_id = np.full(n_u, -1, np.int64)
+    init_support = np.zeros(n_u, np.float64)
+    dg = DeviceGraph(g, np.arange(n_u), cfg)
+    stats.wedges_pvbcnt = g.counting_wedge_bound()
+
+    alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+    support = support_all(dg.a, alive, dg.ids,
+                          dg.kmax if sparse else None,
+                          backend=backend, blocks=blocks)
+    support = jnp.where(alive, support, _INF)
+    # async dispatch: no blocking sync between counting and the CD loop
+    stats.time_count = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    peel_width = dg.initial_peel_width()
+    if cfg.peel_width is None and dg.n_rows and p_total > 1:
+        # size the buffer to subset 0's first sweep, known from ONE host
+        # snapshot (the only pre-dispatch sync; still O(1) per graph).
+        # Later subsets' first sweeps are range-bounded, and any sweep
+        # that peels EVERY survivor — the catch-all opener in particular
+        # — takes the bufferless elide branch.  With p_total == 1 the
+        # single catch-all sweep elides, so no sizing is needed at all.
+        sup_np = np.asarray(support, np.float64)
+        alive_np = np.asarray(alive)
+        stats.host_round_trips += 1
+        tgt0 = max(dg.total_wedges / p_total, 1.0)
+        hi0 = find_hi_np(sup_np, dg.w_np, alive_np, tgt0)
+        n_first = int((alive_np & (sup_np < hi0)).sum())
+        peel_width = max(peel_width, min(
+            dg.rows_pad, bucket(max(n_first, blocks[1]), blocks[1])))
+    state = cd_graph_state0(support, alive, dg.dv0, dg.rows_pad, p_total)
+    while True:
+        state = device_cd_graph_loop(
+            dg.a, dg.ids, dg.row_ext, dg.kmax, dg.c_rcnt, state,
+            backend=backend, blocks=blocks, use_huc=cfg.use_huc,
+            peel_width=peel_width, max_iters=cfg.max_sweeps,
+            p_total=p_total,
+        )
+        stats.device_loop_calls += 1
+        st = jax.device_get(state)                # THE blocking transfer
+        stats.host_round_trips += 1
+        if bool(st["done"]):
+            break
+        state = dict(state, iters=jnp.int32(0))   # fresh invocation budget
+        if not bool(st["ovf"]):
+            continue                              # max_sweeps cap-exit
+        # peel-buffer overflow: replay this ONE sweep on the host at the
+        # precise bucket, fold its effect into the carried state (the
+        # replay's stats go through a scratch RunStats so the final
+        # device counters are added exactly once), re-enter wider
+        stats.overflow_fallbacks += 1
+        tmp = RunStats()
+        i_cur = int(st["i"])
+        support2, alive2, info = host_sweep(
+            dg, cfg, tmp, state["support"], state["alive"],
+            float(st["hi"]), float(st["lo"]), backend, blocks)
+        stats.host_round_trips += tmp.host_round_trips + 1
+        state["support"] = support2
+        state["alive"] = alive2
+        state["dv"] = residual_dv(dg.a, alive2)
+        state["ovf"] = jnp.bool_(False)
+        if info is not None:
+            peel_dev = jnp.asarray(info["peel_np"])
+            state["peeled"] = state["peeled"] | peel_dev
+            state["subset_of"] = jnp.where(
+                peel_dev, jnp.int32(i_cur), state["subset_of"])
+            state["rho"] = state["rho"] + 1
+            state["covered"] = state["covered"] + jnp.float32(info["c_peel"])
+            state["wedges"] = state["wedges"] + jnp.float32(tmp.wedges_cd)
+            state["hucs"] = state["hucs"] + jnp.int32(tmp.huc_recounts)
+            state["elided"] = state["elided"] + jnp.int32(tmp.elided_sweeps)
+        peel_width = min(dg.rows_pad, peel_width * 2)
+
+    num_subsets = int(st["i"]) + 1
+    subset_id[dg.members] = np.asarray(st["subset_of"][: dg.n_rows],
+                                       np.int64)
+    init_support[dg.members] = np.asarray(st["init_sup"][: dg.n_rows],
+                                          np.float64)
+    bounds = [0.0] + [float(b)
+                      for b in np.asarray(st["bounds"])[1: num_subsets + 1]]
+    stats.rho_cd += int(st["rho"])
+    stats.wedges_cd += int(st["wedges"])
+    stats.huc_recounts += int(st["hucs"])
+    stats.elided_sweeps += int(st["elided"])
+    stats.sweeps_per_subset.extend(
+        int(x) for x in np.asarray(st["rho_sub"])[:num_subsets])
+    stats.num_subsets = num_subsets
+    stats.bounds = [float(b) for b in bounds]
+    stats.time_cd = time.perf_counter() - t0
     assert (subset_id >= 0).all(), "CD left unassigned vertices"
     return subset_id, init_support, np.asarray(bounds), None

@@ -9,7 +9,7 @@ whole current-minimum support level of every still-live subset in the
 stack — the ParButterfly / PBNG peel granularity, vmapped over the shape
 group and dispatched through the grouped butterfly kernels.
 
-Runtime structure (``fd_mode="level"``, the default):
+Runtime structure (``fd_mode="level"``, the default — DESIGN.md §2.2):
 
 * **host first-level pre-peel** (``pre_peel_tasks``): the first level of
   every subset is known from the host support snapshot, so its theta is
@@ -18,13 +18,37 @@ Runtime structure (``fd_mode="level"``, the default):
   reaches the survivors through one grouped butterfly kernel call;
 * **one device dispatch + one blocking ``device_get`` per shape group**
   (theta, per-subset sweep counts rho and dynamic wedge counters all ride
-  back in the same transfer);
+  back in the same transfer); a ``max_sweeps`` cap-exit re-enters with
+  the carried state (the valve bounds one invocation, never the
+  schedule — DESIGN.md §2.0);
 * **double-buffered group dispatch**: the host induces and stacks the
   NEXT group's subgraphs while the device peels the current group (JAX
   async dispatch; ``cfg.fd_overlap`` gates it for benchmarking);
 * ``RunStats.rho_fd`` counts actual level sweeps, ``RunStats.wedges_fd``
   the dynamically traversed wedges (sum of per-sweep C_peel) — both were
   previously static placeholders.
+
+Tuning knobs (both on ``ReceiptConfig``, defaults chosen by cost model —
+DESIGN.md §2.2 "Knobs"):
+
+* ``fd_update_mode`` — ``"auto"`` precomputes the (G, M, M) B2 stack
+  when ``G*M*M <= fd_b2_cells`` (strictly fewer flops whenever it fits:
+  M²C once vs MC per sweep) and streams through the grouped butterfly
+  kernel otherwise (O(M) working set, the scale path).  ``"b2"`` /
+  ``"kernel"`` pin either side; both produce bit-identical deltas.
+* ``peel_width`` — the per-sweep gather buffer; ``None`` sizes it to
+  the ``mm/8`` bucket (post-first-level cascades are small and sweeps
+  are memory-bound).  An oversized level falls back ON DEVICE to the
+  mask-form kernel — never to the host.
+
+**Mesh execution** (DESIGN.md §4): ``receipt_fd(mesh=...)`` routes the
+same pipeline through ``_run_level_groups_mesh`` — per shape group, the
+survivor/first-level stacks are LPT-assigned to ``mesh.size`` shards
+(`core/distributed.shard_level_group`, with load carryover across
+groups) and peeled under ``shard_map`` with zero collectives
+(`core/distributed.distributed_fd_level_peel`); per-shard loads are
+reconciled into ``RunStats.fd_shard_rho`` / ``fd_shard_wedges`` and tip
+numbers are bit-identical to the local path.
 
 The legacy engines are preserved as ``fd_mode="b2"`` (dense (M, M)
 shared-butterfly stacks, one-vertex-per-step ``fori_loop``) and
@@ -295,10 +319,29 @@ def receipt_fd(
     bounds: np.ndarray,
     cfg: ReceiptConfig,
     stats: RunStats,
+    *,
+    mesh=None,
 ) -> np.ndarray:
-    """Exact tip numbers by independent peeling of induced subgraphs."""
+    """Exact tip numbers by independent peeling of induced subgraphs.
+
+    ``mesh``: a ``jax.sharding.Mesh`` runs each shape group's level loop
+    under ``shard_map`` with subsets LPT-assigned to devices
+    (``_run_level_groups_mesh``); tip numbers are identical to the
+    single-device path and per-shard loads are reconciled into
+    ``stats.fd_shard_rho`` / ``fd_shard_wedges`` (DESIGN.md §4).
+    Requires ``fd_mode="level"`` — the legacy sequential engines are
+    single-device comparators only.
+    """
     if cfg.fd_mode not in ("level", "b2", "matvec"):
         raise ValueError(f"unknown fd_mode {cfg.fd_mode!r}")
+    if mesh is not None and cfg.fd_mode != "level":
+        raise ValueError(
+            "mesh-sharded FD runs the batched level-peel loop; set "
+            f"fd_mode='level' (got {cfg.fd_mode!r})")
+    if cfg.max_sweeps < 1:
+        raise ValueError(
+            f"max_sweeps must be >= 1 (got {cfg.max_sweeps}): the valve "
+            "bounds one loop invocation; a sub-1 cap makes no progress")
     t0 = time.perf_counter()
     theta = np.zeros(g.n_u, np.float64)
     backend = cfg.backend or kops.default_backend()
@@ -308,8 +351,12 @@ def receipt_fd(
         stats.wedges_fd += int(sum(t["wedges"] for t in tasks))
 
     if cfg.fd_mode == "level":
-        theta = _run_level_groups(tasks, init_support, cfg, backend,
-                                  stats, theta)
+        if mesh is not None:
+            theta = _run_level_groups_mesh(tasks, init_support, cfg,
+                                           stats, theta, mesh)
+        else:
+            theta = _run_level_groups(tasks, init_support, cfg, backend,
+                                      stats, theta)
     else:
         # workload-aware scheduling: equal-padded stacks (LPT analog)
         groups = pack_by_shape(
@@ -435,6 +482,132 @@ def _run_level_groups(tasks, init_support, cfg, backend, stats, theta):
         drain(*pending)
 
     stats.fd_padding_waste = 1.0 - used / padded if padded else 0.0
+    return theta
+
+
+def _run_level_groups_mesh(tasks, init_support, cfg, stats, theta, mesh):
+    """End-to-end mesh-sharded FD (DESIGN.md §4): the same pipeline as
+    ``_run_level_groups`` — host first-level pre-peel, shape-group
+    packing, double-buffered group dispatch, ONE blocking sync per group
+    — with each group's level loop running under ``shard_map``
+    (`core/distributed.distributed_fd_level_peel`): subsets LPT-assigned
+    to mesh devices (`core/distributed.shard_level_group`), zero
+    collectives, every shard's while_loop exiting as soon as its local
+    subsets drain.  Per-shard sweep/wedge loads accumulate into
+    ``stats.fd_shard_rho`` / ``fd_shard_wedges`` — the reconciled
+    multi-shard report of the run.
+
+    The shard_map local body computes with the pure-jnp oracle backend
+    ("xla"), so tip numbers are bit-identical to the single-device path
+    (integer regime, DESIGN.md §8)."""
+    from ..distributed import (
+        distributed_fd_level_peel,
+        fd_stack_sharding,
+        shard_level_group,
+    )
+
+    backend = "xla"                   # shard_map local compute path
+    row_align, col_align, _ = _aligns(cfg, backend)
+    n_shards = mesh.size
+
+    tasks = pre_peel_tasks(tasks, init_support, theta, stats)
+    groups = pack_by_shape(
+        tasks,
+        size_of=lambda t: (len(t["surv"]), max(t["sub"].n_v, 1)),
+        weight_of=lambda t: t["wedges"],
+        bucket=lambda n: _level_pad(n, row_align),
+        bucket_cols=lambda n: _level_pad(n, col_align),
+    )
+    stats.fd_groups = len(groups)
+    stats.fd_shards = n_shards
+    shard_rho = np.zeros(n_shards, np.int64)
+    shard_wedges = np.zeros(n_shards, np.float64)
+    lpt_loads = np.zeros(n_shards, np.float64)   # cross-group carryover
+
+    padded = used = 0
+    pending = None           # (built, sharded, slots, out) one in flight
+
+    def launch(built):
+        nonlocal lpt_loads
+        sharded, slots = shard_level_group(built, n_shards,
+                                           init_loads=lpt_loads)
+        lpt_loads = lpt_loads + sharded["shard_load"]
+        # pre-place the big stack with its mesh sharding so cap-exit
+        # re-entries reuse the device-resident copy (no re-upload)
+        sharded["a"] = jax.device_put(
+            np.asarray(sharded["a"], np.float32), fd_stack_sharding(mesh))
+        out = distributed_fd_level_peel(
+            mesh, sharded["a"], sharded["sup"], sharded["alive"],
+            sharded["dv"], sharded["lo"],
+            a_l1=sharded["a_l1"], n_l1=sharded["n_l1"],
+            cap1=sharded["cap1"],
+            update_mode=built["update_mode"],
+            peel_width=built["peel_width"],
+            max_sweeps=cfg.max_sweeps, full_state=True,
+        )
+        stats.device_loop_calls += 1
+        return sharded, slots, out
+
+    def drain(built, sharded, slots, out):
+        # one blocking sync per group in the common case; a max_sweeps
+        # cap-exit with survivors left re-enters with the carried state
+        # (same contract as the local driver and the CD drivers)
+        nonlocal shard_rho, shard_wedges
+        per_shard = sharded["per_shard"]
+        th_acc = None
+        prev_alive = sharded["alive"]
+        while True:
+            sup, alive, dv, th, rho, wedges = out
+            th_h, alive_h, rho_h, wedges_h = jax.device_get(
+                (th, alive, rho, wedges))
+            stats.host_round_trips += 1
+            d_rho = int(np.asarray(rho_h).sum())
+            stats.rho_fd += d_rho
+            stats.wedges_fd += int(np.asarray(wedges_h, np.float64).sum())
+            shard_rho += np.asarray(rho_h, np.int64).reshape(
+                n_shards, per_shard).sum(axis=1)
+            shard_wedges += np.asarray(wedges_h, np.float64).reshape(
+                n_shards, per_shard).sum(axis=1)
+            newly_dead = prev_alive & ~np.asarray(alive_h)
+            th_h = np.asarray(th_h, np.float64)
+            th_acc = (np.where(newly_dead, th_h, th_acc)
+                      if th_acc is not None
+                      else np.where(newly_dead, th_h, 0.0))
+            if not np.asarray(alive_h).any() or d_rho == 0:
+                break
+            prev_alive = np.asarray(alive_h)
+            # the first-level delta is already applied: re-enter bare
+            out = distributed_fd_level_peel(
+                mesh, sharded["a"], sup, alive, dv, sharded["lo"],
+                update_mode=built["update_mode"],
+                peel_width=built["peel_width"],
+                max_sweeps=cfg.max_sweeps, full_state=True,
+            )
+            stats.device_loop_calls += 1
+        for s, t_idx in enumerate(slots):
+            if t_idx < 0:
+                continue
+            t = built["group"][t_idx]
+            nm = int(built["nmem"][t_idx])
+            theta[t["members"][t["surv"]]] = th_acc[s, :nm]
+
+    for group in groups:
+        built = build_level_stack(group, cfg, backend)
+        sharded, slots, out = launch(built)     # async dispatch
+        padded += sharded["a"].size + sharded["a_l1"].size
+        used += built["used_cells"]
+        if pending is not None:
+            drain(*pending)
+        if cfg.fd_overlap:
+            pending = (built, sharded, slots, out)  # fetch AFTER next build
+        else:
+            drain(built, sharded, slots, out)
+    if pending is not None:
+        drain(*pending)
+
+    stats.fd_padding_waste = 1.0 - used / padded if padded else 0.0
+    stats.fd_shard_rho = [int(x) for x in shard_rho]
+    stats.fd_shard_wedges = [float(x) for x in shard_wedges]
     return theta
 
 

@@ -4,18 +4,29 @@ ONE parameterized sweep engine drives every peel schedule in the repo:
 
 * **CD range-peel** (Alg. 3): peel everything with support < ``hi`` until
   the range drains; support updates cap at ``lo`` = theta(i).
-  ``device_peel_loop(minmode=False)`` — used by `engine/cd.py`.
+  ``device_peel_loop(minmode=False)`` — used by `engine/cd.py`'s
+  per-subset dispatch (``cd_dispatch="subset"``).
+* **Whole-graph CD** (Alg. 3, single dispatch): ALL subsets of a graph
+  under one ``lax.while_loop`` — the boundary branch closes/opens subsets
+  on device (findHi via ``kernels.ops.find_hi_device``, DESIGN.md §2.3),
+  the sweep branch is the same shared body.  ``device_cd_graph_loop`` —
+  used by `engine/cd.py` when ``cd_dispatch="graph"``.
 * **ParB min-peel** (baseline): each sweep peels the current
   minimum-support set; threshold recomputed on device per sweep.
   ``device_peel_loop(minmode=True, lo=0)`` — used by `engine/baselines.py`.
 * **FD level-peel** (Alg. 4, ParButterfly/PBNG granularity): peel the
   entire current-minimum support *level* per sweep, batched over a vmap
   stack of independent induced subgraphs.  ``batched_level_loop`` — used
-  by `engine/fd.py`.  Level-peel is min-peel with a per-subset floor:
+  by `engine/fd.py`, both single-device (per shape group) and under
+  ``shard_map`` (`core/distributed.py` — ``receipt_fd(mesh=...)``).
+  Level-peel is min-peel with a per-subset floor:
   the threshold is ``cap = max(min support, lo_subset)`` so every level
   below the subset's theta lower bound collapses into one sweep (exact:
   all such vertices have tip number exactly ``cap``, and survivors floor
   at ``cap`` either way — the ParB simultaneous-peel argument).
+
+The single-graph sweep body itself lives in ``_sweep_once``; the two CD
+loops and the ParB loop are thin ``lax.while_loop`` shells around it.
 
 The sweep-body LOGIC is shared, not duplicated: ``level_threshold``,
 ``select_peel``, ``apply_delta``, ``record_theta`` and ``peel_cost``
@@ -64,6 +75,8 @@ __all__ = [
     "bucket",
     "DeviceGraph",
     "device_peel_loop",
+    "device_cd_graph_loop",
+    "cd_graph_state0",
     "batched_level_loop",
     "host_sweep",
     "support_all",
@@ -94,10 +107,19 @@ class ReceiptConfig:
     dgm_row_threshold: float = 0.7           # re-induce when alive < thresh*rows
     fd_mode: str = "level"                   # "level" (batched level-peel)
     #                                        # | "b2" | "matvec" (legacy seq)
+    cd_dispatch: str = "subset"              # "subset": one device loop per
+    #   CD subset, findHi on the host snapshot (DGM + checkpointing live
+    #   here); "graph": the WHOLE CD phase is one dispatch — findHi runs
+    #   on device (kernels.ops.find_hi_device) and the host blocks O(1)
+    #   times per graph (DESIGN.md §2.3; requires device_loop=True)
     dtype: Any = jnp.float32
-    max_sweeps: int = 100_000                # safety valve
+    max_sweeps: int = 100_000                # valve: bounds ONE device-loop
+    #   invocation (never the schedule — drivers re-enter on cap-exit,
+    #   so Theorem 1's range containment survives any cap >= 1)
     device_loop: bool = True                 # fused lax.while_loop sweep engine
-    peel_width: Optional[int] = None         # device peel buffer (None = auto)
+    peel_width: Optional[int] = None         # device peel buffer (None = auto;
+    #   CD sizes it to the first sweep of each subset from the host
+    #   snapshot, FD to mm/8 — both bucketed, doubled on overflow)
     fd_overlap: bool = True                  # double-buffered FD group dispatch
     fd_update_mode: str = "auto"             # level-peel support updates:
     #   "auto"   cost model: precompute the (G, M, M) B2 stack when it fits
@@ -141,6 +163,12 @@ class RunStats:
     overflow_fallbacks: int = 0     # peel buffer overflows -> host sweeps
     fd_groups: int = 0              # FD shape groups dispatched
     fd_padding_waste: float = 0.0   # 1 - used/(padded) cells of FD stacks
+    fd_shards: int = 0              # mesh devices driving FD (0 = local)
+    fd_shard_rho: List[int] = dataclasses.field(default_factory=list)
+    #                               # per-shard level sweeps (mesh FD)
+    fd_shard_wedges: List[float] = dataclasses.field(default_factory=list)
+    #                               # per-shard dynamic wedge load (mesh
+    #                               # FD; the LPT balance evidence)
     time_count: float = 0.0
     time_cd: float = 0.0
     time_fd: float = 0.0
@@ -250,6 +278,107 @@ def peel_cost(colsum, dv):
 
 
 # ---------------------------------------------------------------------- #
+# the shared device sweep body (one peel sweep of every single-graph loop)
+# ---------------------------------------------------------------------- #
+def _sweep_once(a, ids, row_ext, kmax, c_rcnt, hi_cur, cap, support, alive,
+                dv, theta, peeled, rho, wedges, hucs, elided, covered, ovf,
+                *, backend, blocks, use_huc, peel_width, minmode):
+    """One peel sweep of the device-resident engines (DESIGN.md §2.0).
+
+    The sweep body shared by ``device_peel_loop`` (per-subset CD range-peel
+    / ParB min-peel) and ``device_cd_graph_loop`` (whole-graph CD): peel
+    selection at ``hi_cur``, terminal-sweep elision, the fixed-width
+    gather with its overflow flag, the HUC peel-vs-recount ``lax.cond``
+    and the incremental residual-degree / wedge-counter updates.  Callers
+    guard that the peel set is non-empty.  Returns the updated
+    (support, alive, dv, theta, peeled, rho, wedges, hucs, elided,
+    covered, ovf); ``rho`` advances exactly when a sweep was applied
+    (the overflow exit leaves every field untouched, so the host can
+    replay the sweep at the precise bucket).
+    """
+    sparse = backend in kops.SPARSE_BACKENDS
+    i32 = jnp.int32
+    f32 = jnp.float32
+    peel = select_peel(support, alive, hi_cur)
+    n_peel = jnp.sum(peel)
+    is_elide = jnp.sum(alive) == n_peel
+
+    def br_elide(support, alive, dv, theta):
+        # terminal-sweep elision (beyond-paper, DESIGN.md): a sweep
+        # that peels EVERY survivor needs no update kernel — and no
+        # peel buffer either (checked BEFORE overflow): the full
+        # peel set's column sums are dv itself, so
+        # C_peel = dv . max(dv-1, 0) with no gather at all
+        c_peel = peel_cost(dv, dv)
+        theta2 = record_theta(theta, peel, cap) if minmode else theta
+        return (support, alive & ~peel, jnp.zeros_like(dv), theta2,
+                peeled | peel, rho + 1, wedges, hucs, elided + 1,
+                covered + c_peel, ovf)
+
+    def on_overflow(support, alive, dv, theta):
+        return (support, alive, dv, theta, peeled, rho, wedges, hucs,
+                elided, covered, jnp.bool_(True))
+
+    def do_sweep(support, alive, dv, theta):
+        rows = jnp.nonzero(peel, size=peel_width, fill_value=0)[0]
+        rows = rows.astype(jnp.int32)
+        valid = jnp.arange(peel_width) < n_peel
+        a_peel = a[rows] * valid[:, None].astype(a.dtype)
+        # incremental residual degrees: peeled rows' column sums
+        colsum = valid.astype(f32) @ a_peel.astype(f32)
+        c_peel = peel_cost(colsum, dv)
+
+        def br_peel(sup, alv):
+            if sparse:
+                kb = gathered_tile_extents(row_ext, rows, valid,
+                                           blocks[1])
+            else:
+                kb = None
+            delta = support_delta(
+                a, a_peel, valid, ids, rows, kmax if sparse else None,
+                kb, backend=backend, blocks=blocks,
+            )
+            s2, alv2 = apply_delta(sup, alv, peel, delta, cap)
+            return jnp.where(alv2, s2, _INF), alv2
+
+        if use_huc:
+            use_rec = c_peel > c_rcnt
+
+            def br_recount(sup, alv):
+                alv2 = alv & ~peel
+                s2 = support_all(
+                    a, alv2, ids, kmax if sparse else None,
+                    backend=backend, blocks=blocks,
+                )
+                return jnp.where(alv2, jnp.maximum(s2, cap), _INF), alv2
+
+            support2, alive2 = jax.lax.cond(
+                use_rec, br_recount, br_peel, support, alive
+            )
+        else:
+            use_rec = jnp.bool_(False)
+            support2, alive2 = br_peel(support, alive)
+
+        wedges2 = wedges + jnp.where(use_rec, c_rcnt, c_peel)
+        theta2 = record_theta(theta, peel, cap) if minmode else theta
+        return (
+            support2, alive2, dv - colsum, theta2, peeled | peel,
+            rho + 1, wedges2, hucs + use_rec.astype(i32),
+            elided, covered + c_peel, ovf,
+        )
+
+    def non_elide(support, alive, dv, theta):
+        return jax.lax.cond(
+            n_peel > peel_width, on_overflow, do_sweep,
+            support, alive, dv, theta,
+        )
+
+    return jax.lax.cond(
+        is_elide, br_elide, non_elide, support, alive, dv, theta,
+    )
+
+
+# ---------------------------------------------------------------------- #
 # single-graph device-resident sweep loop (CD range-peel / ParB min-peel)
 # ---------------------------------------------------------------------- #
 @functools.partial(
@@ -262,7 +391,8 @@ def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
                      peel_width, max_sweeps, minmode):
     """Run an entire peel-sweep loop on device (``jax.lax.while_loop``).
 
-    Two schedules share the body:
+    Two schedules share the body (``_sweep_once``, which the whole-graph
+    CD loop ``device_cd_graph_loop`` also reuses — DESIGN.md §2.0/§2.3):
 
     * ``minmode=False`` (RECEIPT CD, Alg. 3): peel everything with
       support < ``hi`` until the range drains; support updates cap at
@@ -283,14 +413,14 @@ def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
     Returns the full carried state; the caller fetches it in ONE blocking
     transfer: (support, alive, dv, theta, peeled, rho, wedges, hucs,
     elided, covered, sweeps, overflow).  ``sweeps`` counts from the traced
-    ``sweeps0`` (CUMULATIVE across overflow re-entries) so the
-    ``max_sweeps`` safety valve caps the subset total exactly like the
-    host engine; ``rho`` counts this invocation only.
+    ``sweeps0``, and the ``max_sweeps`` safety valve bounds ONE invocation,
+    never the schedule: every driver (CD, ParB, FD) re-enters on a
+    cap-exit with peelable rows left, so the valve only bounds how long
+    the host goes without regaining control (DESIGN.md §2.0).
 
     Counter exactness: wedge counters accumulate in f32 and are exact
     while every partial sum stays below 2^24 (DESIGN.md section 8).
     """
-    sparse = backend in kops.SPARSE_BACKENDS
     i32 = jnp.int32
     f32 = jnp.float32
     hi = jnp.asarray(hi, f32)
@@ -316,83 +446,16 @@ def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
         (support, alive, dv, theta, peeled, rho, wedges, hucs, elided,
          covered, sweeps, ovf) = st
         hi_cur, cap = hi_cap(support, alive)
-        peel = select_peel(support, alive, hi_cur)
-        n_peel = jnp.sum(peel)
-        is_elide = jnp.sum(alive) == n_peel
-
-        def br_elide(support, alive, dv, theta):
-            # terminal-sweep elision (beyond-paper, DESIGN.md): a sweep
-            # that peels EVERY survivor needs no update kernel — and no
-            # peel buffer either (checked BEFORE overflow): the full
-            # peel set's column sums are dv itself, so
-            # C_peel = dv . max(dv-1, 0) with no gather at all
-            c_peel = peel_cost(dv, dv)
-            theta2 = record_theta(theta, peel, cap) if minmode else theta
-            return (support, alive & ~peel, jnp.zeros_like(dv), theta2,
-                    peeled | peel, rho + 1, wedges, hucs, elided + 1,
-                    covered + c_peel, sweeps + 1, ovf)
-
-        def on_overflow(support, alive, dv, theta):
-            return (support, alive, dv, theta, peeled, rho, wedges, hucs,
-                    elided, covered, sweeps, jnp.bool_(True))
-
-        def do_sweep(support, alive, dv, theta):
-            rows = jnp.nonzero(peel, size=peel_width, fill_value=0)[0]
-            rows = rows.astype(jnp.int32)
-            valid = jnp.arange(peel_width) < n_peel
-            a_peel = a[rows] * valid[:, None].astype(a.dtype)
-            # incremental residual degrees: peeled rows' column sums
-            colsum = valid.astype(f32) @ a_peel.astype(f32)
-            c_peel = peel_cost(colsum, dv)
-
-            def br_peel(sup, alv):
-                if sparse:
-                    kb = gathered_tile_extents(row_ext, rows, valid,
-                                               blocks[1])
-                else:
-                    kb = None
-                delta = support_delta(
-                    a, a_peel, valid, ids, rows, kmax if sparse else None,
-                    kb, backend=backend, blocks=blocks,
-                )
-                s2, alv2 = apply_delta(sup, alv, peel, delta, cap)
-                return jnp.where(alv2, s2, _INF), alv2
-
-            if use_huc and not minmode:
-                use_rec = c_peel > c_rcnt
-
-                def br_recount(sup, alv):
-                    alv2 = alv & ~peel
-                    s2 = support_all(
-                        a, alv2, ids, kmax if sparse else None,
-                        backend=backend, blocks=blocks,
-                    )
-                    return jnp.where(alv2, jnp.maximum(s2, cap), _INF), alv2
-
-                support2, alive2 = jax.lax.cond(
-                    use_rec, br_recount, br_peel, support, alive
-                )
-            else:
-                use_rec = jnp.bool_(False)
-                support2, alive2 = br_peel(support, alive)
-
-            wedges2 = wedges + jnp.where(use_rec, c_rcnt, c_peel)
-            theta2 = record_theta(theta, peel, cap) if minmode else theta
-            return (
-                support2, alive2, dv - colsum, theta2, peeled | peel,
-                rho + 1, wedges2, hucs + use_rec.astype(i32),
-                elided, covered + c_peel, sweeps + 1, ovf,
-            )
-
-        def non_elide(support, alive, dv, theta):
-            return jax.lax.cond(
-                n_peel > peel_width, on_overflow, do_sweep,
-                support, alive, dv, theta,
-            )
-
-        return jax.lax.cond(
-            is_elide, br_elide, non_elide, support, alive, dv, theta,
+        (support, alive, dv, theta, peeled, rho2, wedges, hucs, elided,
+         covered, ovf) = _sweep_once(
+            a, ids, row_ext, kmax, c_rcnt, hi_cur, cap, support, alive,
+            dv, theta, peeled, rho, wedges, hucs, elided, covered, ovf,
+            backend=backend, blocks=blocks,
+            use_huc=(use_huc and not minmode),
+            peel_width=peel_width, minmode=minmode,
         )
+        return (support, alive, dv, theta, peeled, rho2, wedges, hucs,
+                elided, covered, sweeps + (rho2 - rho), ovf)
 
     state0 = (
         support, alive, dv, theta, jnp.zeros_like(alive),
@@ -400,6 +463,145 @@ def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
         jnp.asarray(sweeps0, i32), jnp.bool_(False),
     )
     return jax.lax.while_loop(cond_fn, body_fn, state0)
+
+
+# ---------------------------------------------------------------------- #
+# whole-graph CD loop (ALL subsets under one dispatch, findHi on device)
+# ---------------------------------------------------------------------- #
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "blocks", "use_huc", "peel_width",
+                     "max_iters", "p_total"),
+)
+def device_cd_graph_loop(a, ids, row_ext, kmax, c_rcnt, state, *,
+                         backend, blocks, use_huc, peel_width, max_iters,
+                         p_total):
+    """Run the ENTIRE CD phase — every subset — in one device dispatch.
+
+    One ``lax.while_loop`` alternates two body branches (DESIGN.md §2.3):
+
+    * **sweep** (range not drained): one ``_sweep_once`` peel sweep at the
+      carried (``hi``, ``lo``) — identical semantics to the per-subset
+      ``device_peel_loop``, including HUC, terminal-sweep elision and the
+      overflow exit.  Newly peeled rows are stamped with the open subset
+      index in ``subset_of``.
+    * **subset boundary** (range drained): close subset ``i`` (record
+      ``bounds[i+1] = hi``, per-subset sweep count, the adaptive target
+      ``scale``), then open subset ``i+1`` entirely on device: snapshot
+      ``init_sup`` (the FD init vector, Alg. 3 line 7), recompute the
+      residual per-row wedge counts ``w = A·max(dv-1, 0)`` (so range
+      determination always sees the FRESH residual graph — what the
+      subset driver only gets after a DGM compaction), and pick the next
+      ``hi`` with the device findHi reduction
+      (``kernels.ops.find_hi_device``).  ``done`` is raised when no rows
+      survive — the loop's only exit besides the overflow flag and the
+      ``max_iters`` valve (which bounds one invocation; the driver
+      re-enters).
+
+    ``state`` is a dict pytree (see ``cd_graph_state0``) so the driver
+    can re-enter after an overflow replay or a cap-exit by feeding the
+    fetched state straight back.  The host blocks exactly ONCE per
+    invocation — O(1) round trips per GRAPH instead of O(subsets), the
+    dispatch-layer analogue of the paper's 1100x sync reduction.
+
+    Trade-offs vs the per-subset driver: no DGM compaction (the matrix
+    shape is fixed for the dispatch lifetime), the HUC recount bound
+    ``c_rcnt`` stays at its whole-graph value, and findHi prefix-sums in
+    f32 (DESIGN.md §8) — all of which may shift subset BOUNDS, never tip
+    numbers (Theorem 1 holds for any bounds).
+    """
+    f32 = jnp.float32
+
+    def boundary(st):
+        # ---- close subset i (no-op on the very first entry, i = -1) --- #
+        i = st["i"]
+        closing = i >= 0
+        idx = jnp.maximum(i, 0)
+        bounds = st["bounds"].at[idx + 1].set(
+            jnp.where(closing, st["hi"], st["bounds"][idx + 1]))
+        rho_sub = st["rho_sub"].at[idx].set(
+            jnp.where(closing, st["rho"] - st["rho_start"],
+                      st["rho_sub"][idx]))
+        was_catch = i >= p_total - 1
+        scale = jnp.where(
+            closing & (st["covered"] > 0) & ~was_catch,
+            jnp.minimum(1.0, st["tgt"] / st["covered"]), st["scale"])
+        lo = jnp.where(closing, st["hi"], st["lo"])
+        done = ~jnp.any(st["alive"])
+        # ---- open subset i+1 (all garbage-safe when done) ------------- #
+        i2 = jnp.where(done, i, i + 1)
+        init_sup = jnp.where(st["alive"], st["support"], st["init_sup"])
+        # fresh residual wedge counts: the range proxy the subset driver
+        # only refreshes at DGM compactions, here free at every boundary
+        w = a @ jnp.maximum(st["dv"] - 1.0, 0.0)
+        rem = jnp.sum(jnp.where(st["alive"], w, 0.0))
+        catch = i2 >= p_total - 1
+        tgt = jnp.where(
+            catch, jnp.inf,
+            jnp.maximum(
+                rem / jnp.maximum(p_total - i2, 1).astype(f32) * scale,
+                1.0))
+        hi = kops.find_hi_device(st["support"], st["alive"], w, tgt)
+        return dict(
+            st, bounds=bounds, rho_sub=rho_sub, scale=scale, lo=lo,
+            done=done, i=i2, init_sup=init_sup, tgt=tgt, hi=hi,
+            covered=f32(0.0), rho_start=st["rho"],
+            iters=st["iters"] + 1,
+        )
+
+    def sweep(st):
+        (support, alive, dv, _theta, peeled, rho, wedges, hucs, elided,
+         covered, ovf) = _sweep_once(
+            a, ids, row_ext, kmax, jnp.asarray(c_rcnt, f32), st["hi"],
+            st["lo"], st["support"], st["alive"], st["dv"], f32(0.0),
+            st["peeled"], st["rho"], st["wedges"], st["hucs"],
+            st["elided"], st["covered"], st["ovf"],
+            backend=backend, blocks=blocks, use_huc=use_huc,
+            peel_width=peel_width, minmode=False,
+        )
+        newly = peeled & ~st["peeled"]
+        return dict(
+            st, support=support, alive=alive, dv=dv, peeled=peeled,
+            rho=rho, wedges=wedges, hucs=hucs, elided=elided,
+            covered=covered, ovf=ovf,
+            subset_of=jnp.where(newly, st["i"], st["subset_of"]),
+            iters=st["iters"] + 1,
+        )
+
+    def cond_fn(st):
+        return ~st["done"] & ~st["ovf"] & (st["iters"] < max_iters)
+
+    def body_fn(st):
+        drained = ~jnp.any(select_peel(st["support"], st["alive"],
+                                       st["hi"]))
+        return jax.lax.cond(drained, boundary, sweep, st)
+
+    return jax.lax.while_loop(cond_fn, body_fn, state)
+
+
+def cd_graph_state0(support, alive, dv, rows_pad: int, p_total: int):
+    """Initial carried state of ``device_cd_graph_loop``.
+
+    ``hi = -inf`` makes the first body iteration take the boundary branch,
+    which opens subset 0 on device (no host-side findHi at all).  The
+    driver re-enters with the FETCHED state after an overflow replay or a
+    cap-exit, resetting only ``iters`` (the per-invocation valve budget).
+    """
+    i32 = jnp.int32
+    f32 = jnp.float32
+    return dict(
+        support=support, alive=alive, dv=dv,
+        subset_of=jnp.full(rows_pad, -1, i32),
+        init_sup=jnp.zeros(rows_pad, f32),
+        peeled=jnp.zeros(rows_pad, bool),
+        bounds=jnp.zeros(p_total + 1, f32),
+        rho_sub=jnp.zeros(max(p_total, 1), i32),
+        i=i32(-1), hi=f32(-jnp.inf), lo=f32(0.0),
+        scale=f32(1.0), tgt=f32(0.0),
+        covered=f32(0.0), rho_start=i32(0),
+        rho=i32(0), wedges=f32(0.0), hucs=i32(0), elided=i32(0),
+        iters=i32(0), ovf=jnp.bool_(False), done=jnp.bool_(False),
+    )
 
 
 # ---------------------------------------------------------------------- #

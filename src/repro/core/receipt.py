@@ -26,6 +26,7 @@ from .engine import (
     batched_level_loop,
     bucket,
     cd_checkpoint_state,
+    device_cd_graph_loop,
     device_peel_loop,
     find_hi_np,
     host_sweep,
@@ -66,6 +67,7 @@ __all__ = [
     "cd_checkpoint_state",
     "DeviceGraph",
     "device_peel_loop",
+    "device_cd_graph_loop",
     "batched_level_loop",
     "host_sweep",
     "bucket",

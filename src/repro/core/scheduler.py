@@ -48,15 +48,24 @@ def pack_by_shape(
     return out
 
 
-def lpt_assign(weights: Sequence[float], k: int) -> List[List[int]]:
+def lpt_assign(weights: Sequence[float], k: int,
+               init_loads: Optional[Sequence[float]] = None,
+               ) -> List[List[int]]:
     """Longest-Processing-Time assignment of tasks to ``k`` workers.
 
     Returns per-worker lists of task indices.  Graham's classic
     4/3-approximation [Graham 1969], the rule the paper's workload-aware
     scheduling is modeled on (Fig. 3).
+
+    ``init_loads`` seeds the per-worker loads (list scheduling on
+    pre-loaded machines): the distributed FD driver dispatches one LPT
+    plan per SHAPE GROUP and carries the accumulated shard loads across
+    groups, so the whole-run assignment stays balanced instead of every
+    group independently front-loading worker 0.
     """
     order = sorted(range(len(weights)), key=lambda i: -weights[i])
-    loads = [0.0] * k
+    loads = (list(init_loads) if init_loads is not None else [0.0] * k)
+    assert len(loads) == k
     assign: List[List[int]] = [[] for _ in range(k)]
     for i in order:
         j = loads.index(min(loads))
@@ -65,7 +74,9 @@ def lpt_assign(weights: Sequence[float], k: int) -> List[List[int]]:
     return assign
 
 
-def lpt_shard_plan(weights: Sequence[float], k: int) -> Tuple[List[int], int]:
+def lpt_shard_plan(weights: Sequence[float], k: int,
+                   init_loads: Optional[Sequence[float]] = None,
+                   ) -> Tuple[List[int], int]:
     """LPT assignment flattened into a shardable layout.
 
     Returns (slots, per_shard): ``slots`` is a length ``k * per_shard``
@@ -73,9 +84,10 @@ def lpt_shard_plan(weights: Sequence[float], k: int) -> Tuple[List[int], int]:
     position j of shard s, or -1 for a padding slot.  Reordering a task
     stack by this plan makes contiguous equal-size shards LPT-balanced —
     the layout the distributed FD driver feeds to a mesh whose group dim
-    is sharded over all axes (core/distributed.py).
+    is sharded over all axes (core/distributed.py).  ``init_loads``
+    passes through to ``lpt_assign`` (cross-group load carryover).
     """
-    assign = lpt_assign(weights, k)
+    assign = lpt_assign(weights, k, init_loads)
     per_shard = max((len(a) for a in assign), default=0)
     per_shard = max(per_shard, 1)
     slots = []

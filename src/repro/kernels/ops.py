@@ -45,6 +45,7 @@ __all__ = [
     "butterfly_support",
     "butterfly_update",
     "butterfly_update_batched",
+    "find_hi_device",
     "default_backend",
     "SPARSE_BACKENDS",
 ]
@@ -54,6 +55,35 @@ SPARSE_BACKENDS = ("pallas_sparse", "interpret_sparse")
 
 def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@jax.jit
+def find_hi_device(support, alive, w, tgt):
+    """Adaptive range upper bound (Alg. 3 findHi) as a device reduction.
+
+    The wedge-mass histogram over support values at exact (per-value)
+    resolution: sort alive supports ascending, prefix-sum their residual
+    wedge counts, and return ``s + 1`` for the smallest support ``s``
+    whose cumulative wedge mass reaches ``tgt``.  When the target exceeds
+    the remaining mass the result is ``max(alive support) + 1`` — the
+    catch-all bound, which ``tgt = inf`` selects directly.
+
+    Device twin of ``core/engine/cd.find_hi_np``: the whole-graph CD loop
+    (``engine/peel_loop.device_cd_graph_loop``) calls it at every subset
+    boundary so range determination costs no host sync (DESIGN.md §2.3).
+    Prefix sums accumulate in f32 and are exact while the total residual
+    wedge mass stays below 2**24; the host path prefix-sums in f64
+    (DESIGN.md §8 lists the divergence).
+    """
+    f32 = jnp.float32
+    sup = jnp.where(alive, support, jnp.inf).astype(f32)
+    order = jnp.argsort(sup)
+    ws = jnp.where(alive, w, 0.0).astype(f32)[order]
+    cum = jnp.cumsum(ws)
+    hit = cum >= tgt
+    hi_hit = sup[order][jnp.argmax(hit)]
+    hi_max = jnp.max(jnp.where(alive, support.astype(f32), -jnp.inf))
+    return jnp.where(jnp.any(hit), hi_hit, hi_max) + 1.0
 
 
 def _update_ref(a, b, s, ids_a, ids_b):

@@ -289,6 +289,100 @@ def test_distributed_fd_level_peel_matches_oracle():
     assert out["loads_ok"]
 
 
+SCRIPT_FD_E2E = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core.graph import powerlaw_bipartite
+from repro.core.peeling import bup_oracle
+from repro.core.receipt import ReceiptConfig, tip_decompose
+from repro.launch.mesh import make_mesh
+
+g = powerlaw_bipartite(240, 130, 1800, seed=9)
+tb, _ = bup_oracle(g)
+cfg = ReceiptConfig(num_partitions=8, kernel_blocks=(8, 8, 8), backend="xla")
+t1, s1 = tip_decompose(g, cfg)
+mesh = make_mesh((4, 2), ("data", "model"))
+t2, s2 = tip_decompose(g, cfg, mesh=mesh)
+print(json.dumps({
+    "single_ok": bool((t1 == tb).all()),
+    "mesh_ok": bool((t2 == tb).all()),
+    "identical": bool((t1 == t2).all()),
+    "fd_shards": s2.fd_shards,
+    "shard_rho": s2.fd_shard_rho,
+    "shard_wedges": s2.fd_shard_wedges,
+    "rho_fd_single": s1.rho_fd, "rho_fd_mesh": s2.rho_fd,
+    "wedges_fd_single": s1.wedges_fd, "wedges_fd_mesh": s2.wedges_fd,
+    "groups": s2.fd_groups,
+}))
+"""
+
+
+def test_receipt_fd_mesh_end_to_end_parity():
+    """ISSUE 3 tentpole: ``receipt_fd(mesh=...)`` — LPT shard plan +
+    shard_map level loop + per-shard stats reconciliation — produces tip
+    numbers IDENTICAL to the single-device path, and the reconciled
+    rho/wedge counters match the local driver's exactly."""
+    out = _run(SCRIPT_FD_E2E)
+    assert out["single_ok"] and out["mesh_ok"]
+    assert out["identical"]
+    assert out["fd_shards"] == 8
+    assert len(out["shard_rho"]) == 8 == len(out["shard_wedges"])
+    # the counters the local path measures are the reconciled shard sums
+    # plus the host pre-peel contribution — totals must agree exactly
+    assert out["rho_fd_mesh"] == out["rho_fd_single"]
+    assert out["wedges_fd_mesh"] == out["wedges_fd_single"]
+    assert sum(out["shard_rho"]) > 0
+    assert sum(out["shard_wedges"]) <= out["wedges_fd_mesh"]
+    # LPT with cross-group load carryover: work lands on > 1 shard
+    assert sum(1 for r in out["shard_rho"] if r > 0) > 1
+
+
+SCRIPT_CD_GRAPH_DISPATCH = r"""
+import sys, json
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core.graph import powerlaw_bipartite, random_bipartite
+from repro.core.receipt import ReceiptConfig, RunStats, receipt_cd, receipt_fd
+
+out = {}
+for name, g in (("powerlaw", powerlaw_bipartite(300, 150, 2400, seed=11)),
+                ("er", random_bipartite(60, 40, 0.2, seed=12))):
+    res = {}
+    for disp in ("subset", "graph"):
+        cfg = ReceiptConfig(num_partitions=12, kernel_blocks=(8, 8, 8),
+                            backend="xla", cd_dispatch=disp)
+        stats = RunStats()
+        sid, isup, bounds, _ = receipt_cd(g, cfg, stats)
+        rt_cd = stats.host_round_trips
+        th = receipt_fd(g, sid, isup, bounds, cfg, stats)
+        res[disp] = dict(
+            theta=np.round(th).astype(int).tolist(),
+            rt_cd=rt_cd, num_subsets=stats.num_subsets,
+            overflow=stats.overflow_fallbacks, rho_cd=stats.rho_cd,
+        )
+    out[name] = res
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_cd_single_dispatch_equals_subset_sync_subprocess():
+    """ISSUE 3 tentpole equivalence (fresh interpreter): whole-graph
+    single-dispatch CD == the PR-2 per-subset-sync CD on the final tip
+    numbers, with O(1) host round trips instead of O(subsets)."""
+    out = _run(SCRIPT_CD_GRAPH_DISPATCH)
+    for name, res in out.items():
+        assert res["graph"]["theta"] == res["subset"]["theta"], name
+        g = res["graph"]
+        assert g["rt_cd"] <= 2 + 6 * g["overflow"], (name, g)
+        # the subset driver syncs at least once per subset
+        assert res["subset"]["rt_cd"] >= res["subset"]["num_subsets"]
+        assert g["rt_cd"] < res["subset"]["rt_cd"], name
+
+
 SCRIPT_MOE_SHARDED = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

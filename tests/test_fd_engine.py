@@ -227,3 +227,29 @@ def test_property_lpt_respects_graham_bound(k, weights):
     # sanity: every task assigned exactly once
     seen = sorted(i for a in assign for i in a)
     assert seen == list(range(len(weights)))
+
+
+def test_lpt_init_loads_carry_across_batches():
+    """Cross-group load carryover (the mesh FD driver dispatches one LPT
+    plan per shape group): seeding the loads steers the next batch away
+    from already-loaded workers — without it every batch front-loads
+    worker 0."""
+    first = lpt_assign([8.0], 2)
+    assert first == [[0], []]
+    second = lpt_assign([8.0], 2, init_loads=[8.0, 0.0])
+    assert second == [[], [0]]
+    # default (no seed) is unchanged legacy behavior
+    assert lpt_assign([8.0], 2, init_loads=None) == [[0], []]
+
+
+def test_fd_mesh_requires_level_mode():
+    """The sharded FD driver runs the batched level loop only; the legacy
+    sequential comparators reject a mesh with a clear error."""
+    g = GRAPH_CASES["fig1"]()
+    from repro.core.receipt import RunStats, receipt_cd, receipt_fd
+
+    stats = RunStats()
+    sid, isup, bounds, _ = receipt_cd(g, _cfg(), stats)
+    with pytest.raises(ValueError, match="fd_mode='level'"):
+        receipt_fd(g, sid, isup, bounds, _cfg(fd_mode="b2"), RunStats(),
+                   mesh="sentinel")

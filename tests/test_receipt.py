@@ -299,6 +299,107 @@ def test_parb_device_loop_sweep_cap_reenters():
     assert sd.device_loop_calls > 1
 
 
+# --------------------------------------------------------------------- #
+# whole-graph single-dispatch CD (cd_dispatch="graph", ISSUE 3 tentpole)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("case", ["er_small", "powerlaw", "star",
+                                  "empty_edges", "single_bfly"])
+def test_cd_graph_dispatch_matches_oracle(case):
+    """Whole-graph CD (findHi on device, ONE dispatch for all subsets)
+    must stay exact end to end."""
+    g = GRAPH_CASES[case]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(g, _cfg(cd_dispatch="graph"))
+    np.testing.assert_array_equal(tb, tr)
+    assert stats.dgm_compactions == 0          # no host compaction by design
+
+
+def test_cd_graph_dispatch_o1_round_trips():
+    """The tentpole claim: whole-graph CD blocks the host O(1) times per
+    GRAPH — one sizing snapshot + one final fetch (+ a bounded overflow
+    surcharge) — independent of the subset count."""
+    from repro.core.receipt import RunStats, receipt_cd
+
+    g = GRAPH_CASES["powerlaw"]()
+    stats = RunStats()
+    receipt_cd(g, _cfg(num_partitions=16, cd_dispatch="graph"), stats)
+    assert stats.num_subsets > 4
+    assert stats.host_round_trips <= 2 + 6 * stats.overflow_fallbacks
+    sub = RunStats()
+    receipt_cd(g, _cfg(num_partitions=16, cd_dispatch="subset"), sub)
+    assert stats.host_round_trips < sub.host_round_trips
+
+
+def test_cd_graph_dispatch_theorem1_containment():
+    """Theorem 1 under device-side findHi: every vertex's tip number lies
+    in its subset's range."""
+    from repro.core.receipt import RunStats, receipt_cd
+
+    g = GRAPH_CASES["vhub"]()
+    stats = RunStats()
+    subset_id, _isup, bounds, _ = receipt_cd(
+        g, _cfg(num_partitions=8, cd_dispatch="graph"), stats)
+    tb, _ = bup_oracle(g)
+    for u in range(g.n_u):
+        i = subset_id[u]
+        assert bounds[i] <= tb[u] < bounds[i + 1], (
+            f"u={u} theta={tb[u]} not in [{bounds[i]}, {bounds[i+1]})")
+
+
+def test_cd_graph_dispatch_init_support_vector():
+    """The on-device FD init snapshot (Lemma 1) equals the host path's."""
+    from repro.core.peeling import shared_butterfly_matrix
+    from repro.core.receipt import RunStats, receipt_cd
+
+    g = GRAPH_CASES["er_small"]()
+    stats = RunStats()
+    subset_id, init_sup, _b, _ = receipt_cd(
+        g, _cfg(num_partitions=4, cd_dispatch="graph"), stats)
+    b2 = shared_butterfly_matrix(g)
+    for i in range(subset_id.max() + 1):
+        geq = subset_id >= i
+        for u in np.where(subset_id == i)[0]:
+            assert init_sup[u] == b2[u][geq].sum(), (u, i)
+
+
+def test_cd_dispatch_and_valve_validation():
+    from repro.core.receipt import RunStats, receipt_cd
+
+    g = GRAPH_CASES["fig1"]()
+    with pytest.raises(ValueError, match="cd_dispatch"):
+        tip_decompose(g, _cfg(cd_dispatch="Graph"))
+    with pytest.raises(ValueError, match="device_loop"):
+        tip_decompose(g, _cfg(cd_dispatch="graph", device_loop=False))
+    with pytest.raises(ValueError, match="max_sweeps"):
+        tip_decompose(g, _cfg(max_sweeps=0))
+    with pytest.raises(ValueError, match="checkpoint"):
+        receipt_cd(g, _cfg(cd_dispatch="graph"), RunStats(),
+                   checkpoint_cb=lambda s: None)
+
+
+# --------------------------------------------------------------------- #
+# the max_sweeps CD valve (ISSUE 3 satellite / ROADMAP last item)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("dispatch", ["subset", "graph"])
+def test_cd_sweep_cap_reenters_and_preserves_containment(dispatch):
+    """A capped CD subset must NOT close early: the driver re-enters the
+    device loop on cap-exit (the valve bounds ONE invocation, never the
+    schedule), so Theorem 1's range containment survives any cap >= 1 —
+    the pre-fix behavior floored theta at a too-high subset bound."""
+    from repro.core.receipt import RunStats, receipt_cd, receipt_fd
+
+    g = GRAPH_CASES["er_small"]()
+    tb, _ = bup_oracle(g)
+    cfg = _cfg(num_partitions=4, max_sweeps=1, cd_dispatch=dispatch)
+    stats = RunStats()
+    sid, isup, bounds, _ = receipt_cd(g, cfg, stats)
+    for u in range(g.n_u):
+        assert bounds[sid[u]] <= tb[u] < bounds[sid[u] + 1], (dispatch, u)
+    th = receipt_fd(g, sid, isup, bounds, cfg, stats)
+    np.testing.assert_array_equal(np.round(th).astype(np.int64), tb)
+    assert stats.device_loop_calls > stats.num_subsets
+
+
 def test_cd_checkpoint_restart_exact():
     """Fault tolerance of the peeling engine itself: interrupt CD at a
     subset boundary, restore the checkpointed state (through the same
