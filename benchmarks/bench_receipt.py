@@ -18,9 +18,12 @@ the default stack), ``receipt_graph`` (whole-graph single-dispatch CD —
 cd_dispatch="graph", the ISSUE 3 tentpole), ``receipt_fd_b2`` (fused CD
 loop + the PR 1 sequential FD — the FD baseline), ``receipt_host`` /
 ``parb_*`` (round-trip comparators).  A separate CD-phase-only
-measurement records the tentpole metric: O(1) blocking host round trips
+measurement records the tentpole metrics: O(1) blocking host round trips
 per GRAPH for the single-dispatch driver vs >= 1 per subset
-(``cd_phase_round_trips`` / ``derived.cd_rt_graph_total``).
+(``cd_phase_round_trips`` / ``derived.cd_rt_graph_total``), and — with
+the ISSUE 4 on-device DGM — the graph dispatch's traversed-wedge count
+within 10% of the per-subset host-DGM driver's
+(``derived.cd_graph_wedge_ratio``).
 
 Usage:  PYTHONPATH=src python benchmarks/bench_receipt.py [--quick] [--out F]
 """
@@ -35,6 +38,22 @@ from pathlib import Path
 import numpy as np
 
 sys.path.insert(0, "src")
+
+
+def _load_gate_constants():
+    """Shared gate constants from scripts/bench_gate.py (loaded by file
+    path — scripts/ is not a package, and prepending it to sys.path
+    could shadow repro modules)."""
+    import importlib.util
+
+    path = Path(__file__).resolve().parent.parent / "scripts" / "bench_gate.py"
+    spec = importlib.util.spec_from_file_location("bench_gate", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.OVF_RT_SURCHARGE, mod.WEDGE_RATIO_TOL
+
+
+OVF_RT_SURCHARGE, WEDGE_RATIO_TOL = _load_gate_constants()
 
 from repro.core.peeling import bup_oracle
 from repro.core.receipt import (
@@ -64,6 +83,7 @@ def _stats_dict(stats) -> dict:
         "wedges_fd": stats.wedges_fd,
         "huc_recounts": stats.huc_recounts,
         "dgm_compactions": stats.dgm_compactions,
+        "dgm_device_compactions": stats.dgm_device_compactions,
         "elided_sweeps": stats.elided_sweeps,
         "num_subsets": stats.num_subsets,
         "fd_groups": stats.fd_groups,
@@ -137,12 +157,19 @@ def bench_graph(name: str, n_u: int, n_v: int, m: int, *,
             "overflow_fallbacks": s.overflow_fallbacks,
             "num_subsets": s.num_subsets,
             "device_loop_calls": s.device_loop_calls,
+            "wedges_cd": s.wedges_cd,
+            "rho_cd": s.rho_cd,
+            "huc_recounts": s.huc_recounts,
+            "dgm_compactions": s.dgm_compactions,
+            "dgm_device_compactions": s.dgm_device_compactions,
         }
     rec["cd_phase_round_trips"] = cd_rt
     print(f"  CD-only RTs: subset={cd_rt['subset']['host_round_trips']} "
           f"graph={cd_rt['graph']['host_round_trips']} "
           f"(ovf={cd_rt['graph']['overflow_fallbacks']}, "
-          f"{cd_rt['graph']['num_subsets']} subsets)", flush=True)
+          f"{cd_rt['graph']['num_subsets']} subsets, "
+          f"{cd_rt['graph']['dgm_device_compactions']} device DGM)",
+          flush=True)
 
     ed, eh = rec["engines"]["receipt_device"], rec["engines"]["receipt_host"]
     ef = rec["engines"]["receipt_fd_b2"]
@@ -157,6 +184,15 @@ def bench_graph(name: str, n_u: int, n_v: int, m: int, *,
             cd_rt["subset"]["host_round_trips"]
             / max(cd_rt["graph"]["host_round_trips"], 1),
         "cd_graph_wall_warm_s": eg["wall_warm_s"],
+        # on-device DGM: the graph dispatch's traversed wedges vs the
+        # per-subset host-DGM driver's (the ISSUE 4 tentpole metric —
+        # close to 1.0 now that c_rcnt is re-estimated per boundary)
+        "cd_graph_wedges": cd_rt["graph"]["wedges_cd"],
+        "cd_subset_wedges": cd_rt["subset"]["wedges_cd"],
+        "cd_graph_wedge_ratio":
+            cd_rt["graph"]["wedges_cd"]
+            / max(cd_rt["subset"]["wedges_cd"], 1),
+        "cd_graph_dgm_device": cd_rt["graph"]["dgm_device_compactions"],
         "cd_rt_per_subset_device": ed["host_round_trips"] / n_sub,
         "cd_rt_per_subset_host": eh["host_round_trips"] / n_sub,
         "cd_round_trip_reduction":
@@ -181,7 +217,8 @@ def bench_graph(name: str, n_u: int, n_v: int, m: int, *,
           f"({d['cd_rt_per_subset_host']:.1f} -> "
           f"{d['cd_rt_per_subset_device']:.1f} per subset; "
           f"single-dispatch CD: {d['cd_rt_subset_total']} -> "
-          f"{d['cd_rt_graph_total']} per graph), "
+          f"{d['cd_rt_graph_total']} per graph, "
+          f"wedge ratio {d['cd_graph_wedge_ratio']:.3f} vs subset DGM), "
           f"wall speedup {d['cd_wall_speedup_warm']:.2f}x, "
           f"ParB RT reduction {d['parb_round_trip_reduction']:.0f}x",
           flush=True)
@@ -226,21 +263,39 @@ def main(argv=None) -> int:
     largest = results[-1]["derived"]
     largest_cd = results[-1]["cd_phase_round_trips"]["graph"]
     ok = (largest["cd_round_trip_reduction"] >= 5.0
-          and largest["cd_wall_speedup_warm"] > 1.0
           and largest["fd_rho_reduction"] > 1.0
           # single-dispatch CD: O(1) RTs per graph (2 + a bounded
           # overflow surcharge), independent of the subset count
           and largest_cd["host_round_trips"]
-          <= 2 + 6 * largest_cd["overflow_fallbacks"])
+          <= 2 + OVF_RT_SURCHARGE * largest_cd["overflow_fallbacks"])
+    # on-device DGM: every benched graph must keep the O(1)-RT claim AND
+    # land its traversed-wedge count within WEDGE_RATIO_TOL of the
+    # per-subset host-DGM driver's (the ISSUE 4 acceptance gate)
+    for r in results:
+        cd = r["cd_phase_round_trips"]["graph"]
+        rt_ok = (cd["host_round_trips"]
+                 <= 2 + OVF_RT_SURCHARGE * cd["overflow_fallbacks"])
+        wedge_ok = r["derived"]["cd_graph_wedge_ratio"] <= WEDGE_RATIO_TOL
+        if not (rt_ok and wedge_ok):
+            print(f"[bench_receipt] {r['name']}: graph-dispatch gate "
+                  f"FAILED (rt_ok={rt_ok}, wedge_ratio="
+                  f"{r['derived']['cd_graph_wedge_ratio']:.3f})")
+        ok = ok and rt_ok and wedge_ok
     if not args.quick:
-        # the FD wall-clock criterion targets the LARGEST graph (small
-        # stacks are dominated by fixed dispatch costs, where the
-        # sequential baseline's single fori_loop is hard to beat on CPU).
-        # The deterministic FD signal is fd_rho_reduction (checked above);
-        # on CPU the wall gate allows 10% scheduler noise — the two
+        # wall-clock criteria run on the FULL bench only: --quick is the
+        # per-push CI smoke (scripts/ci.sh quick fails on this exit
+        # code), and shared runners are too noisy to gate on wall time —
+        # the deterministic counters above carry the regression signal
+        # there (scripts/bench_gate.py makes the same call).  The FD
+        # wall criterion targets the LARGEST graph (small stacks are
+        # dominated by fixed dispatch costs, where the sequential
+        # baseline's single fori_loop is hard to beat on CPU); the
+        # deterministic FD signal is fd_rho_reduction (checked above);
+        # on CPU the FD gate allows 10% scheduler noise — the two
         # engines are flop-parity there and the level-peel win is
         # structural on latency-bound accelerators.
-        ok = ok and largest["fd_wall_speedup_warm"] > 0.9
+        ok = (ok and largest["cd_wall_speedup_warm"] > 1.0
+              and largest["fd_wall_speedup_warm"] > 0.9)
     print(f"[bench_receipt] largest graph: "
           f"{largest['cd_round_trip_reduction']:.1f}x fewer host round "
           f"trips, {largest['cd_wall_speedup_warm']:.2f}x warm wall "

@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: fresh bench run vs checked-in baseline.
+
+Compares a fresh ``benchmarks/bench_receipt.py`` JSON (typically a
+``--quick`` run in CI) against the repo's checked-in
+``BENCH_receipt.json`` on the DERIVED invariants that encode the
+engine's structural claims — the things a code change can silently
+regress without any test failing:
+
+* ``cd_rt_graph_total`` — the single-dispatch CD driver blocks the host
+  O(1) times per graph (2 + a bounded overflow surcharge).  HARD gate:
+  a fresh value above both the baseline and the O(1) bound fails.
+* ``cd_graph_wedge_ratio`` — the on-device DGM keeps the graph
+  dispatch's traversed-wedge count within 10% of the per-subset host-DGM
+  driver's (ISSUE 4 acceptance).
+* wedge counters (``cd_graph_wedges`` / ``cd_subset_wedges``) — the
+  sweep schedules are deterministic on the synthetic bench graphs, so a
+  drift beyond tolerance means the peel schedule itself changed.
+* rho invariants (``rho_cd`` per dispatch) — same determinism argument
+  for the sweep counts.
+
+Graphs are matched by name, so a ``--quick`` fresh run (smallest graph
+only) gates against the corresponding baseline entry; baseline-only
+graphs are skipped.  Wall-clock numbers are deliberately NOT gated —
+CI runners are too noisy for that; the structural counters are exact.
+
+Usage:
+    python scripts/bench_gate.py --fresh /tmp/bench_smoke.json \
+        [--baseline BENCH_receipt.json] [--rel-tol 0.10]
+
+Exit code 0 when every gate passes, 1 with a per-gate report otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Shared gate constants — bench_receipt.py imports these so the two
+# executable gates (fresh-run self-check and baseline comparison) can
+# never drift apart.  Overflow replays are environment-dependent
+# (peel-buffer sizing); each one costs a bounded number of extra
+# blocking transfers.
+OVF_RT_SURCHARGE = 6
+# on-device DGM acceptance: graph-dispatch traversed wedges within 10%
+# of the per-subset host-DGM driver's
+WEDGE_RATIO_TOL = 1.10
+
+
+def _graphs_by_name(payload: dict) -> dict:
+    return {g["name"]: g for g in payload.get("graphs", [])}
+
+
+def _check_rel(errors, name, metric, fresh, base, rel_tol):
+    """Relative-drift gate: |fresh - base| <= rel_tol * max(|base|, 1)."""
+    if abs(fresh - base) > rel_tol * max(abs(base), 1.0):
+        errors.append(
+            f"{name}: {metric} drifted beyond {rel_tol:.0%}: "
+            f"fresh={fresh} baseline={base}")
+
+
+def gate(fresh: dict, baseline: dict, rel_tol: float) -> list:
+    """Return the list of gate failures (empty = pass)."""
+    errors: list = []
+    base_graphs = _graphs_by_name(baseline)
+    fresh_graphs = _graphs_by_name(fresh)
+    matched = [n for n in fresh_graphs if n in base_graphs]
+    if not matched:
+        return [f"no common graphs between fresh ({sorted(fresh_graphs)}) "
+                f"and baseline ({sorted(base_graphs)})"]
+
+    for name in matched:
+        fg, bg = fresh_graphs[name], base_graphs[name]
+        fd, bd = fg.get("derived", {}), bg.get("derived", {})
+        f_cd = fg.get("cd_phase_round_trips", {}).get("graph", {})
+
+        # --- O(1) round trips per graph (the single-dispatch claim) --- #
+        rt = fd.get("cd_rt_graph_total")
+        base_rt = bd.get("cd_rt_graph_total")
+        if rt is None or base_rt is None:
+            errors.append(f"{name}: cd_rt_graph_total missing "
+                          f"(fresh={rt}, baseline={base_rt})")
+        else:
+            ovf = f_cd.get("overflow_fallbacks", 0)
+            bound = max(base_rt, 2) + OVF_RT_SURCHARGE * ovf
+            if rt > bound:
+                errors.append(
+                    f"{name}: cd_rt_graph_total inflated: fresh={rt} > "
+                    f"allowed {bound} (baseline={base_rt}, overflow={ovf})")
+
+        # --- on-device DGM wedge parity with the subset driver -------- #
+        ratio = fd.get("cd_graph_wedge_ratio")
+        if ratio is None:
+            errors.append(f"{name}: cd_graph_wedge_ratio missing")
+        elif ratio > WEDGE_RATIO_TOL:
+            errors.append(
+                f"{name}: cd_graph_wedge_ratio {ratio:.3f} > "
+                f"{WEDGE_RATIO_TOL} — the graph dispatch lost its DGM "
+                f"wedge parity")
+
+        # --- deterministic counter drift (wedges, rho) ---------------- #
+        for disp in ("graph", "subset"):
+            f_phase = fg.get("cd_phase_round_trips", {}).get(disp, {})
+            b_phase = bg.get("cd_phase_round_trips", {}).get(disp, {})
+            for metric in ("wedges_cd", "rho_cd"):
+                fv, bv = f_phase.get(metric), b_phase.get(metric)
+                if fv is None or bv is None:
+                    # older baselines lack the counters; nothing to gate
+                    continue
+                _check_rel(errors, name, f"cd[{disp}].{metric}",
+                           fv, bv, rel_tol)
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="bench_receipt.py output of THIS checkout")
+    ap.add_argument("--baseline", default=str(ROOT / "BENCH_receipt.json"),
+                    help="checked-in reference (default: BENCH_receipt.json)")
+    ap.add_argument("--rel-tol", type=float, default=0.10,
+                    help="relative tolerance for counter drift")
+    args = ap.parse_args(argv)
+
+    fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+    errors = gate(fresh, baseline, args.rel_tol)
+    if errors:
+        for e in errors:
+            print(f"BENCH GATE: {e}", file=sys.stderr)
+        return 1
+    names = sorted(_graphs_by_name(fresh))
+    print(f"bench gate ok: {len(names)} graph(s) within tolerance "
+          f"({', '.join(names)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

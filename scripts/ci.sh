@@ -5,18 +5,40 @@
 # Usage: scripts/ci.sh [quick|full] [extra pytest args]
 #   quick  (default) skip tests marked @pytest.mark.slow (-m "not slow")
 #          -- the per-push job; keeps the suite well under the runner
-#          timeout
+#          timeout.  Also runs the quick engine bench and gates it
+#          against the checked-in BENCH_receipt.json derived metrics
+#          (scripts/bench_gate.py).
 #   full   run everything, slow device-loop equivalence tests included
 #          -- the nightly job (and the tier-1 command:
 #          `PYTHONPATH=src python -m pytest -x -q` is equivalent)
+#
+# Arg parsing contract (covered by the CI dry-run step):
+#   * an explicit first arg of exactly "quick" or "full" selects the
+#     mode and is consumed;
+#   * a first arg starting with "-" means "no mode given": mode stays
+#     quick and EVERY arg is forwarded to pytest verbatim;
+#   * anything else as a first arg is an error (a typo'd mode used to
+#     fall through as a bogus pytest positional arg).
+#   CI_SH_DRY_RUN=1 prints "MODE=<mode> ARGS=<args>" and exits 0 so the
+#   parsing itself is testable without running the suite.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-MODE="${1:-quick}"
-case "$MODE" in
-  quick|full) shift $(( $# > 0 ? 1 : 0 )) ;;
-  *) MODE="quick" ;;   # no mode given: remaining args go to pytest
+MODE=quick
+case "${1:-}" in
+  quick|full) MODE="$1"; shift ;;
+  ""|-*) ;;                      # no mode given: args all go to pytest
+  *)
+    echo "ci.sh: unknown mode '${1}' (expected 'quick' or 'full';" \
+         "pytest args must start with '-')" >&2
+    exit 2
+    ;;
 esac
+
+if [ "${CI_SH_DRY_RUN:-0}" = "1" ]; then
+  echo "MODE=$MODE ARGS=$*"
+  exit 0
+fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
@@ -42,7 +64,7 @@ if failed:
 print(f"ok: {len(list(root.rglob('*.py')))} modules import cleanly")
 EOF
 
-echo "== docs lint (README/DESIGN anchors, links, algorithm map) =="
+echo "== docs lint (README/DESIGN/ROADMAP anchors, links, algorithm map) =="
 python scripts/docs_lint.py
 
 if [ "$MODE" = "quick" ]; then
@@ -50,6 +72,9 @@ if [ "$MODE" = "quick" ]; then
   python -m pytest --collect-only -q > /dev/null
   echo "== test suite (quick: -m 'not slow') =="
   python -m pytest -x -q -m "not slow" "$@"
+  echo "== engine bench (quick) + regression gate vs BENCH_receipt.json =="
+  python benchmarks/bench_receipt.py --quick --out /tmp/bench_quick.json
+  python scripts/bench_gate.py --fresh /tmp/bench_quick.json
 else
   echo "== test suite (full, incl. slow device-loop equivalence) =="
   python -m pytest -x -q "$@"

@@ -6,8 +6,9 @@ Checks (all cheap, no jax import needed beyond the module graph):
 1. README.md exists and carries the required anchors: the quickstart
    command, the tier-1 verify command, and links to DESIGN.md /
    ROADMAP.md / BENCH_receipt.json.
-2. Every RELATIVE markdown link in README.md and DESIGN.md resolves to
-   an existing file/directory (external http(s) links are skipped).
+2. Every RELATIVE markdown link in README.md, DESIGN.md and ROADMAP.md
+   resolves to an existing file/directory (external http(s) links are
+   skipped).
 3. DESIGN.md has the "Algorithm map" section, and every backticked
    dotted ``repro.*`` name it cites resolves under ``PYTHONPATH=src``
    (import the longest module prefix, getattr the rest) — so the
@@ -49,7 +50,7 @@ def check_anchors(errors: list) -> None:
 
 
 def check_links(errors: list) -> None:
-    for name in ("README.md", "DESIGN.md"):
+    for name in ("README.md", "DESIGN.md", "ROADMAP.md"):
         path = ROOT / name
         if not path.exists():
             errors.append(f"{name} is missing")

@@ -328,6 +328,26 @@ def receipt_cd(
     return subset_id, init_support, np.asarray(bounds), None
 
 
+class _GraphStateView:
+    """``host_sweep`` adapter over the device-carried residual graph.
+
+    The whole-graph loop's overflow replay must run against the CARRIED
+    biadjacency — after an on-device DGM boundary the columns are
+    permuted (live-V prefix) and dead rows/columns zeroed, so ``dg.a``
+    (the construction-time matrix) would compute wrong colsums/extents.
+    This view exposes the ``DeviceGraph`` attribute surface ``host_sweep``
+    consumes, sourced from the fetched loop state instead.
+    """
+
+    def __init__(self, dg: DeviceGraph, state, c_rcnt: float):
+        self.a = state["a"]
+        self.ids = dg.ids
+        self.row_ext = state["row_ext"]
+        self.kmax = state["kmax"]
+        self.c_rcnt = c_rcnt
+        self.rows_pad = dg.rows_pad
+
+
 def _receipt_cd_graph(
     g: BipartiteGraph, cfg: ReceiptConfig, stats: RunStats,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
@@ -336,21 +356,21 @@ def _receipt_cd_graph(
     The host's entire involvement per graph is: build the device graph,
     launch the initial counting + ``device_cd_graph_loop``, and fetch the
     final state in ONE blocking transfer — subset boundaries, findHi, the
-    FD init snapshot and subset-id stamping all happen inside the loop
+    FD init snapshot, subset-id stamping AND Dynamic Graph Maintenance
+    (on-device column compaction + HUC-bound re-estimation + staircase
+    re-tightening, gated by ``cfg.use_dgm``) all happen inside the loop
     (DESIGN.md §2.3).  Re-entry happens only on a peel-buffer overflow
-    (host replays that one sweep at the precise bucket, folds its effect
-    into the carried state, doubles the buffer) or a ``max_sweeps``
-    cap-exit (state fed straight back with a fresh iteration budget), so
-    ``RunStats.host_round_trips`` is O(1) per graph instead of
-    O(subsets).
+    (host replays that one sweep at the precise bucket — against the
+    carried, column-permuted matrix via ``_GraphStateView`` — folds its
+    effect into the carried state, doubles the buffer) or a
+    ``max_sweeps`` cap-exit (state fed straight back with a fresh
+    iteration budget), so ``RunStats.host_round_trips`` is O(1) per
+    graph instead of O(subsets).
 
-    DGM re-induction is intentionally absent — compaction restructures
-    the matrix on the host, which is exactly the synchronization this
-    driver eliminates.  The cost is that late sweeps run at the full
-    padded shape; the benefit is a single dispatch.  Bounds may differ
-    from the subset driver (fresh residual wedge counts at every
-    boundary, f32 findHi prefix sums, whole-graph HUC bound) but tip
-    numbers cannot (Theorem 1 holds for any subset bounds).
+    Bounds may differ from the subset driver (fresh residual wedge
+    counts at every boundary, f32 findHi prefix sums, per-boundary
+    instead of threshold-gated DGM cadence) but tip numbers cannot
+    (Theorem 1 holds for any subset bounds).
     """
     backend = cfg.backend or kops.default_backend()
     blocks = cfg.kernel_blocks
@@ -389,13 +409,13 @@ def _receipt_cd_graph(
         n_first = int((alive_np & (sup_np < hi0)).sum())
         peel_width = max(peel_width, min(
             dg.rows_pad, bucket(max(n_first, blocks[1]), blocks[1])))
-    state = cd_graph_state0(support, alive, dg.dv0, dg.rows_pad, p_total)
+    state = cd_graph_state0(dg, support, alive, p_total)
     while True:
         state = device_cd_graph_loop(
-            dg.a, dg.ids, dg.row_ext, dg.kmax, dg.c_rcnt, state,
+            dg.ids, state,
             backend=backend, blocks=blocks, use_huc=cfg.use_huc,
-            peel_width=peel_width, max_iters=cfg.max_sweeps,
-            p_total=p_total,
+            use_dgm=cfg.use_dgm, peel_width=peel_width,
+            max_iters=cfg.max_sweeps, p_total=p_total,
         )
         stats.device_loop_calls += 1
         st = jax.device_get(state)                # THE blocking transfer
@@ -406,19 +426,22 @@ def _receipt_cd_graph(
         if not bool(st["ovf"]):
             continue                              # max_sweeps cap-exit
         # peel-buffer overflow: replay this ONE sweep on the host at the
-        # precise bucket, fold its effect into the carried state (the
+        # precise bucket — against the CARRIED residual graph (column-
+        # permuted/compacted by the on-device DGM boundaries, so dg.a
+        # would be stale), fold its effect into the carried state (the
         # replay's stats go through a scratch RunStats so the final
         # device counters are added exactly once), re-enter wider
         stats.overflow_fallbacks += 1
         tmp = RunStats()
         i_cur = int(st["i"])
+        gv = _GraphStateView(dg, state, float(st["c_rcnt"]))
         support2, alive2, info = host_sweep(
-            dg, cfg, tmp, state["support"], state["alive"],
+            gv, cfg, tmp, state["support"], state["alive"],
             float(st["hi"]), float(st["lo"]), backend, blocks)
         stats.host_round_trips += tmp.host_round_trips + 1
         state["support"] = support2
         state["alive"] = alive2
-        state["dv"] = residual_dv(dg.a, alive2)
+        state["dv"] = residual_dv(state["a"], alive2)
         state["ovf"] = jnp.bool_(False)
         if info is not None:
             peel_dev = jnp.asarray(info["peel_np"])
@@ -443,6 +466,7 @@ def _receipt_cd_graph(
     stats.wedges_cd += int(st["wedges"])
     stats.huc_recounts += int(st["hucs"])
     stats.elided_sweeps += int(st["elided"])
+    stats.dgm_device_compactions += int(st["dgm"])
     stats.sweeps_per_subset.extend(
         int(x) for x in np.asarray(st["rho_sub"])[:num_subsets])
     stats.num_subsets = num_subsets

@@ -102,7 +102,10 @@ class ReceiptConfig:
     backend: Optional[str] = None            # kernel backend (None = auto)
     kernel_blocks: Tuple[int, int, int] = (128, 128, 512)
     use_huc: bool = True
-    use_dgm: bool = True
+    use_dgm: bool = True                     # DGM: host re-induction per
+    #   subset boundary (cd_dispatch="subset", gated by dgm_row_threshold)
+    #   or on-device column compaction + c_rcnt re-estimation + staircase
+    #   re-tightening at EVERY boundary (cd_dispatch="graph", §2.3)
     degree_sort: bool = True                 # Wang et al. relabel (tile density)
     dgm_row_threshold: float = 0.7           # re-induce when alive < thresh*rows
     fd_mode: str = "level"                   # "level" (batched level-peel)
@@ -152,7 +155,9 @@ class RunStats:
     wedges_cd: int = 0              # wedges traversed peeling in CD
     wedges_fd: int = 0              # wedges traversed in FD (see docstring)
     huc_recounts: int = 0
-    dgm_compactions: int = 0
+    dgm_compactions: int = 0        # host DGM re-inductions (subset dispatch)
+    dgm_device_compactions: int = 0  # on-device DGM column compactions at
+    #                               # subset boundaries (graph dispatch)
     elided_sweeps: int = 0          # terminal-sweep elision (beyond-paper)
     num_subsets: int = 0
     bounds: List[int] = dataclasses.field(default_factory=list)
@@ -470,12 +475,11 @@ def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
 # ---------------------------------------------------------------------- #
 @functools.partial(
     jax.jit,
-    static_argnames=("backend", "blocks", "use_huc", "peel_width",
-                     "max_iters", "p_total"),
+    static_argnames=("backend", "blocks", "use_huc", "use_dgm",
+                     "peel_width", "max_iters", "p_total"),
 )
-def device_cd_graph_loop(a, ids, row_ext, kmax, c_rcnt, state, *,
-                         backend, blocks, use_huc, peel_width, max_iters,
-                         p_total):
+def device_cd_graph_loop(ids, state, *, backend, blocks, use_huc, use_dgm,
+                         peel_width, max_iters, p_total):
     """Run the ENTIRE CD phase — every subset — in one device dispatch.
 
     One ``lax.while_loop`` alternates two body branches (DESIGN.md §2.3):
@@ -487,30 +491,52 @@ def device_cd_graph_loop(a, ids, row_ext, kmax, c_rcnt, state, *,
       index in ``subset_of``.
     * **subset boundary** (range drained): close subset ``i`` (record
       ``bounds[i+1] = hi``, per-subset sweep count, the adaptive target
-      ``scale``), then open subset ``i+1`` entirely on device: snapshot
+      ``scale``), run the ON-DEVICE Dynamic Graph Maintenance step (below,
+      ``use_dgm``), then open subset ``i+1`` entirely on device: snapshot
       ``init_sup`` (the FD init vector, Alg. 3 line 7), recompute the
       residual per-row wedge counts ``w = A·max(dv-1, 0)`` (so range
-      determination always sees the FRESH residual graph — what the
-      subset driver only gets after a DGM compaction), and pick the next
-      ``hi`` with the device findHi reduction
+      determination always sees the FRESH residual graph), and pick the
+      next ``hi`` with the device findHi reduction
       (``kernels.ops.find_hi_device``).  ``done`` is raised when no rows
       survive — the loop's only exit besides the overflow flag and the
       ``max_iters`` valve (which bounds one invocation; the driver
       re-enters).
 
-    ``state`` is a dict pytree (see ``cd_graph_state0``) so the driver
-    can re-enter after an overflow replay or a cap-exit by feeding the
-    fetched state straight back.  The host blocks exactly ONCE per
-    invocation — O(1) round trips per GRAPH instead of O(subsets), the
-    dispatch-layer analogue of the paper's 1100x sync reduction.
+    **On-device DGM** (the residual-graph compaction the paper's §5.2
+    runs on the host between subsets, here with static shapes and zero
+    host syncs): dead rows are zeroed out of the carried biadjacency,
+    live-V columns (residual degree >= 2 — anything less cannot form a
+    wedge) are gathered into a dense prefix by a stable argsort
+    permutation (preserving the construction-time degree-sort order
+    within the live prefix), the carried ``dv`` permutes along, the HUC
+    recount bound ``c_rcnt`` is RE-ESTIMATED from the compacted residual
+    degrees (``sum_E min(du, dv)`` — Chiba-Nishizeki on the residual
+    graph, not the whole-graph value), and the block-sparse staircase
+    extents (``row_ext``/``kmax``) are re-tightened on device
+    (``kernels.ops.tighten_extents_device``, clamped by the freshly
+    counted live columns) so the stripe-skip path keeps winning as the
+    graph dies.  The permutation is support-invariant: a column kept by
+    compaction is shared only between live rows, a dropped column
+    (residual degree < 2) can never contribute to a wedge between a
+    survivor and a peeled row — so supports, bounds and tip numbers are
+    bit-identical with DGM on or off (the equivalence suite pins this).
 
-    Trade-offs vs the per-subset driver: no DGM compaction (the matrix
-    shape is fixed for the dispatch lifetime), the HUC recount bound
-    ``c_rcnt`` stays at its whole-graph value, and findHi prefix-sums in
-    f32 (DESIGN.md §8) — all of which may shift subset BOUNDS, never tip
-    numbers (Theorem 1 holds for any bounds).
+    ``state`` is a dict pytree (see ``cd_graph_state0``) carrying the
+    (possibly column-permuted) biadjacency and its staircase/HUC
+    metadata alongside the peel state, so the driver can re-enter after
+    an overflow replay or a cap-exit by feeding the fetched state
+    straight back.  The host blocks exactly ONCE per invocation — O(1)
+    round trips per GRAPH instead of O(subsets), the dispatch-layer
+    analogue of the paper's 1100x sync reduction.
+
+    Remaining trade-off vs the per-subset driver: the matrix SHAPE stays
+    at the seed bucket (compaction permutes and masks, it cannot shrink
+    the dispatch shape), and findHi prefix-sums in f32 (DESIGN.md §8) —
+    both may shift subset BOUNDS, never tip numbers (Theorem 1 holds for
+    any bounds).
     """
     f32 = jnp.float32
+    i32 = jnp.int32
 
     def boundary(st):
         # ---- close subset i (no-op on the very first entry, i = -1) --- #
@@ -528,12 +554,34 @@ def device_cd_graph_loop(a, ids, row_ext, kmax, c_rcnt, state, *,
             jnp.minimum(1.0, st["tgt"] / st["covered"]), st["scale"])
         lo = jnp.where(closing, st["hi"], st["lo"])
         done = ~jnp.any(st["alive"])
+        # ---- on-device DGM: compact the residual graph ---------------- #
+        if use_dgm:
+            a0 = st["a"] * st["alive"][:, None].astype(st["a"].dtype)
+            live_col = st["dv"] >= 2.0
+            # stable sort/prefix permutation (find_hi_device idiom): live
+            # columns form a dense prefix, degree-sort order preserved
+            perm = jnp.argsort(~live_col)
+            a2 = (jnp.take(a0, perm, axis=1)
+                  * live_col[perm][None, :].astype(a0.dtype))
+            dv = jnp.where(live_col, st["dv"], 0.0)[perm]
+            n_live = jnp.sum(live_col).astype(i32)
+            row_ext, kmax = kops.tighten_extents_device(
+                a2, n_live, block_rows=blocks[0], block_k=blocks[2])
+            # HUC recount bound re-estimated on the compacted residual
+            # graph: sum_E min(du, dv) — no longer the whole-graph value
+            du = jnp.sum(a2, axis=1)
+            c_rcnt = jnp.sum(a2 * jnp.minimum(du[:, None], dv[None, :]))
+            dgm = st["dgm"] + closing.astype(i32)
+        else:
+            a2, dv = st["a"], st["dv"]
+            row_ext, kmax, c_rcnt = st["row_ext"], st["kmax"], st["c_rcnt"]
+            dgm = st["dgm"]
         # ---- open subset i+1 (all garbage-safe when done) ------------- #
         i2 = jnp.where(done, i, i + 1)
         init_sup = jnp.where(st["alive"], st["support"], st["init_sup"])
         # fresh residual wedge counts: the range proxy the subset driver
         # only refreshes at DGM compactions, here free at every boundary
-        w = a @ jnp.maximum(st["dv"] - 1.0, 0.0)
+        w = a2 @ jnp.maximum(dv - 1.0, 0.0)
         rem = jnp.sum(jnp.where(st["alive"], w, 0.0))
         catch = i2 >= p_total - 1
         tgt = jnp.where(
@@ -543,7 +591,9 @@ def device_cd_graph_loop(a, ids, row_ext, kmax, c_rcnt, state, *,
                 1.0))
         hi = kops.find_hi_device(st["support"], st["alive"], w, tgt)
         return dict(
-            st, bounds=bounds, rho_sub=rho_sub, scale=scale, lo=lo,
+            st, a=a2, dv=dv, row_ext=row_ext, kmax=kmax, c_rcnt=c_rcnt,
+            dgm=dgm,
+            bounds=bounds, rho_sub=rho_sub, scale=scale, lo=lo,
             done=done, i=i2, init_sup=init_sup, tgt=tgt, hi=hi,
             covered=f32(0.0), rho_start=st["rho"],
             iters=st["iters"] + 1,
@@ -552,9 +602,9 @@ def device_cd_graph_loop(a, ids, row_ext, kmax, c_rcnt, state, *,
     def sweep(st):
         (support, alive, dv, _theta, peeled, rho, wedges, hucs, elided,
          covered, ovf) = _sweep_once(
-            a, ids, row_ext, kmax, jnp.asarray(c_rcnt, f32), st["hi"],
-            st["lo"], st["support"], st["alive"], st["dv"], f32(0.0),
-            st["peeled"], st["rho"], st["wedges"], st["hucs"],
+            st["a"], ids, st["row_ext"], st["kmax"], st["c_rcnt"],
+            st["hi"], st["lo"], st["support"], st["alive"], st["dv"],
+            f32(0.0), st["peeled"], st["rho"], st["wedges"], st["hucs"],
             st["elided"], st["covered"], st["ovf"],
             backend=backend, blocks=blocks, use_huc=use_huc,
             peel_width=peel_width, minmode=False,
@@ -579,18 +629,29 @@ def device_cd_graph_loop(a, ids, row_ext, kmax, c_rcnt, state, *,
     return jax.lax.while_loop(cond_fn, body_fn, state)
 
 
-def cd_graph_state0(support, alive, dv, rows_pad: int, p_total: int):
+def cd_graph_state0(dg: "DeviceGraph", support, alive, p_total: int):
     """Initial carried state of ``device_cd_graph_loop``.
 
     ``hi = -inf`` makes the first body iteration take the boundary branch,
     which opens subset 0 on device (no host-side findHi at all).  The
     driver re-enters with the FETCHED state after an overflow replay or a
     cap-exit, resetting only ``iters`` (the per-invocation valve budget).
+
+    The residual graph itself rides in the state — biadjacency ``a``,
+    residual V-degrees ``dv``, staircase extents ``row_ext``/``kmax``
+    and the HUC bound ``c_rcnt`` — because the on-device DGM step
+    rewrites all of them at subset boundaries (the live-column count it
+    clamps the extents with is recomputed there, not carried); ``dgm``
+    counts the compactions for RunStats.
     """
     i32 = jnp.int32
     f32 = jnp.float32
+    rows_pad = dg.rows_pad
     return dict(
-        support=support, alive=alive, dv=dv,
+        a=dg.a, dv=dg.dv0,
+        row_ext=dg.row_ext, kmax=dg.kmax,
+        c_rcnt=f32(dg.c_rcnt), dgm=i32(0),
+        support=support, alive=alive,
         subset_of=jnp.full(rows_pad, -1, i32),
         init_sup=jnp.zeros(rows_pad, f32),
         peeled=jnp.zeros(rows_pad, bool),
@@ -846,10 +907,15 @@ class DeviceGraph:
 # ---------------------------------------------------------------------- #
 # host-driven sweep (pre-PR engine; also the bucket-overflow fallback)
 # ---------------------------------------------------------------------- #
-def host_sweep(dg: DeviceGraph, cfg: ReceiptConfig, stats: RunStats,
+def host_sweep(dg, cfg: ReceiptConfig, stats: RunStats,
                support, alive, hi: float, lo: float, backend, blocks,
                *, allow_huc: bool = True):
     """One blocking host-driven sweep: select, decide, dispatch, fetch.
+
+    ``dg`` is a ``DeviceGraph`` or any object with the same
+    ``a``/``ids``/``row_ext``/``kmax``/``c_rcnt``/``rows_pad`` surface —
+    the whole-graph overflow replay passes a view over the loop-carried
+    (column-permuted) residual graph instead (`engine/cd._GraphStateView`).
 
     Returns (support, alive, info) where info is None when nothing was
     peelable, else a dict with keys ``peel_np`` (host peel mask),

@@ -38,6 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "column_extents",
     "row_extents",
+    "row_extents_device",
     "batched_row_extents",
     "gathered_tile_extents",
     "batched_gathered_tile_extents",
@@ -71,6 +72,24 @@ def row_extents(a: np.ndarray, block_k: int) -> np.ndarray:
     any_nz = nz.any(axis=1)
     last = n_k - np.argmax(nz[:, ::-1], axis=1)
     return np.where(any_nz, last, 0).astype(np.int32)
+
+
+def row_extents_device(a: jnp.ndarray, block_k: int) -> jnp.ndarray:
+    """Device twin of ``row_extents`` (jnp, traceable inside loops).
+
+    Used by the whole-graph CD loop to RE-TIGHTEN the staircase at every
+    subset boundary after the on-device column compaction: dead rows and
+    dead columns have just been zeroed and the live columns gathered into
+    a dense prefix, so the recomputed extents shrink monotonically as the
+    residual graph dies — the per-boundary analogue of the host-side
+    extent refresh the subset driver gets from DGM re-induction.
+    """
+    n_rows, n_v = a.shape
+    n_k = n_v // block_k
+    nz = (a.reshape(n_rows, n_k, block_k) != 0).any(axis=2)
+    any_nz = nz.any(axis=1)
+    last = n_k - jnp.argmax(nz[:, ::-1], axis=1)
+    return jnp.where(any_nz, last, 0).astype(jnp.int32)
 
 
 def gathered_tile_extents(row_ext: jnp.ndarray, rows: jnp.ndarray,

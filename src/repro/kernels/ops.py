@@ -39,6 +39,7 @@ from .butterfly import (
 from .butterfly_sparse import (
     butterfly_update_pallas_sparse,
     butterfly_update_pallas_sparse_batched,
+    row_extents_device,
 )
 
 __all__ = [
@@ -46,6 +47,7 @@ __all__ = [
     "butterfly_update",
     "butterfly_update_batched",
     "find_hi_device",
+    "tighten_extents_device",
     "default_backend",
     "SPARSE_BACKENDS",
 ]
@@ -84,6 +86,30 @@ def find_hi_device(support, alive, w, tgt):
     hi_hit = sup[order][jnp.argmax(hit)]
     hi_max = jnp.max(jnp.where(alive, support.astype(f32), -jnp.inf))
     return jnp.where(jnp.any(hit), hi_hit, hi_max) + 1.0
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_k"))
+def tighten_extents_device(a, n_live_cols, *, block_rows, block_k):
+    """Compaction-aware staircase extents, recomputed ON DEVICE.
+
+    After the whole-graph CD loop compacts the residual graph at a subset
+    boundary (dead rows zeroed, live-V columns gathered into a dense
+    prefix of ``n_live_cols`` columns), every row's nonzeros sit inside
+    the live prefix, so both the per-row extents and the row-tile extents
+    the sparse kernels scalar-prefetch can be re-tightened without a host
+    round trip.  The live-column count clamps the extents at
+    ``ceil(n_live_cols / block_k)`` — the dead suffix is provably
+    all-zero, so every kernel k-stripe beyond it is skipped exactly.
+
+    Returns ``(row_ext, kmax)``: per-row extents ((n_rows,) int32, the
+    B-side source for ``gathered_tile_extents``) and per-row-tile extents
+    ((n_rows/block_rows,) int32, the scalar-prefetched A-side vector).
+    """
+    ext = row_extents_device(a, block_k)
+    cap = ((n_live_cols + block_k - 1) // block_k).astype(jnp.int32)
+    ext = jnp.minimum(ext, cap)
+    kmax = ext.reshape(-1, block_rows).max(axis=1)
+    return ext, kmax
 
 
 def _update_ref(a, b, s, ids_a, ids_b):

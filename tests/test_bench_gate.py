@@ -1,0 +1,102 @@
+"""Benchmark-regression gate (scripts/bench_gate.py) unit tests.
+
+The gate must PASS on the shipped BENCH_receipt.json compared against
+itself (CI sanity: the checked-in numbers satisfy their own invariants)
+and FAIL on seeded synthetic regressions — an inflated round-trip count,
+a lost DGM wedge parity, a drifted deterministic counter.  Pure JSON
+manipulation: no engine runs, safe for the quick suite.
+"""
+import copy
+import importlib.util
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_gate", ROOT / "scripts" / "bench_gate.py")
+bench_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_gate)
+
+
+def _baseline() -> dict:
+    return json.loads((ROOT / "BENCH_receipt.json").read_text())
+
+
+def test_gate_passes_on_shipped_numbers():
+    base = _baseline()
+    assert bench_gate.gate(base, base, rel_tol=0.10) == []
+
+
+def test_gate_passes_on_quick_subset_of_graphs():
+    """A --quick fresh run (first graph only) gates against the matching
+    baseline entry; the baseline-only graphs are skipped."""
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    fresh["graphs"] = fresh["graphs"][:1]
+    assert bench_gate.gate(fresh, base, rel_tol=0.10) == []
+
+
+def test_gate_fails_on_inflated_round_trips():
+    """The seeded regression of the acceptance criterion: the O(1)
+    single-dispatch round-trip count silently inflating."""
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    g = fresh["graphs"][0]
+    g["derived"]["cd_rt_graph_total"] = 40          # ~ one RT per subset
+    g["cd_phase_round_trips"]["graph"]["host_round_trips"] = 40
+    errors = bench_gate.gate(fresh, base, rel_tol=0.10)
+    assert any("cd_rt_graph_total inflated" in e for e in errors), errors
+
+
+def test_gate_fails_on_lost_wedge_parity():
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    fresh["graphs"][0]["derived"]["cd_graph_wedge_ratio"] = 1.5
+    errors = bench_gate.gate(fresh, base, rel_tol=0.10)
+    assert any("wedge parity" in e for e in errors), errors
+
+
+def test_gate_fails_on_counter_drift():
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    g = fresh["graphs"][0]["cd_phase_round_trips"]["graph"]
+    g["wedges_cd"] = int(g["wedges_cd"] * 2 + 100)
+    errors = bench_gate.gate(fresh, base, rel_tol=0.10)
+    assert any("wedges_cd drifted" in e for e in errors), errors
+
+
+def test_gate_fails_on_disjoint_graphs():
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    for g in fresh["graphs"]:
+        g["name"] = g["name"] + "_renamed"
+    errors = bench_gate.gate(fresh, base, rel_tol=0.10)
+    assert errors and "no common graphs" in errors[0]
+
+
+def test_gate_tolerates_overflow_surcharge():
+    """Overflow replays legitimately add bounded RTs; the gate must not
+    flag an environment-dependent overflow as a regression."""
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    g = fresh["graphs"][0]
+    g["cd_phase_round_trips"]["graph"]["overflow_fallbacks"] = 1
+    g["derived"]["cd_rt_graph_total"] = (
+        g["derived"]["cd_rt_graph_total"] + bench_gate.OVF_RT_SURCHARGE)
+    assert bench_gate.gate(fresh, base, rel_tol=0.10) == []
+
+
+def test_gate_cli_roundtrip(tmp_path):
+    """End-to-end through main(): exit 0 on shipped numbers, exit 1 on
+    the seeded round-trip regression."""
+    base = _baseline()
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(base))
+    assert bench_gate.main(["--fresh", str(good)]) == 0
+
+    bad = copy.deepcopy(base)
+    bad["graphs"][0]["derived"]["cd_rt_graph_total"] = 99
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(bad))
+    assert bench_gate.main(["--fresh", str(bad_p)]) == 1

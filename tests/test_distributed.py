@@ -362,6 +362,8 @@ for name, g in (("powerlaw", powerlaw_bipartite(300, 150, 2400, seed=11)),
             theta=np.round(th).astype(int).tolist(),
             rt_cd=rt_cd, num_subsets=stats.num_subsets,
             overflow=stats.overflow_fallbacks, rho_cd=stats.rho_cd,
+            wedges_cd=stats.wedges_cd,
+            dgm_device=stats.dgm_device_compactions,
         )
     out[name] = res
 print(json.dumps(out))
@@ -370,9 +372,11 @@ print(json.dumps(out))
 
 @pytest.mark.slow
 def test_cd_single_dispatch_equals_subset_sync_subprocess():
-    """ISSUE 3 tentpole equivalence (fresh interpreter): whole-graph
-    single-dispatch CD == the PR-2 per-subset-sync CD on the final tip
-    numbers, with O(1) host round trips instead of O(subsets)."""
+    """ISSUE 3/4 tentpole equivalence (fresh interpreter): whole-graph
+    single-dispatch CD == the per-subset-sync DGM CD on the final tip
+    numbers (bit-identical), with O(1) host round trips instead of
+    O(subsets) AND — with the on-device DGM — a traversed-wedge count
+    within 10% of the per-subset DGM driver's."""
     out = _run(SCRIPT_CD_GRAPH_DISPATCH)
     for name, res in out.items():
         assert res["graph"]["theta"] == res["subset"]["theta"], name
@@ -381,6 +385,10 @@ def test_cd_single_dispatch_equals_subset_sync_subprocess():
         # the subset driver syncs at least once per subset
         assert res["subset"]["rt_cd"] >= res["subset"]["num_subsets"]
         assert g["rt_cd"] < res["subset"]["rt_cd"], name
+        # on-device DGM ran, and closes the wedge gap vs host DGM
+        assert g["dgm_device"] == g["num_subsets"], name
+        assert g["wedges_cd"] <= res["subset"]["wedges_cd"] * 1.10, (
+            name, g["wedges_cd"], res["subset"]["wedges_cd"])
 
 
 SCRIPT_MOE_SHARDED = r"""

@@ -306,12 +306,43 @@ def test_parb_device_loop_sweep_cap_reenters():
                                   "empty_edges", "single_bfly"])
 def test_cd_graph_dispatch_matches_oracle(case):
     """Whole-graph CD (findHi on device, ONE dispatch for all subsets)
-    must stay exact end to end."""
+    must stay exact end to end — with the on-device DGM compacting the
+    residual graph at every subset boundary."""
     g = GRAPH_CASES[case]()
     tb, _ = bup_oracle(g)
     tr, stats = tip_decompose(g, _cfg(cd_dispatch="graph"))
     np.testing.assert_array_equal(tb, tr)
-    assert stats.dgm_compactions == 0          # no host compaction by design
+    assert stats.dgm_compactions == 0          # no HOST compaction by design
+    # on-device DGM runs at every closed subset boundary instead
+    assert stats.dgm_device_compactions == stats.num_subsets
+
+
+@pytest.mark.parametrize("case", ["er_small", "powerlaw", "vhub"])
+def test_cd_graph_dispatch_dgm_off_still_exact(case):
+    """use_dgm=False disables the on-device compaction branch entirely;
+    supports are permutation-invariant, so theta must not move."""
+    g = GRAPH_CASES[case]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(g, _cfg(cd_dispatch="graph", use_dgm=False))
+    np.testing.assert_array_equal(tb, tr)
+    assert stats.dgm_device_compactions == 0
+
+
+def test_cd_graph_dgm_wedges_match_subset_driver():
+    """The point of on-device DGM: the graph dispatch's traversed-wedge
+    count (and HUC behavior, via the re-estimated c_rcnt) lands within
+    10% of the per-subset DGM driver's — it no longer pays the
+    whole-graph HUC bound for the entire run."""
+    from repro.core.receipt import RunStats, receipt_cd
+
+    g = GRAPH_CASES["vhub"]()
+    res = {}
+    for disp in ("subset", "graph"):
+        stats = RunStats()
+        receipt_cd(g, _cfg(num_partitions=16, cd_dispatch=disp), stats)
+        res[disp] = stats
+    assert res["graph"].wedges_cd <= res["subset"].wedges_cd * 1.10
+    assert res["graph"].huc_recounts >= res["subset"].huc_recounts
 
 
 def test_cd_graph_dispatch_o1_round_trips():
@@ -360,6 +391,40 @@ def test_cd_graph_dispatch_init_support_vector():
         geq = subset_id >= i
         for u in np.where(subset_id == i)[0]:
             assert init_sup[u] == b2[u][geq].sum(), (u, i)
+
+
+# --------------------------------------------------------------------- #
+# graph-dispatch overflow replay under the DGM column permutation
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("case", ["powerlaw", "vhub"])
+def test_cd_graph_overflow_replay_on_permuted_matrix(case):
+    """A deliberately tiny peel buffer forces host_sweep re-entries AFTER
+    on-device DGM boundaries have column-permuted the carried matrix —
+    the replay must run against the carried graph (via _GraphStateView),
+    not the stale construction-time DeviceGraph.  Exactness end to end
+    proves the permutation-aware fold-back."""
+    g = GRAPH_CASES[case]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(g, _cfg(cd_dispatch="graph", peel_width=8))
+    np.testing.assert_array_equal(tb, tr)
+    assert stats.overflow_fallbacks > 0        # the replay path actually ran
+    assert stats.dgm_device_compactions > 0    # ... against a permuted matrix
+
+
+@pytest.mark.slow
+def test_cd_graph_overflow_replay_sparse_backend():
+    """Same forced-overflow replay through the block-sparse staircase
+    backend: the carried row_ext/kmax (re-tightened on device at every
+    boundary) must stay consistent with the permuted matrix the replay's
+    gathered-B kernel dispatch consumes."""
+    g = GRAPH_CASES["powerlaw"]()
+    tb, _ = bup_oracle(g)
+    tr, stats = tip_decompose(
+        g, _cfg(cd_dispatch="graph", peel_width=8,
+                backend="interpret_sparse", kernel_blocks=(8, 8, 16)))
+    np.testing.assert_array_equal(tb, tr)
+    assert stats.overflow_fallbacks > 0
+    assert stats.dgm_device_compactions > 0
 
 
 def test_cd_dispatch_and_valve_validation():
