@@ -50,10 +50,12 @@ def _load_gate_constants():
     spec = importlib.util.spec_from_file_location("bench_gate", path)
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
-    return mod.OVF_RT_SURCHARGE, mod.WEDGE_RATIO_TOL
+    return (mod.OVF_RT_SURCHARGE, mod.WEDGE_RATIO_TOL,
+            mod.MAP_DISPATCH_MIN_REDUCTION, mod.MAP_HIT_RATE_MIN)
 
 
-OVF_RT_SURCHARGE, WEDGE_RATIO_TOL = _load_gate_constants()
+(OVF_RT_SURCHARGE, WEDGE_RATIO_TOL,
+ MAP_DISPATCH_MIN_REDUCTION, MAP_HIT_RATE_MIN) = _load_gate_constants()
 
 from repro.core.peeling import bup_oracle
 from repro.core.receipt import (
@@ -231,6 +233,74 @@ def bench_graph(name: str, n_u: int, n_v: int, m: int, *,
     return rec
 
 
+def bench_executor_map(*, n_graphs: int = 12, check: bool = True) -> dict:
+    """Multi-graph batched decomposition (PR 5): ``Executor.map`` over a
+    fleet of small cohort graphs vs a sequential per-graph
+    ``tip_decompose`` loop.  Reported: wall (cold = first map call incl.
+    tracing, warm = second fleet of the same shapes — pure cache hits),
+    device-dispatch counts (deterministic; gated by bench_gate.py) and
+    the warm cache hit rate."""
+    from repro.api import Executor
+    from repro.core.receipt import ReceiptConfig, tip_decompose
+
+    cfg = ReceiptConfig(num_partitions=4, backend="xla")
+    mk = lambda seed0: [interaction_graph(160, 96, 1100, seed=seed0 + s)
+                        for s in range(n_graphs)]
+    graphs = mk(100)
+
+    # sequential per-graph pipeline (the pre-PR-5 serving shape)
+    t0 = time.perf_counter()
+    seq = [tip_decompose(g, cfg) for g in graphs]
+    seq_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    seq = [tip_decompose(g, cfg) for g in graphs]
+    seq_warm = time.perf_counter() - t0
+    seq_dispatches = sum(s.device_loop_calls + s.host_round_trips
+                         for _, s in seq)
+
+    ex = Executor(cfg)
+    t0 = time.perf_counter()
+    tds = ex.map(graphs)
+    map_cold = time.perf_counter() - t0
+    rep_cold = dict(ex.last_map_report)
+    if check:
+        for (t_seq, _), td in zip(seq, tds):
+            assert (np.asarray(t_seq) == td.theta).all(), (
+                "Executor.map theta mismatch vs per-graph tip_decompose")
+    # warm: a SECOND fleet of the same bucketed shapes — executables and
+    # measured sizing come entirely out of the cache
+    t0 = time.perf_counter()
+    ex.map(mk(500))
+    map_warm = time.perf_counter() - t0
+    rep_warm = dict(ex.last_map_report)
+    hits = rep_warm["cache_hits"]
+    hit_rate = hits / max(hits + rep_warm["cache_misses"], 1)
+    map_dispatches = (rep_cold["device_loop_calls"]
+                      + rep_cold["counting_dispatches"]
+                      + rep_cold["host_round_trips"])
+    rec = {
+        "n_graphs": n_graphs,
+        "groups": rep_cold["groups"],
+        "chunks": rep_cold["chunks"],
+        "seq_wall_cold_s": seq_cold,
+        "seq_wall_warm_s": seq_warm,
+        "map_wall_cold_s": map_cold,
+        "map_wall_warm_s": map_warm,
+        "map_wall_speedup_warm": seq_warm / max(map_warm, 1e-9),
+        "seq_dispatches": seq_dispatches,
+        "map_dispatches": map_dispatches,
+        "dispatch_reduction": seq_dispatches / max(map_dispatches, 1),
+        "warm_cache_hit_rate": hit_rate,
+    }
+    print(f"[bench_receipt] executor_map: {n_graphs} graphs, "
+          f"{rec['chunks']} chunk(s): dispatches {seq_dispatches} -> "
+          f"{map_dispatches} ({rec['dispatch_reduction']:.1f}x fewer), "
+          f"wall warm {seq_warm:.2f}s -> {map_warm:.2f}s "
+          f"({rec['map_wall_speedup_warm']:.1f}x), warm hit rate "
+          f"{hit_rate:.0%}", flush=True)
+    return rec
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_receipt.json")
@@ -251,11 +321,15 @@ def main(argv=None) -> int:
             check=not args.no_check,
         ))
 
+    exec_map = bench_executor_map(
+        n_graphs=8 if args.quick else 12, check=not args.no_check)
+
     payload = {
         "benchmark": "receipt_peel_engine",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": "xla (CPU)",
         "graphs": results,
+        "executor_map": exec_map,
     }
     Path(args.out).write_text(json.dumps(payload, indent=2))
     print(f"[bench_receipt] wrote {args.out}")
@@ -267,7 +341,11 @@ def main(argv=None) -> int:
           # single-dispatch CD: O(1) RTs per graph (2 + a bounded
           # overflow surcharge), independent of the subset count
           and largest_cd["host_round_trips"]
-          <= 2 + OVF_RT_SURCHARGE * largest_cd["overflow_fallbacks"])
+          <= 2 + OVF_RT_SURCHARGE * largest_cd["overflow_fallbacks"]
+          # multi-graph batched decomposition: deterministic dispatch
+          # counts and a fully-cached warm fleet (the PR 5 acceptance)
+          and exec_map["dispatch_reduction"] >= MAP_DISPATCH_MIN_REDUCTION
+          and exec_map["warm_cache_hit_rate"] >= MAP_HIT_RATE_MIN)
     # on-device DGM: every benched graph must keep the O(1)-RT claim AND
     # land its traversed-wedge count within WEDGE_RATIO_TOL of the
     # per-subset host-DGM driver's (the ISSUE 4 acceptance gate)

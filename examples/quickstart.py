@@ -1,49 +1,91 @@
-"""Quickstart: tip-decompose a bipartite graph with RECEIPT.
+"""Quickstart: tip-decompose bipartite graphs through the repro.api
+plan/compile/execute layer.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's Fig.1 graph plus a synthetic power-law graph, runs
-RECEIPT, verifies against sequential bottom-up peeling, and prints the
-paper's evaluation metrics (wedges traversed, synchronization rounds).
+Stages (DESIGN.md §6):
+  1. ingest    — BipartiteGraph.from_edges / from_dense + EngineConfig
+  2. plan      — Planner.plan(graph): inspect shapes, kernel route,
+                 peel widths and memory BEFORE any device work
+  3. execute   — Executor.decompose / Executor.map (the cross-graph
+                 executable cache makes repeat shapes skip tracing)
+
+Verifies against sequential bottom-up peeling and prints the paper's
+evaluation metrics (wedges traversed, synchronization rounds).
+
+Set RECEIPT_SMOKE=1 (the CI examples smoke job) to shrink the synthetic
+graph sizes.
 """
+import os
 import sys
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro.api import EngineConfig, Executor, Planner
 from repro.core.graph import paper_fig1_graph, powerlaw_bipartite
 from repro.core.peeling import bup_oracle, parb_metrics
-from repro.core.receipt import ReceiptConfig, tip_decompose
+
+SMOKE = os.environ.get("RECEIPT_SMOKE", "0") == "1"
 
 
 def main():
-    # --- the paper's Fig.1 example -------------------------------------
-    g = paper_fig1_graph()
-    theta, stats = tip_decompose(
-        g, ReceiptConfig(num_partitions=2, kernel_blocks=(8, 8, 8), backend="xla")
-    )
-    print(f"Fig.1 graph tip numbers: {theta}   (u2,u3 form a 3-tip)")
+    # --- 1. ingest: the paper's Fig.1 example --------------------------
+    cfg = EngineConfig(num_partitions=2, kernel_blocks=(8, 8, 8),
+                       backend="xla")
+    ex = Executor(cfg)
+    td = ex.decompose(paper_fig1_graph())
+    print(f"Fig.1 graph tip numbers: {td.theta}   (u2,u3 form a 3-tip)")
+    sub, members, _ = td.subgraph_at(td.max_theta())
+    print(f"  densest tip ({td.max_theta()}-tip): U members {members}")
 
-    # --- a KONECT-style power-law graph --------------------------------
-    g = powerlaw_bipartite(2000, 1000, 16000, seed=0)
-    cfg = ReceiptConfig(num_partitions=32, kernel_blocks=(8, 8, 8), backend="xla")
-    theta, stats = tip_decompose(g, cfg)
+    # --- 2. plan: a KONECT-style power-law graph -----------------------
+    n_u, n_v, m = (400, 200, 3200) if SMOKE else (2000, 1000, 16000)
+    g = powerlaw_bipartite(n_u, n_v, m, seed=0)
+    cfg = EngineConfig(num_partitions=32, kernel_blocks=(8, 8, 8),
+                       backend="xla")
+    ex = Executor(cfg)
+    plan = ex.plan(g)
+    print("\n" + plan.describe())
+
+    # --- 3. execute (and verify against the BUP oracle) ----------------
+    td = ex.decompose(g, plan=plan)
+    theta, stats = td.theta, td.stats
     theta_bup, m_bup = bup_oracle(g)
     _, m_parb = parb_metrics(g)
     assert (theta == theta_bup).all(), "RECEIPT must match BUP exactly"
 
     print(f"\npower-law graph: |U|={g.n_u} |V|={g.n_v} m={g.m}")
-    print(f"  max tip number          : {theta.max()}")
+    print(f"  max tip number          : {td.max_theta()}")
     print(f"  subsets created (P)     : {stats.num_subsets}")
     print(f"  sync rounds  rho        : RECEIPT={stats.rho_cd}  "
           f"ParB={m_parb.rounds}  ({m_parb.rounds/stats.rho_cd:.1f}x fewer)")
     print(f"  wedges traversed        : RECEIPT={stats.wedges_total}  "
           f"BUP={m_bup.wedges_static + stats.wedges_pvbcnt}")
     print(f"  HUC recounts / DGM compactions / elided sweeps: "
-          f"{stats.huc_recounts} / {stats.dgm_compactions} / {stats.elided_sweeps}")
+          f"{stats.huc_recounts} / {stats.dgm_compactions} / "
+          f"{stats.elided_sweeps}")
+    print(f"  FD peel widths (probe)  : {stats.fd_peel_widths} "
+          f"(measured max levels {stats.fd_max_levels})")
     print(f"  time: count={stats.time_count:.2f}s cd={stats.time_cd:.2f}s "
           f"fd={stats.time_fd:.2f}s")
+
+    # --- the executable cache: same bucketed shape, zero retracing -----
+    g2 = powerlaw_bipartite(n_u, n_v, m, seed=1)
+    td2 = ex.decompose(g2)
+    tb2, _ = bup_oracle(g2)
+    assert (td2.theta == tb2).all()
+    print(f"\nsecond same-shape graph: cache {ex.cache_stats} "
+          f"(hit -> reused measured peel widths, no retracing)")
+
+    # --- legacy surface still works ------------------------------------
+    from repro.core.receipt import ReceiptConfig, tip_decompose
+
+    t_old, _ = tip_decompose(g, ReceiptConfig(
+        num_partitions=32, kernel_blocks=(8, 8, 8), backend="xla"))
+    assert (t_old == theta).all()
+    print("legacy tip_decompose wrapper: bit-identical ✓")
 
 
 if __name__ == "__main__":

@@ -48,6 +48,12 @@ OVF_RT_SURCHARGE = 6
 # on-device DGM acceptance: graph-dispatch traversed wedges within 10%
 # of the per-subset host-DGM driver's
 WEDGE_RATIO_TOL = 1.10
+# Executor.map acceptance (PR 5): the batched multi-graph path must
+# issue at LEAST this many times fewer device dispatches than the
+# sequential per-graph loop (deterministic counters, safe to hard-gate),
+# and a warm same-shape fleet must run fully out of the executable cache
+MAP_DISPATCH_MIN_REDUCTION = 4.0
+MAP_HIT_RATE_MIN = 0.99
 
 
 def _graphs_by_name(payload: dict) -> dict:
@@ -112,6 +118,25 @@ def gate(fresh: dict, baseline: dict, rel_tol: float) -> list:
                     continue
                 _check_rel(errors, name, f"cd[{disp}].{metric}",
                            fv, bv, rel_tol)
+
+    # --- Executor.map: batched multi-graph decomposition (PR 5) ------- #
+    f_map = fresh.get("executor_map")
+    if baseline.get("executor_map") is not None and f_map is None:
+        errors.append("executor_map section missing from the fresh run "
+                      "(the batched multi-graph bench stopped running)")
+    elif f_map is not None:
+        red = f_map.get("dispatch_reduction", 0.0)
+        if red < MAP_DISPATCH_MIN_REDUCTION:
+            errors.append(
+                f"executor_map: dispatch_reduction {red:.2f} < "
+                f"{MAP_DISPATCH_MIN_REDUCTION} — Executor.map lost its "
+                "batched-dispatch advantage over the per-graph loop")
+        hit = f_map.get("warm_cache_hit_rate", 0.0)
+        if hit < MAP_HIT_RATE_MIN:
+            errors.append(
+                f"executor_map: warm_cache_hit_rate {hit:.2f} < "
+                f"{MAP_HIT_RATE_MIN} — a warm same-shape fleet should "
+                "run fully out of the executable cache")
     return errors
 
 

@@ -5,9 +5,10 @@
 # Usage: scripts/ci.sh [quick|full] [extra pytest args]
 #   quick  (default) skip tests marked @pytest.mark.slow (-m "not slow")
 #          -- the per-push job; keeps the suite well under the runner
-#          timeout.  Also runs the quick engine bench and gates it
-#          against the checked-in BENCH_receipt.json derived metrics
-#          (scripts/bench_gate.py).
+#          timeout.  Also runs the examples smoke (both examples
+#          headless on the repro.api surface, RECEIPT_SMOKE=1) and the
+#          quick engine bench gated against the checked-in
+#          BENCH_receipt.json derived metrics (scripts/bench_gate.py).
 #   full   run everything, slow device-loop equivalence tests included
 #          -- the nightly job (and the tier-1 command:
 #          `PYTHONPATH=src python -m pytest -x -q` is equivalent)
@@ -72,6 +73,9 @@ if [ "$MODE" = "quick" ]; then
   python -m pytest --collect-only -q > /dev/null
   echo "== test suite (quick: -m 'not slow') =="
   python -m pytest -x -q -m "not slow" "$@"
+  echo "== examples smoke (headless, RECEIPT_SMOKE=1, new repro.api surface) =="
+  RECEIPT_SMOKE=1 python examples/quickstart.py
+  RECEIPT_SMOKE=1 python examples/recsys_tip_filtering.py
   echo "== engine bench (quick) + regression gate vs BENCH_receipt.json =="
   python benchmarks/bench_receipt.py --quick --out /tmp/bench_quick.json
   python scripts/bench_gate.py --fresh /tmp/bench_quick.json

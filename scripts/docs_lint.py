@@ -12,7 +12,10 @@ Checks (all cheap, no jax import needed beyond the module graph):
 3. DESIGN.md has the "Algorithm map" section, and every backticked
    dotted ``repro.*`` name it cites resolves under ``PYTHONPATH=src``
    (import the longest module prefix, getattr the rest) — so the
-   paper-to-code audit table can never silently rot.
+   paper-to-code audit table can never silently rot.  The same symbol
+   resolution runs over the "API layer" section (the ``repro.api``
+   plan/compile/execute surface, PR 5), which must cite at least the
+   core service-layer symbols.
 
 Exit code 0 on success; prints each failure and exits 1 otherwise.
 Run from the repo root: ``PYTHONPATH=src python scripts/docs_lint.py``.
@@ -77,26 +80,42 @@ def resolve_dotted(name: str):
     raise ImportError(f"no importable prefix of {name}")
 
 
-def check_algorithm_map(errors: list) -> None:
+# DESIGN.md sections whose backticked repro.* symbols must resolve, and
+# symbols each one is required to cite (prefix match) so a rename or a
+# dropped row fails loudly
+SYMBOL_SECTIONS = {
+    "## Algorithm map": ["repro."],
+    "## 6. API layer": [
+        "repro.api.EngineConfig",
+        "repro.api.Planner",
+        "repro.api.Executor",
+        "repro.api.TipDecomposition",
+    ],
+}
+
+
+def check_symbol_sections(errors: list) -> None:
     design = ROOT / "DESIGN.md"
     if not design.exists():
         return                                    # already reported
     text = design.read_text()
-    header = "## Algorithm map"
-    if header not in text:
-        errors.append(f"DESIGN.md: missing {header!r} section")
-        return
-    section = text.split(header, 1)[1].split("\n## ", 1)[0]
-    names = sorted(set(DOTTED_RE.findall(section)))
-    if not names:
-        errors.append("DESIGN.md Algorithm map cites no repro.* symbols")
-    for name in names:
-        try:
-            resolve_dotted(name)
-        except Exception as exc:                  # noqa: BLE001
-            errors.append(
-                f"DESIGN.md Algorithm map: {name} does not resolve "
-                f"({type(exc).__name__}: {exc})")
+    for header, required in SYMBOL_SECTIONS.items():
+        if header not in text:
+            errors.append(f"DESIGN.md: missing {header!r} section")
+            continue
+        section = text.split(header, 1)[1].split("\n## ", 1)[0]
+        names = sorted(set(DOTTED_RE.findall(section)))
+        for req in required:
+            if not any(n == req or n.startswith(req) for n in names):
+                errors.append(
+                    f"DESIGN.md {header!r}: must cite a `{req}`* symbol")
+        for name in names:
+            try:
+                resolve_dotted(name)
+            except Exception as exc:              # noqa: BLE001
+                errors.append(
+                    f"DESIGN.md {header!r}: {name} does not resolve "
+                    f"({type(exc).__name__}: {exc})")
 
 
 def main() -> int:
@@ -104,7 +123,7 @@ def main() -> int:
     errors: list = []
     check_anchors(errors)
     check_links(errors)
-    check_algorithm_map(errors)
+    check_symbol_sections(errors)
     if errors:
         for e in errors:
             print(f"DOCS LINT: {e}", file=sys.stderr)

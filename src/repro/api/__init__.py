@@ -1,0 +1,45 @@
+"""`repro.api` — the plan/compile/execute service layer (DESIGN.md §6).
+
+The public surface of the RECEIPT engine, redesigned around three
+stages (PR 5 tentpole):
+
+1. **Ingestion** — `repro.core.graph.BipartiteGraph.from_edges` /
+   ``from_dense`` build the validated graph substrate; ``EngineConfig``
+   (frozen, serializable, strictly validated) selects the peeled side,
+   dtype policy and every engine knob.
+2. **Planning** — ``Planner.plan(graph) -> ExecutionPlan`` surfaces the
+   statically schedulable structure RECEIPT is built on: CD dispatch
+   mode and partition budget, bucketed device shapes, kernel route,
+   peel-buffer widths, FD shape-group estimates, mesh shard counts and
+   a padded-bytes memory estimate — inspectable before any device work.
+3. **Execution** — ``Executor`` runs plans through a cross-graph
+   executable cache keyed by plan shape signature (repeat graphs of the
+   same bucketed shape skip tracing entirely) and batches fleets of
+   small graphs through shared dispatches (``Executor.map``).  Results
+   are ``TipDecomposition`` objects (tip numbers + ``RunStats`` +
+   hierarchy queries).
+
+One-shot convenience::
+
+    from repro.api import EngineConfig, decompose
+    td = decompose(g, EngineConfig(num_partitions=32, backend="xla"))
+    td.theta, td.max_theta(), td.subgraph_at(5)
+
+The legacy names (``repro.core.receipt.tip_decompose`` /
+``receipt_cd`` / ``receipt_fd`` / ``ReceiptConfig``) remain as thin
+compatibility wrappers over this layer.
+"""
+from __future__ import annotations
+
+from .config import EngineConfig
+from .executor import Executor, TipDecomposition, decompose
+from .plan import ExecutionPlan, Planner
+
+__all__ = [
+    "EngineConfig",
+    "ExecutionPlan",
+    "Planner",
+    "Executor",
+    "TipDecomposition",
+    "decompose",
+]

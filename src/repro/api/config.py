@@ -1,0 +1,153 @@
+"""`EngineConfig` — the frozen, serializable service-layer configuration.
+
+The engine's `ReceiptConfig` grew into a 20-knob kwarg sprawl whose
+validation was scattered across whichever driver read a knob first.
+`EngineConfig` is the planning/execution layer's replacement (DESIGN.md
+§6): a FROZEN dataclass validated completely at construction, with a
+strict ``to_dict``/``from_dict`` round trip so service configs survive
+JSON/YAML storage without silently dropping or inventing knobs.
+
+Two validation tiers:
+
+* the engine floor (shared with ``ReceiptConfig.__post_init__``):
+  value-range and enum checks every config object must clear;
+* the service layer's stricter cross-knob rules — combinations that run
+  but silently diverge from the benchmarked configuration
+  (``cd_dispatch="graph"`` with ``use_dgm=False`` pays the stale
+  whole-graph HUC bound the bench gates against) are rejected here with
+  an actionable message.  ``ReceiptConfig`` keeps permitting them for
+  A/B experiments (the dgm-off equivalence tests rely on that).
+
+``dtype`` is a STRING here (serializability); only ``"float32"`` is
+accepted — the engine's bit-exactness contract is the f32 integer
+regime (DESIGN.md §8), and a wider policy would silently break it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..core.engine.peel_loop import ReceiptConfig
+
+__all__ = ["EngineConfig"]
+
+_DTYPES = ("float32",)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen service-layer configuration (see module docstring).
+
+    Field semantics match ``ReceiptConfig`` (DESIGN.md §2.2 "Knobs")
+    plus ``side``: which vertex set to peel (``"V"`` transposes the
+    graph — exact by symmetry, the paper's Table 3 *V rows).
+    """
+
+    side: str = "U"
+    num_partitions: int = 8
+    backend: Optional[str] = None
+    kernel_blocks: Tuple[int, int, int] = (128, 128, 512)
+    use_huc: bool = True
+    use_dgm: bool = True
+    degree_sort: bool = True
+    dgm_row_threshold: float = 0.7
+    fd_mode: str = "level"
+    cd_dispatch: str = "subset"
+    dtype: str = "float32"
+    max_sweeps: int = 100_000
+    device_loop: bool = True
+    peel_width: Optional[int] = None
+    fd_overlap: bool = True
+    fd_update_mode: str = "auto"
+    fd_b2_cells: int = 1 << 24
+
+    def __post_init__(self):
+        # normalize sequence-typed fields (from_dict hands us lists)
+        object.__setattr__(self, "kernel_blocks",
+                           tuple(int(b) for b in self.kernel_blocks))
+        if self.side not in ("U", "V"):
+            raise ValueError(
+                f"side must be 'U' or 'V' (got {self.side!r}): tip "
+                "decomposition peels one vertex set; 'V' transposes")
+        if self.dtype not in _DTYPES:
+            raise ValueError(
+                f"dtype must be one of {_DTYPES} (got {self.dtype!r}): "
+                "the engine's exactness contract is the f32 integer "
+                "regime (DESIGN.md §8)")
+        # the engine floor: enum/range checks shared with ReceiptConfig
+        # (constructing one runs its __post_init__)
+        self.to_receipt_config()
+        # stricter service-layer cross-knob rules
+        if self.cd_dispatch == "graph" and not self.use_dgm:
+            raise ValueError(
+                "cd_dispatch='graph' with use_dgm=False pays the stale "
+                "whole-graph HUC recount bound for the entire run — the "
+                "configuration silently diverges from the benchmarked "
+                "wedge economics (BENCH_receipt.json "
+                "derived.cd_graph_wedge_ratio).  Enable use_dgm, or use "
+                "cd_dispatch='subset'; for A/B experiments construct a "
+                "raw ReceiptConfig instead.")
+        if self.fd_mode != "level" and not self.device_loop:
+            raise ValueError(
+                f"fd_mode={self.fd_mode!r} with device_loop=False mixes "
+                "the legacy sequential FD with the blocking host CD "
+                "engine — a comparator pairing the benchmarks never "
+                "measure.  Use fd_mode='level', or pin one comparator "
+                "through a raw ReceiptConfig.")
+
+    # ------------------------------------------------------------------ #
+    # conversions
+    # ------------------------------------------------------------------ #
+    def to_receipt_config(self) -> ReceiptConfig:
+        """The engine-layer view of this config (drops ``side``, maps the
+        dtype string to the jnp dtype)."""
+        kw = {f.name: getattr(self, f.name)
+              for f in dataclasses.fields(self)
+              if f.name not in ("side", "dtype")}
+        return ReceiptConfig(dtype=jnp.dtype(self.dtype).type, **kw)
+
+    @staticmethod
+    def from_receipt(cfg: ReceiptConfig, side: str = "U") -> "EngineConfig":
+        """Lift a legacy ``ReceiptConfig`` into the service layer.
+
+        Raises where the service layer is stricter (see class docstring);
+        the compat wrappers therefore bypass this and hand the raw
+        ``ReceiptConfig`` to the Planner/Executor directly.
+        """
+        kw = {f.name: getattr(cfg, f.name)
+              for f in dataclasses.fields(cfg) if f.name != "dtype"}
+        return EngineConfig(side=side, dtype=jnp.dtype(cfg.dtype).name, **kw)
+
+    # ------------------------------------------------------------------ #
+    # strict serialization round trip
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-able dict; ``from_dict`` round-trips it exactly."""
+        d = dataclasses.asdict(self)
+        d["kernel_blocks"] = list(self.kernel_blocks)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EngineConfig":
+        """Strict deserialization: unknown keys are REJECTED (with a
+        did-you-mean hint), never dropped — a typo'd service config must
+        fail loudly, not silently run defaults."""
+        if not isinstance(d, dict):
+            raise ValueError(
+                f"EngineConfig.from_dict expects a dict, got "
+                f"{type(d).__name__}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            hints = []
+            for k in unknown:
+                close = difflib.get_close_matches(k, known, n=1)
+                hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                         if close else ""))
+            raise ValueError(
+                f"EngineConfig.from_dict: unknown key(s) "
+                f"{', '.join(hints)}; known keys: {', '.join(sorted(known))}")
+        return cls(**d)

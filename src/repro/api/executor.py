@@ -1,0 +1,421 @@
+"""Execution stage: ``Executor`` (executable cache + multi-graph map)
+and the ``TipDecomposition`` result object.
+
+**The executable cache** (DESIGN.md §6).  Every device program in the
+engine is a module-level jit keyed on shapes and static arguments — but
+two of those static arguments used to depend on each graph's DATA (the
+CD peel-buffer width sized from the first-sweep snapshot, the FD stack
+shapes and gather widths sized per run), so decomposing a fleet of
+same-shaped graphs retraced the pipeline per graph.  The Executor keys
+a cache entry on ``ExecutionPlan.signature`` (bucketed matrix shape +
+full config) and feeds each run the PREVIOUS runs' measured sizing:
+peel widths pin to measured values, FD stack dims quantize up to
+previously compiled shapes.  Result: repeated graphs of the same
+bucketed shape run entirely out of the jit cache — zero retraces — and
+the graph-dispatch CD drops its sizing snapshot (one fewer blocking
+round trip per graph).
+
+**``Executor.map``** extends the FD shape-group machinery ACROSS
+graphs: a fleet of small bipartite graphs (the recsys
+millions-of-cohorts scenario, ``examples/recsys_tip_filtering.py``) is
+bucketed by padded shape (`core/scheduler.pack_by_shape`), LPT-chunked
+under a stack-cell budget (`core/scheduler.lpt_assign`), and each chunk
+is decomposed by ONE batched counting kernel + ONE
+`batched_level_loop` dispatch + ONE blocking fetch.  A whole-graph tip
+decomposition IS a level-peel from the initial supports with ``lo = 0``
+(the ParButterfly simultaneous-peel argument: every minimum-support
+vertex's tip number equals that support), so the batched path is exact
+— bit-identical to per-graph ``tip_decompose`` — while issuing a
+handful of dispatches instead of a full pipeline per graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import tip_decompose as _engine_tip_decompose
+from ..core.engine.peel_loop import (
+    ReceiptConfig,
+    RunStats,
+    batched_level_loop,
+    bucket,
+)
+from ..core.graph import BipartiteGraph
+from ..core.scheduler import lpt_assign, pack_by_shape
+from ..kernels import ops as kops
+from ..kernels.butterfly_sparse import batched_row_extents
+from .plan import ExecutionPlan, Planner
+
+__all__ = ["Executor", "TipDecomposition", "decompose"]
+
+
+# --------------------------------------------------------------------- #
+# result object
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class TipDecomposition:
+    """Result of one tip decomposition: tip numbers + run evidence +
+    hierarchy queries.
+
+    ``theta[i]`` is the tip number of vertex ``i`` of the PEELED side
+    (``side``); the k-tip hierarchy is nested, so ``subgraph_at(k)``
+    induces the maximal subgraph whose peeled-side vertices all sit in
+    butterfly density >= k (the paper's k-tip, §2).
+    """
+
+    graph: BipartiteGraph            # the ingested (un-transposed) graph
+    side: str
+    theta: np.ndarray                # int64[n_side]
+    stats: RunStats
+    plan: Optional[ExecutionPlan] = None
+
+    @property
+    def n(self) -> int:
+        return int(self.theta.size)
+
+    def vertex_tip(self, v: int) -> int:
+        """Tip number of one peeled-side vertex."""
+        if not 0 <= v < self.theta.size:
+            raise IndexError(
+                f"vertex {v} out of range for side {self.side!r} "
+                f"(n={self.theta.size})")
+        return int(self.theta[v])
+
+    def max_theta(self) -> int:
+        """The densest tip level present (0 for an empty side)."""
+        return int(self.theta.max()) if self.theta.size else 0
+
+    def subgraph_at(self, theta_min: float):
+        """The theta_min-tip: the subgraph induced on peeled-side
+        vertices with tip number >= ``theta_min`` (plus every V column
+        they still touch).
+
+        Returns ``(subgraph, members, v_ids)``: the induced
+        ``BipartiteGraph`` (U side compacted to ``members`` order), the
+        original peeled-side vertex ids, and the original other-side ids
+        of the compacted columns.
+        """
+        g = self.graph.transposed() if self.side == "V" else self.graph
+        members = np.where(self.theta >= theta_min)[0]
+        sub, v_ids = g.induced_on_u(members)
+        return sub, members, v_ids
+
+
+# --------------------------------------------------------------------- #
+# executable cache
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _CacheEntry:
+    runs: int = 0
+    cd_peel_width: Optional[int] = None
+    fd_level_widths: Dict[Tuple[int, int], int] = dataclasses.field(
+        default_factory=dict)
+    shape_floors: Dict[str, List[int]] = dataclasses.field(
+        default_factory=dict)
+
+
+class Executor:
+    """Holds compiled-pipeline reuse state for one configuration.
+
+    ``decompose(graph)`` plans (or takes a plan), seeds it from the
+    cache entry of its shape signature, runs the engine, and folds the
+    run's measurements back.  ``map(graphs)`` batches a fleet of small
+    graphs through shared dispatches (module docstring).  The same
+    Executor can serve any mix of graphs — entries are per signature.
+    """
+
+    def __init__(self, config=None, *, side: Optional[str] = None,
+                 mesh=None, map_stack_cells: int = 1 << 26):
+        self._planner = Planner(config, side=side)
+        self.mesh = mesh
+        self.map_stack_cells = int(map_stack_cells)
+        self._entries: Dict[Tuple, _CacheEntry] = {}
+        self._hits = 0
+        self._misses = 0
+        self.last_map_report: Optional[Dict] = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def config(self) -> ReceiptConfig:
+        """The engine-layer config this executor runs (legacy currency)."""
+        return self._planner.rcfg
+
+    @property
+    def side(self) -> str:
+        return self._planner.side
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        return dict(entries=len(self._entries), hits=self._hits,
+                    misses=self._misses)
+
+    def plan(self, graph: BipartiteGraph) -> ExecutionPlan:
+        return self._planner.plan(graph, mesh=self.mesh)
+
+    # ------------------------------------------------------------------ #
+    # single-graph plan/compile/execute
+    # ------------------------------------------------------------------ #
+    def decompose(self, graph: BipartiteGraph,
+                  plan: Optional[ExecutionPlan] = None) -> TipDecomposition:
+        """Full RECEIPT decomposition of one graph through the cache."""
+        if plan is None:
+            plan = self.plan(graph)
+        entry = self._seed(plan)
+        theta, stats = _engine_tip_decompose(
+            graph, self.config, side=self.side, mesh=self.mesh, plan=plan)
+        self._absorb(plan, entry)
+        return TipDecomposition(graph=graph, side=self.side, theta=theta,
+                                stats=stats, plan=plan)
+
+    def _seed(self, plan: ExecutionPlan) -> _CacheEntry:
+        entry = self._entries.get(plan.signature)
+        if entry is None:
+            self._misses += 1
+            entry = _CacheEntry()
+            self._entries[plan.signature] = entry
+        else:
+            self._hits += 1
+            plan.measured.cd_peel_width = entry.cd_peel_width
+            plan.measured.fd_level_widths = dict(entry.fd_level_widths)
+            plan.measured.shape_floors = {
+                k: list(v) for k, v in entry.shape_floors.items()}
+        plan.measured.runs = entry.runs
+        return entry
+
+    def _absorb(self, plan: ExecutionPlan, entry: _CacheEntry) -> None:
+        m = plan.measured
+        if m.cd_peel_width is not None:
+            entry.cd_peel_width = max(entry.cd_peel_width or 0,
+                                      m.cd_peel_width)
+        for shape, width in m.fd_level_widths.items():
+            entry.fd_level_widths[shape] = max(
+                entry.fd_level_widths.get(shape, 1), width)
+        for name, seen in m.observed_dims.items():
+            merged = set(entry.shape_floors.get(name, ())) | seen
+            entry.shape_floors[name] = sorted(merged)
+        entry.runs += 1
+        m.runs = entry.runs
+
+    # ------------------------------------------------------------------ #
+    # multi-graph batched decomposition
+    # ------------------------------------------------------------------ #
+    def map(self, graphs: Sequence[BipartiteGraph]) -> List[TipDecomposition]:
+        """Decompose a fleet of small graphs in a handful of batched
+        dispatches (module docstring).  Exact: bit-identical tip numbers
+        to per-graph ``decompose``/``tip_decompose``.
+
+        Per shape bucket (rows x wedge-capable cols, pow2-ish), graphs
+        are LPT-chunked under ``map_stack_cells`` and each chunk costs
+        one batched counting kernel, one batched level loop (re-entered
+        only on a ``max_sweeps`` cap-exit) and ONE blocking fetch.
+        ``last_map_report`` records the dispatch accounting the bench
+        and the acceptance tests compare against the sequential path.
+        """
+        cfg = self.config
+        if cfg.fd_mode != "level":
+            raise ValueError(
+                "Executor.map batches graphs through the level-peel "
+                f"loop; set fd_mode='level' (got {cfg.fd_mode!r})")
+        if self.mesh is not None:
+            raise ValueError(
+                "Executor.map runs single-device; sharding map chunks "
+                "over a mesh is not implemented (ROADMAP deferred item). "
+                "Use Executor.decompose(graph) for mesh execution, or "
+                "build the executor without a mesh.")
+        t0 = time.perf_counter()
+        backend = kops.resolve_backend(cfg.backend)
+        blocks = cfg.kernel_blocks
+        tasks = [self._map_task(i, g) for i, g in enumerate(graphs)]
+        results: List[Optional[TipDecomposition]] = [None] * len(tasks)
+        report = dict(n_graphs=len(tasks), groups=0, chunks=0,
+                      counting_dispatches=0, device_loop_calls=0,
+                      host_round_trips=0, cache_hits=0, cache_misses=0,
+                      backend=backend, wall_s=0.0)
+
+        groups = pack_by_shape(
+            [t for t in tasks if t is not None],
+            size_of=lambda t: (t["rows_pad"], t["cols_pad"]),
+            weight_of=lambda t: t["wedges"],
+            bucket=lambda n: n,        # tasks carry pre-bucketed shapes
+        )
+        report["groups"] = len(groups)
+        for group in groups:
+            mm, cc = group[0]["rows_pad"], group[0]["cols_pad"]
+            # LPT-chunk the group under the stack-cell budget: balanced
+            # chunks (by wedge mass), each one batched dispatch.  The
+            # fit count rounds DOWN to a power of two so the padded
+            # group dim (bucket(g, 1) in _map_chunk) never exceeds the
+            # budget the caller sized to device memory.
+            per_graph = mm * cc
+            n_fit = max(int(self.map_stack_cells // max(per_graph, 1)), 1)
+            n_fit = 1 << (n_fit.bit_length() - 1)
+            n_chunks = max(-(-len(group) // n_fit), 1)
+            chunks = lpt_assign([t["wedges"] for t in group], n_chunks)
+            for chunk_idx in chunks:
+                # LPT balances wedge mass, not counts — slice any chunk
+                # that still exceeds the fit count so the padded stack
+                # never overruns the budget
+                for lo_i in range(0, len(chunk_idx), n_fit):
+                    part = chunk_idx[lo_i:lo_i + n_fit]
+                    self._map_chunk([group[i] for i in part], mm, cc,
+                                    backend, blocks, results, report)
+        report["wall_s"] = time.perf_counter() - t0
+        self.last_map_report = report
+        return [r for r in results if r is not None]
+
+    # ------------------------------------------------------------------ #
+    def _map_task(self, idx: int, graph: BipartiteGraph) -> Dict:
+        """Ingest one graph of the fleet: side selection, degree-sort
+        relabeling (tile density, exactly as `engine.tip_decompose`),
+        wedge-capable column compaction, bucketed shape."""
+        cfg = self.config
+        if not isinstance(graph, BipartiteGraph):
+            raise ValueError(
+                f"Executor.map expects BipartiteGraphs, got "
+                f"{type(graph).__name__} at index {idx}")
+        g = graph.transposed() if self.side == "V" else graph
+        if cfg.degree_sort:
+            perm_u = np.argsort(-g.degrees_u(), kind="stable")
+            perm_v = np.argsort(-g.degrees_v(), kind="stable")
+            inv_u = np.empty_like(perm_u)
+            inv_u[perm_u] = np.arange(g.n_u)
+            inv_v = np.empty_like(perm_v)
+            inv_v[perm_v] = np.arange(g.n_v)
+            g_work = BipartiteGraph.from_edges(
+                g.n_u, g.n_v, inv_u[g.edges_u], inv_v[g.edges_v])
+        else:
+            perm_u = np.arange(g.n_u)
+            g_work = g
+        # drop V columns that cannot center a wedge (the DGM compaction)
+        sub, _ = g_work.induced_on_u(np.arange(g_work.n_u), min_degree_v=2)
+        bi, bj, bk = cfg.kernel_blocks
+        backend = kops.resolve_backend(cfg.backend)
+        row_align = 8 if backend == "xla" else max(bi, bj)
+        col_align = 8 if backend == "xla" else bk
+        return dict(
+            idx=idx, graph=graph, n_u=g.n_u, perm_u=perm_u, sub=sub,
+            rows_pad=bucket(max(g.n_u, 1), row_align),
+            cols_pad=bucket(max(sub.n_v, 1), col_align),
+            wedges=float(sub.wedge_counts_u().sum()),
+        )
+
+    def _map_chunk(self, chunk: List[Dict], mm: int, cc: int, backend: str,
+                   blocks, results: List, report: Dict) -> None:
+        """Decompose one stacked chunk: batched counting + batched level
+        peel + one fetch."""
+        cfg = self.config
+        sparse = backend in kops.SPARSE_BACKENDS
+        g_real = len(chunk)
+        g_pad = bucket(g_real, 1)               # pow2 group dim: stable
+        #                                       # stack shapes across calls
+        sig = ("map", g_pad, mm, cc, backend, tuple(blocks),
+               cfg.fd_update_mode, cfg.max_sweeps)
+        if sig in self._entries:
+            self._hits += 1
+            report["cache_hits"] += 1
+        else:
+            self._misses += 1
+            report["cache_misses"] += 1
+            self._entries[sig] = _CacheEntry()
+        self._entries[sig].runs += 1
+
+        a = np.zeros((g_pad, mm, cc), np.float32)
+        nmem = np.zeros(g_pad, np.int32)
+        for k, t in enumerate(chunk):
+            s = t["sub"]
+            a[k, s.edges_u, s.edges_v] = 1.0
+            nmem[k] = t["n_u"]
+        alive0 = np.arange(mm)[None, :] < nmem[:, None]
+        dv0 = a.sum(axis=1)
+
+        a_dev = jnp.asarray(a)
+        alive_dev = jnp.asarray(alive0)
+        ids = jnp.broadcast_to(
+            jnp.arange(mm, dtype=jnp.int32)[None, :], (g_pad, mm))
+        if sparse:
+            rext = batched_row_extents(a, blocks[2])
+            kma = rext.reshape(g_pad, -1, blocks[0]).max(axis=2)
+            kma = jnp.asarray(kma.astype(np.int32))
+            rext_dev = jnp.asarray(rext)
+        else:
+            kma = None
+            rext_dev = jnp.zeros((g_pad, mm), jnp.int32)
+        # batched per-vertex counting: one kernel call for the chunk
+        sup0 = kops.butterfly_update_batched(
+            a_dev, a_dev, alive_dev.astype(a_dev.dtype), ids, ids,
+            backend=backend, blocks=blocks, kmax_a=kma, kmax_b=kma)
+        report["counting_dispatches"] += 1
+        sup0 = jnp.where(alive_dev, sup0, jnp.inf)
+        if cfg.fd_update_mode == "auto":
+            update_mode = ("b2" if g_pad * mm * mm <= cfg.fd_b2_cells
+                           else "kernel")
+        else:
+            update_mode = cfg.fd_update_mode
+        lo = jnp.zeros(g_pad, jnp.float32)
+
+        # whole-graph level peel (lo=0 == the exact ParB schedule);
+        # peel_width=mm selects the mask form statically — small-graph
+        # stacks are flop-cheap, so no gather machinery is needed
+        out = batched_level_loop(
+            a_dev, rext_dev, sup0, alive_dev, jnp.asarray(dv0), lo,
+            backend=backend, blocks=blocks, peel_width=mm,
+            max_sweeps=cfg.max_sweeps, update_mode=update_mode)
+        report["device_loop_calls"] += 1
+        # drain with cap-exit re-entry (theta/rho/wedges accumulate per
+        # invocation, exactly like the FD group drain)
+        th_acc = np.zeros((g_pad, mm), np.float64)
+        rho_acc = np.zeros(g_pad, np.int64)
+        wedges_acc = np.zeros(g_pad, np.float64)
+        prev_alive = alive0
+        while True:
+            sup, alive, dv, th, rho, wedges, _maxlev, _sweeps = out
+            th_h, alive_h, rho_h, wedges_h = jax.device_get(
+                (th, alive, rho, wedges))
+            report["host_round_trips"] += 1
+            alive_h = np.asarray(alive_h)
+            newly_dead = prev_alive & ~alive_h
+            th_acc = np.where(newly_dead, np.asarray(th_h, np.float64),
+                              th_acc)
+            rho_acc += np.asarray(rho_h, np.int64)
+            wedges_acc += np.asarray(wedges_h, np.float64)
+            if not alive_h.any() or int(np.asarray(rho_h).sum()) == 0:
+                break
+            prev_alive = alive_h
+            out = batched_level_loop(                  # cap-exit re-entry
+                a_dev, rext_dev, sup, alive, dv, lo,
+                backend=backend, blocks=blocks, peel_width=mm,
+                max_sweeps=cfg.max_sweeps, update_mode=update_mode)
+            report["device_loop_calls"] += 1
+        report["chunks"] += 1
+
+        for k, t in enumerate(chunk):
+            theta = np.zeros(t["n_u"], np.int64)
+            theta[t["perm_u"]] = np.round(th_acc[k, : t["n_u"]]).astype(
+                np.int64)
+            stats = RunStats()
+            stats.rho_fd = int(rho_acc[k])
+            stats.wedges_fd = int(wedges_acc[k])
+            stats.wedges_pvbcnt = t["graph"].counting_wedge_bound()
+            results[t["idx"]] = TipDecomposition(
+                graph=t["graph"], side=self.side, theta=theta, stats=stats)
+
+
+# --------------------------------------------------------------------- #
+# one-shot convenience (the compat wrappers' entry point)
+# --------------------------------------------------------------------- #
+def decompose(graph: BipartiteGraph, config=None, *,
+              side: Optional[str] = None, mesh=None,
+              plan: Optional[ExecutionPlan] = None) -> TipDecomposition:
+    """Plan + execute one decomposition on a fresh Executor.
+
+    ``config`` may be an ``EngineConfig``, a legacy ``ReceiptConfig``
+    (the compat wrappers' currency) or None.  A fresh Executor means no
+    cross-call measured-sizing reuse — byte-for-byte the legacy engine
+    behavior; hold an ``Executor`` to get the executable cache.
+    """
+    return Executor(config, side=side, mesh=mesh).decompose(graph, plan=plan)

@@ -1,0 +1,320 @@
+"""Planning stage: ``Planner.plan(graph, config) -> ExecutionPlan``.
+
+RECEIPT's whole point is that peeling has statically schedulable
+structure — subset wedge budgets, padded shape groups, LPT shards,
+kernel routes — but until PR 5 that structure was derived inside the
+engine and thrown away.  The plan surfaces it BEFORE execution:
+
+* what will run — CD dispatch mode and partition budget, FD mode and
+  update policy, the resolved kernel backend and its route label;
+* at what shapes — the bucketed device-matrix shape (``rows_pad`` x
+  ``cols_pad``; the jit cache key's shape component), the initial CD
+  peel-buffer width, and a wedge-equipartition ESTIMATE of the FD shape
+  groups and their padding waste (the exact groups depend on the CD
+  result; estimates are labeled as such and refined by execution);
+* at what cost — a padded-bytes device-memory estimate;
+* where — the mesh shard count when an executor holds a mesh.
+
+``ExecutionPlan.signature`` is the executable-cache key (DESIGN.md §6):
+two graphs with the same bucketed shape and the same config share every
+traced executable, so the Executor reuses their compilations and their
+MEASURED sizing (peel-buffer widths, stack shape floors) — the
+``measured`` slot is the mutable feedback channel the engine writes
+back through (`engine/cd.py` / `engine/fd.py` ``plan=`` kwarg).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.engine.peel_loop import ReceiptConfig, bucket
+from ..core.graph import BipartiteGraph
+from ..kernels import ops as kops
+from .config import EngineConfig
+
+__all__ = ["ExecutionPlan", "PlanMeasurements", "Planner"]
+
+
+@dataclasses.dataclass
+class PlanMeasurements:
+    """Execution feedback attached to a plan (and folded into the
+    executor's cache entry for the plan's signature).
+
+    ``cd_peel_width`` — the CD gather-buffer width the run ended with
+    (first-sweep sizing + overflow doublings); reused by the next
+    same-signature run so the width stops depending on that graph's
+    data (the jit-static argument stabilizes -> no retrace) and the
+    graph dispatch skips its sizing snapshot.
+
+    ``fd_level_widths`` — per stacked-shape ``(mm, cc)``: the largest
+    peel level the batched loop measured (`batched_level_loop`'s
+    ``max_level``), replacing the first-sweep probe on repeat runs.
+
+    ``shape_floors`` — per stack dimension: sorted shape values earlier
+    runs compiled; ``quantize_dim`` pads new stacks up to the nearest
+    one so the FD dispatch sequence is shape-stable across graphs.
+    """
+
+    cd_peel_width: Optional[int] = None
+    fd_level_widths: Dict[Tuple[int, int], int] = dataclasses.field(
+        default_factory=dict)
+    shape_floors: Dict[str, List[int]] = dataclasses.field(
+        default_factory=dict)
+    observed_dims: Dict[str, set] = dataclasses.field(default_factory=dict)
+    runs: int = 0
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """What a decomposition WILL do, inspectable before it runs.
+
+    Static fields describe the ingested graph and the derived dispatch
+    structure; ``est_*`` fields are pre-execution estimates (labeled —
+    the exact FD groups depend on the CD result); ``measured`` carries
+    execution feedback (see ``PlanMeasurements``).
+    """
+
+    signature: Tuple                 # executable-cache key (hashable)
+    side: str
+    n_u: int                         # peeled side (post side-selection)
+    n_v: int
+    m: int
+    backend: str                     # resolved (never None)
+    kernel_route: str                # human-readable route label
+    kernel_blocks: Tuple[int, int, int]
+    cd_dispatch: str
+    num_partitions: int
+    rows_pad: int                    # bucketed device-matrix shape —
+    cols_pad: int                    # the shape half of the signature
+    cd_peel_width0: int              # initial CD gather-buffer width
+    cd_host_syncs_bound: int         # O(1) bound for the graph dispatch,
+    #                                # O(P) for the subset dispatch
+    fd_mode: str
+    fd_update_policy: str            # "auto" | "b2" | "kernel"
+    est_fd_groups: List[Dict[str, int]]   # wedge-equipartition ESTIMATE
+    est_fd_padding_waste: float
+    mesh_shards: int                 # 0 = single device
+    degree_sort: bool
+    device_loop: bool
+    padded_bytes: int                # device-memory estimate
+    measured: PlanMeasurements = dataclasses.field(
+        default_factory=PlanMeasurements)
+
+    # ------------------------------------------------------------------ #
+    # engine feedback surface (consumed by engine/cd.py and engine/fd.py)
+    # ------------------------------------------------------------------ #
+    def cd_peel_width_hint(self) -> Optional[int]:
+        return self.measured.cd_peel_width
+
+    def note_cd_peel_width(self, width: int) -> None:
+        cur = self.measured.cd_peel_width or 0
+        self.measured.cd_peel_width = max(cur, int(width))
+
+    def fd_width_hint(self, shape: Tuple[int, int]) -> Optional[int]:
+        return self.measured.fd_level_widths.get(tuple(shape))
+
+    def note_fd_level(self, shape: Tuple[int, int], level: int,
+                      width_used: int) -> None:
+        """Record the gather width to reuse at this stack shape: the
+        width this run TRACED when it sufficed (so the next run reuses
+        the compiled program bit-for-bit), the measured level when the
+        mask-form fallback fired (so the next run's buffer grows to
+        what the data actually needed)."""
+        shape = tuple(shape)
+        level, width_used = int(level), int(width_used)
+        want = width_used if level <= width_used else level
+        cur = self.measured.fd_level_widths.get(shape, 1)
+        self.measured.fd_level_widths[shape] = max(cur, want, 1)
+
+    def quantize_dim(self, name: str, value: int) -> int:
+        """Pad a stack dimension up to the nearest shape an earlier
+        same-signature run compiled (shape floors are seeded from the
+        executor cache; within a cold run they are empty, so behavior is
+        identical to the self-sized engine).  The value actually used is
+        recorded so the executor can fold it back into the cache."""
+        floors = self.measured.shape_floors.get(name, ())
+        fits = [v for v in floors if v >= value]
+        out = min(fits) if fits else int(value)
+        self.measured.observed_dims.setdefault(name, set()).add(out)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # inspection
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["signature"] = list(map(str, self.signature))
+        d["measured"] = {
+            "cd_peel_width": self.measured.cd_peel_width,
+            "fd_level_widths": {f"{k[0]}x{k[1]}": v for k, v in
+                                self.measured.fd_level_widths.items()},
+            "runs": self.measured.runs,
+        }
+        return d
+
+    def describe(self) -> str:
+        """Terse human-readable plan summary."""
+        est = ", ".join(
+            f"{g['count']}x({g['rows']}x{g['cols']})"
+            for g in self.est_fd_groups) or "none"
+        return (
+            f"ExecutionPlan[{self.side}]: |U|={self.n_u} |V|={self.n_v} "
+            f"m={self.m}\n"
+            f"  device matrix : {self.rows_pad} x {self.cols_pad} "
+            f"(~{self.padded_bytes / 2**20:.1f} MiB padded)\n"
+            f"  kernel route  : {self.kernel_route}, blocks="
+            f"{self.kernel_blocks}\n"
+            f"  CD            : dispatch={self.cd_dispatch!r}, "
+            f"P={self.num_partitions}, peel_width0={self.cd_peel_width0}, "
+            f"host syncs <= {self.cd_host_syncs_bound}\n"
+            f"  FD            : mode={self.fd_mode!r}, "
+            f"update={self.fd_update_policy!r}, est groups: {est} "
+            f"(est padding waste {self.est_fd_padding_waste:.0%})\n"
+            f"  mesh shards   : {self.mesh_shards or 'single-device'}\n"
+            f"  measured      : cd_peel_width="
+            f"{self.measured.cd_peel_width}, "
+            f"{len(self.measured.fd_level_widths)} FD width(s), "
+            f"runs={self.measured.runs}"
+        )
+
+
+class Planner:
+    """Derives an ``ExecutionPlan`` from (graph, config) — pure host
+    preprocessing, no device work, no jax tracing.
+
+    Accepts an ``EngineConfig`` (the strict service surface) or a legacy
+    ``ReceiptConfig`` + ``side`` (the compat wrappers' currency — kept
+    permissive so A/B configurations the service layer rejects still
+    plan and run).
+    """
+
+    def __init__(self, config=None, *, side: Optional[str] = None):
+        if config is None:
+            config = EngineConfig() if side is None else EngineConfig(
+                side=side)
+        if isinstance(config, EngineConfig):
+            if side is not None and side != config.side:
+                config = dataclasses.replace(config, side=side)
+            self.config = config
+            self.rcfg = config.to_receipt_config()
+            self.side = config.side
+        elif isinstance(config, ReceiptConfig):
+            self.config = None          # legacy currency: no strict view
+            self.rcfg = config
+            self.side = side or "U"
+        else:
+            raise ValueError(
+                f"Planner expects an EngineConfig or ReceiptConfig, got "
+                f"{type(config).__name__}")
+        if self.side not in ("U", "V"):
+            raise ValueError(f"side must be 'U' or 'V', got {self.side!r}")
+
+    # ------------------------------------------------------------------ #
+    def plan(self, graph: BipartiteGraph, *, mesh=None) -> ExecutionPlan:
+        if not isinstance(graph, BipartiteGraph):
+            raise ValueError(
+                f"Planner.plan expects a BipartiteGraph (got "
+                f"{type(graph).__name__}); ingest edge lists with "
+                "BipartiteGraph.from_edges or dense 0/1 matrices with "
+                "BipartiteGraph.from_dense")
+        cfg = self.rcfg
+        g = graph.transposed() if self.side == "V" else graph
+        backend = kops.resolve_backend(cfg.backend)
+        bi, bj, bk = cfg.kernel_blocks
+
+        # --- ingestion-derived shapes (the DeviceGraph bucket math) ---- #
+        dv = g.degrees_v()
+        n_cols = max(int((dv >= 2).sum()), 1)   # wedge-capable V columns
+        rows_pad = bucket(max(g.n_u, 1), max(bi, bj))
+        cols_pad = bucket(n_cols, bk)
+        if cfg.peel_width is not None:
+            width0 = min(bucket(cfg.peel_width, bj), rows_pad)
+        else:
+            width0 = min(bucket(max(bj, rows_pad // 4), bj), rows_pad)
+
+        # --- FD shape-group estimate (wedge-mass equipartition) -------- #
+        est_groups, est_waste = self._estimate_fd_groups(g, cfg, backend)
+
+        # --- memory estimate ------------------------------------------- #
+        itemsize = 4                                    # f32 regime
+        stack_cells = sum(g_["count"] * g_["rows"] * g_["cols"]
+                          for g_ in est_groups)
+        padded_bytes = itemsize * (
+            rows_pad * cols_pad                         # CD biadjacency
+            + width0 * cols_pad                         # CD peel buffer
+            + stack_cells                               # FD stacks (est)
+        )
+
+        mesh_shards = int(mesh.size) if mesh is not None else 0
+        cfg_items = tuple(sorted(
+            (f.name, _freeze(getattr(cfg, f.name)))
+            for f in dataclasses.fields(cfg)))
+        signature = (rows_pad, cols_pad, self.side, backend, mesh_shards,
+                     cfg_items)
+        return ExecutionPlan(
+            signature=signature,
+            side=self.side, n_u=g.n_u, n_v=g.n_v, m=g.m,
+            backend=backend, kernel_route=kops.route_label(backend),
+            kernel_blocks=tuple(cfg.kernel_blocks),
+            cd_dispatch=cfg.cd_dispatch,
+            num_partitions=cfg.num_partitions,
+            rows_pad=rows_pad, cols_pad=cols_pad,
+            cd_peel_width0=width0,
+            cd_host_syncs_bound=(2 if cfg.cd_dispatch == "graph"
+                                 else cfg.num_partitions + 1),
+            fd_mode=cfg.fd_mode, fd_update_policy=cfg.fd_update_mode,
+            est_fd_groups=est_groups, est_fd_padding_waste=est_waste,
+            mesh_shards=mesh_shards,
+            degree_sort=cfg.degree_sort, device_loop=cfg.device_loop,
+            padded_bytes=padded_bytes,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _estimate_fd_groups(self, g: BipartiteGraph, cfg: ReceiptConfig,
+                            backend: str):
+        """Wedge-equipartition ESTIMATE of the FD shape groups.
+
+        CD partitions residual wedge mass roughly evenly over P subsets,
+        and vertices peel roughly in wedge-count order — so sorting U by
+        static wedge count and cutting the cumulative mass at W/P
+        boundaries predicts the subset MEMBER COUNTS, which bucket into
+        predicted stack shapes.  This is a planning estimate (the real
+        groups depend on supports, HUC and the pre-peel); the bench
+        shows it lands within a bucket or two, which is all a capacity
+        estimate needs.
+        """
+        from ..core.engine.fd import _aligns, _level_pad
+
+        row_align, col_align, _ = _aligns(cfg, backend)
+        w = np.sort(g.wedge_counts_u().astype(np.float64))
+        total = float(w.sum())
+        p = max(cfg.num_partitions, 1)
+        if g.n_u == 0 or total <= 0:
+            return [], 0.0
+        cum = np.cumsum(w)
+        cuts = np.searchsorted(cum, total / p * np.arange(1, p + 1))
+        sizes = np.diff(np.concatenate([[0], np.minimum(cuts + 1, g.n_u)]))
+        sizes = sizes[sizes > 0]
+        cc = _level_pad(max(int((g.degrees_v() >= 2).sum()), 1), col_align)
+        shapes: Dict[Tuple[int, int], int] = {}
+        used = 0
+        for s in sizes:
+            mm = _level_pad(int(s), row_align)
+            shapes[(mm, cc)] = shapes.get((mm, cc), 0) + 1
+            used += int(s) * cc
+        groups = [dict(rows=k[0], cols=k[1], count=v)
+                  for k, v in sorted(shapes.items(), reverse=True)]
+        padded = sum(g_["count"] * g_["rows"] * g_["cols"] for g_ in groups)
+        waste = 1.0 - used / padded if padded else 0.0
+        return groups, waste
+
+
+def _freeze(v):
+    """Hashable view of a config field value (for the signature)."""
+    if isinstance(v, (list, tuple)):
+        return tuple(v)
+    if isinstance(v, type):
+        return v.__name__
+    return v

@@ -458,7 +458,8 @@ def fd_level_shardmap(mesh: Mesh, *, max_sweeps: int = 100_000,
         row_ext = jnp.zeros(a.shape[:2], jnp.int32)   # xla path ignores it
         pw = a.shape[1] if peel_width is None else min(peel_width,
                                                        a.shape[1])
-        sup2, alive2, dv2, theta, rho, wedges, _sweeps = batched_level_loop(
+        (sup2, alive2, dv2, theta, rho, wedges, _max_level,
+         _sweeps) = batched_level_loop(
             a, row_ext, sup, alive, dv, lo,
             backend="xla", blocks=(8, 8, 8),
             peel_width=pw, max_sweeps=max_sweeps,

@@ -55,7 +55,7 @@ __all__ = [
 
 def tip_decompose(
     g: BipartiteGraph, cfg: Optional[ReceiptConfig] = None,
-    *, side: str = "U", mesh=None,
+    *, side: str = "U", mesh=None, plan=None,
 ) -> Tuple[np.ndarray, RunStats]:
     """Full RECEIPT tip decomposition of one side of ``g``.
 
@@ -72,11 +72,16 @@ def tip_decompose(
     embarrassingly parallel stack).  Tip numbers are identical with and
     without a mesh (DESIGN.md §4).
 
+    ``plan``: an ``repro.api.ExecutionPlan`` — supplies measured peel
+    widths and shape quantization from earlier same-signature runs and
+    receives this run's measurements (DESIGN.md §6).  ``plan=None``
+    (every pre-PR-5 call site) self-sizes exactly as before.
+
     Returns (theta int64[n_side], RunStats).
     """
     cfg = cfg or ReceiptConfig()
     if side == "V":
-        g = BipartiteGraph.from_edges(g.n_v, g.n_u, g.edges_v, g.edges_u)
+        g = g.transposed()
     elif side != "U":
         raise ValueError(f"side must be 'U' or 'V', got {side!r}")
     stats = RunStats()
@@ -97,9 +102,10 @@ def tip_decompose(
         perm_u = np.arange(g.n_u)
         g_work = g
 
-    subset_id, init_support, bounds, _ = receipt_cd(g_work, cfg, stats)
+    subset_id, init_support, bounds, _ = receipt_cd(g_work, cfg, stats,
+                                                    plan=plan)
     theta_work = receipt_fd(g_work, subset_id, init_support, bounds, cfg,
-                            stats, mesh=mesh)
+                            stats, mesh=mesh, plan=plan)
 
     theta = np.zeros(g.n_u, np.int64)
     theta[perm_u] = np.round(theta_work).astype(np.int64)

@@ -90,7 +90,7 @@ def cd_checkpoint_state(subset_id, init_support, bounds, members, support_np,
 
 def receipt_cd(
     g: BipartiteGraph, cfg: ReceiptConfig, stats: RunStats,
-    *, checkpoint_cb=None, resume_state=None,
+    *, checkpoint_cb=None, resume_state=None, plan=None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Partition U into subsets with non-overlapping tip-number ranges.
 
@@ -112,6 +112,16 @@ def receipt_cd(
     ``cfg.cd_dispatch="graph"`` routes to the whole-graph single-dispatch
     driver (``_receipt_cd_graph``); checkpointing needs the host at
     subset boundaries and therefore ``cd_dispatch="subset"``.
+
+    ``plan``: an ``repro.api.ExecutionPlan`` (or any object with its
+    peel-width hint surface).  A plan carrying a MEASURED peel width from
+    an earlier same-signature run pins the gather buffer to it — the
+    width (a jit-static argument) stops depending on this graph's data,
+    so the executable cache hits instead of retracing, and the graph
+    dispatch skips its pre-dispatch sizing snapshot entirely (one fewer
+    blocking round trip).  The driver records the width it ended up with
+    back into the plan.  ``plan=None`` (every legacy call site) keeps
+    the self-sizing behavior bit-identical to PR 4.
     """
     if cfg.max_sweeps < 1:
         raise ValueError(
@@ -129,7 +139,7 @@ def receipt_cd(
             raise ValueError(
                 "CD checkpointing captures subset-boundary state on the "
                 "host; use cd_dispatch='subset'")
-        return _receipt_cd_graph(g, cfg, stats)
+        return _receipt_cd_graph(g, cfg, stats, plan=plan)
     backend = cfg.backend or kops.default_backend()
     blocks = cfg.kernel_blocks
     n_u = g.n_u
@@ -185,6 +195,14 @@ def receipt_cd(
         i = 0
 
     peel_width = dg.initial_peel_width()
+    width_hint = plan.cd_peel_width_hint() if plan is not None else None
+    if width_hint is not None and cfg.peel_width is None:
+        # measured width from an earlier same-signature run: pin the
+        # buffer (a jit-static arg) so the trace cache hits; the overflow
+        # replay keeps an undersized hint exact
+        peel_width = min(dg.rows_pad,
+                         max(peel_width, bucket(width_hint, blocks[1])))
+    width_max = peel_width
     while alive_np.any():
         if checkpoint_cb is not None:
             live = np.where(alive_np)[0]
@@ -212,8 +230,10 @@ def receipt_cd(
             # the subset's FIRST sweep peels the whole initial range; its
             # size is already known from the host snapshot, so size the
             # peel buffer to fit it and overflow only on larger cascades
-            # (an explicit cfg.peel_width pins the initial width instead)
-            if cfg.peel_width is None:
+            # (an explicit cfg.peel_width — or a plan's measured width,
+            # which must stay data-independent to keep the trace cache
+            # hitting — pins the initial width instead)
+            if cfg.peel_width is None and width_hint is None:
                 n_first = int((alive_np & (sup_np < hi)).sum())
                 peel_width = max(peel_width, min(
                     dg.rows_pad,
@@ -305,6 +325,7 @@ def receipt_cd(
             live = np.where(alive_np)[0]
             new_members = dg.members[live]
             sup_keep = sup_np[live]
+            width_max = max(width_max, peel_width)
             dg = DeviceGraph(g, new_members, cfg)
             stats.dgm_compactions += 1
             alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
@@ -323,6 +344,8 @@ def receipt_cd(
     stats.num_subsets = i
     stats.bounds = [float(b) for b in bounds]
     stats.time_cd = time.perf_counter() - t0
+    if plan is not None:
+        plan.note_cd_peel_width(max(width_max, peel_width))
     # every vertex must be assigned
     assert (subset_id >= 0).all(), "CD left unassigned vertices"
     return subset_id, init_support, np.asarray(bounds), None
@@ -349,7 +372,7 @@ class _GraphStateView:
 
 
 def _receipt_cd_graph(
-    g: BipartiteGraph, cfg: ReceiptConfig, stats: RunStats,
+    g: BipartiteGraph, cfg: ReceiptConfig, stats: RunStats, *, plan=None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Whole-graph CD: every subset under ONE device dispatch.
 
@@ -394,7 +417,16 @@ def _receipt_cd_graph(
 
     t0 = time.perf_counter()
     peel_width = dg.initial_peel_width()
-    if cfg.peel_width is None and dg.n_rows and p_total > 1:
+    width_hint = plan.cd_peel_width_hint() if plan is not None else None
+    if width_hint is not None and cfg.peel_width is None:
+        # measured width from an earlier same-signature run: the sizing
+        # snapshot below becomes unnecessary, so a cache-hit graph runs
+        # the whole CD phase with ONE blocking round trip (the final
+        # state fetch); an undersized hint still replays exactly through
+        # the overflow path
+        peel_width = min(dg.rows_pad,
+                         max(peel_width, bucket(width_hint, blocks[1])))
+    elif cfg.peel_width is None and dg.n_rows and p_total > 1:
         # size the buffer to subset 0's first sweep, known from ONE host
         # snapshot (the only pre-dispatch sync; still O(1) per graph).
         # Later subsets' first sweeps are range-bounded, and any sweep
@@ -472,5 +504,7 @@ def _receipt_cd_graph(
     stats.num_subsets = num_subsets
     stats.bounds = [float(b) for b in bounds]
     stats.time_cd = time.perf_counter() - t0
+    if plan is not None:
+        plan.note_cd_peel_width(peel_width)
     assert (subset_id >= 0).all(), "CD left unassigned vertices"
     return subset_id, init_support, np.asarray(bounds), None

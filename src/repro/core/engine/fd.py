@@ -229,8 +229,32 @@ def _level_pad(n: int, align: int) -> int:
     return bucket(n, align)
 
 
+def _probe_peel_width(group: List[Dict]) -> int:
+    """First-sweep level-size probe (PR 5 satellite; replaces the static
+    ``mm/8`` heuristic, closing the ROADMAP deferred item).
+
+    The gather buffer only needs to fit the peel LEVELS the loop will
+    see, and the host support snapshot already measures their shape: the
+    survivor supports' value multiplicities are exactly the level sizes
+    the first device sweeps peel.  Sweeps further in can merge levels
+    (deltas push rows onto the subset's range floor), so the probe takes
+    the largest single level AND the bottom-two cumulative mass per
+    task; anything larger at runtime falls back to the mask-form kernel
+    ON DEVICE (never the host), and the loop's measured ``max_level``
+    refines the plan for the next same-signature run.
+    """
+    probe = 1
+    for t in group:
+        sup = np.asarray(t["sup_surv"])
+        if sup.size == 0:
+            continue
+        _, counts = np.unique(sup, return_counts=True)
+        probe = max(probe, int(counts.max()), int(counts[:2].sum()))
+    return probe
+
+
 def build_level_stack(group: List[Dict], cfg: ReceiptConfig,
-                      backend: str) -> Dict:
+                      backend: str, plan=None) -> Dict:
     """Assemble one shape group into the batched level-peel stacks
     (host-side work; overlapped with the previous group's device sweep
     by the double-buffered driver).
@@ -240,13 +264,29 @@ def build_level_stack(group: List[Dict], cfg: ReceiptConfig,
     delta the launcher applies through one grouped butterfly kernel call
     before entering the loop.  Group tasks must carry the
     ``pre_peel_tasks`` fields (surv / l1 / cap1 / sup_surv).
+
+    ``plan`` (an ``repro.api.ExecutionPlan``) quantizes every stack
+    dimension — rows ``mm``, cols ``cc``, first-level width ``w1`` and
+    the GROUP count — up to the nearest shape an earlier same-signature
+    run compiled (dead padding rows/groups are no-ops in the level
+    loop), and supplies the measured gather-buffer width for the
+    resulting shape.  That makes the whole FD dispatch sequence
+    shape-stable across graphs of the same signature: the jit cache hits
+    instead of retracing per graph.  ``plan=None`` keeps the self-sized
+    behavior.
     """
     row_align, col_align, w_align = _aligns(cfg, backend)
     sparse = backend in kops.SPARSE_BACKENDS
-    n_g = len(group)
+    n_real = len(group)
     mm = _level_pad(max(len(t["surv"]) for t in group), row_align)
     cc = _level_pad(max(max(t["sub"].n_v, 1) for t in group), col_align)
     w1 = pad_to_multiple(max(len(t["l1"]) for t in group), w_align)
+    n_g = n_real
+    if plan is not None:
+        mm = plan.quantize_dim("fd_rows", mm)
+        cc = plan.quantize_dim("fd_cols", cc)
+        w1 = plan.quantize_dim("fd_l1", w1)
+        n_g = plan.quantize_dim("fd_groups", n_real)
 
     a = np.zeros((n_g, mm, cc), np.float32)
     a_l1 = np.zeros((n_g, w1, cc), np.float32)
@@ -285,11 +325,16 @@ def build_level_stack(group: List[Dict], cfg: ReceiptConfig,
     if cfg.peel_width is not None:
         peel_width = min(bucket(cfg.peel_width, w_align), mm)
     else:
-        # post-first-level cascades are small, and a gathered sweep only
-        # touches W rows of A/B2 (sweeps are memory-bound, not
-        # flop-bound); oversized levels hit the on-device mask-form
-        # fallback, never the host
-        peel_width = min(bucket(max(mm // 8, w_align), w_align), mm)
+        # measured-width policy (PR 5 satellite): a plan carrying the
+        # max level an earlier same-signature run actually peeled at
+        # this stack shape pins the buffer to it; otherwise the
+        # first-sweep level-size probe sizes it from the host support
+        # snapshot.  Gathered sweeps only touch W rows of A/B2 (sweeps
+        # are memory-bound, not flop-bound), and an oversized level hits
+        # the on-device mask-form fallback, never the host.
+        hint = plan.fd_width_hint((mm, cc)) if plan is not None else None
+        probe = hint if hint is not None else _probe_peel_width(group)
+        peel_width = min(bucket(max(probe, w_align), w_align), mm)
 
     dv0 = a.sum(axis=1)
     alive0 = np.arange(mm)[None, :] < nmem[:, None]
@@ -309,6 +354,19 @@ def build_level_stack(group: List[Dict], cfg: ReceiptConfig,
     )
 
 
+def _note_group_run(built: Dict, max_level_seen: int, stats: RunStats,
+                    plan) -> None:
+    """Fold one drained group's measured level shape into RunStats and
+    the plan (the feedback half of the measured-width loop)."""
+    stats.fd_peel_widths.append(int(built["peel_width"]))
+    stats.fd_max_levels.append(int(max_level_seen))
+    if max_level_seen > built["peel_width"]:
+        stats.fd_mask_fallbacks += 1
+    if plan is not None:
+        plan.note_fd_level((built["mm"], built["cc"]), int(max_level_seen),
+                           int(built["peel_width"]))
+
+
 # ---------------------------------------------------------------------- #
 # FD driver
 # ---------------------------------------------------------------------- #
@@ -321,6 +379,7 @@ def receipt_fd(
     stats: RunStats,
     *,
     mesh=None,
+    plan=None,
 ) -> np.ndarray:
     """Exact tip numbers by independent peeling of induced subgraphs.
 
@@ -353,10 +412,10 @@ def receipt_fd(
     if cfg.fd_mode == "level":
         if mesh is not None:
             theta = _run_level_groups_mesh(tasks, init_support, cfg,
-                                           stats, theta, mesh)
+                                           stats, theta, mesh, plan=plan)
         else:
             theta = _run_level_groups(tasks, init_support, cfg, backend,
-                                      stats, theta)
+                                      stats, theta, plan=plan)
     else:
         # workload-aware scheduling: equal-padded stacks (LPT analog)
         groups = pack_by_shape(
@@ -372,7 +431,8 @@ def receipt_fd(
     return theta
 
 
-def _run_level_groups(tasks, init_support, cfg, backend, stats, theta):
+def _run_level_groups(tasks, init_support, cfg, backend, stats, theta,
+                      plan=None):
     """Pre-peel first levels on the host, group the SURVIVOR subgraphs by
     padded shape, and dispatch each group through the batched level-peel
     loop — double-buffering host stack assembly against device compute."""
@@ -440,14 +500,17 @@ def _run_level_groups(tasks, init_support, cfg, backend, stats, theta):
         # same contract as the CD and ParB drivers)
         th_acc = None
         prev_alive = built["alive0"]
+        max_level_seen = 0
         while True:
-            sup, alive, dv, th, rho, wedges, _sweeps = out
-            th_h, alive_h, rho_h, wedges_h = jax.device_get(
-                (th, alive, rho, wedges))
+            sup, alive, dv, th, rho, wedges, max_lev, _sweeps = out
+            th_h, alive_h, rho_h, wedges_h, max_lev_h = jax.device_get(
+                (th, alive, rho, wedges, max_lev))
             stats.host_round_trips += 1
             d_rho = int(np.asarray(rho_h).sum())
             stats.rho_fd += d_rho
             stats.wedges_fd += int(np.asarray(wedges_h, np.float64).sum())
+            max_level_seen = max(max_level_seen,
+                                 int(np.asarray(max_lev_h).max()))
             newly_dead = prev_alive & ~alive_h
             th_h = np.asarray(th_h, np.float64)
             th_acc = (np.where(newly_dead, th_h, th_acc)
@@ -464,11 +527,12 @@ def _run_level_groups(tasks, init_support, cfg, backend, stats, theta):
                 update_mode=built["update_mode"],
             )
             stats.device_loop_calls += 1
+        _note_group_run(built, max_level_seen, stats, plan)
         for k, t in enumerate(built["group"]):
             theta[t["members"][t["surv"]]] = th_acc[k, : built["nmem"][k]]
 
     for group in groups:
-        built = build_level_stack(group, cfg, backend)
+        built = build_level_stack(group, cfg, backend, plan=plan)
         padded += built["padded_cells"]
         used += built["used_cells"]
         out = launch(built)                     # async dispatch
@@ -485,7 +549,8 @@ def _run_level_groups(tasks, init_support, cfg, backend, stats, theta):
     return theta
 
 
-def _run_level_groups_mesh(tasks, init_support, cfg, stats, theta, mesh):
+def _run_level_groups_mesh(tasks, init_support, cfg, stats, theta, mesh,
+                           plan=None):
     """End-to-end mesh-sharded FD (DESIGN.md §4): the same pipeline as
     ``_run_level_groups`` — host first-level pre-peel, shape-group
     packing, double-buffered group dispatch, ONE blocking sync per group
@@ -592,7 +657,10 @@ def _run_level_groups_mesh(tasks, init_support, cfg, stats, theta, mesh):
             theta[t["members"][t["surv"]]] = th_acc[s, :nm]
 
     for group in groups:
-        built = build_level_stack(group, cfg, backend)
+        # plan hints apply (shape quantization + measured widths); the
+        # measured-level feedback itself is recorded on the local path
+        # only — the sharded loop keeps its 6-field state contract
+        built = build_level_stack(group, cfg, backend, plan=plan)
         sharded, slots, out = launch(built)     # async dispatch
         padded += sharded["a"].size + sharded["a_l1"].size
         used += built["used_cells"]

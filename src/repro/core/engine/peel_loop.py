@@ -134,6 +134,61 @@ class ReceiptConfig:
     #                                        # (G * M * M) materialized per
     #                                        # group stack
 
+    def __post_init__(self):
+        """Validate every knob AT CONSTRUCTION (PR 5 satellite): the
+        pre-PR behavior deferred checks to whichever driver happened to
+        read a knob first (``fd_mode`` only in ``receipt_fd``,
+        ``cd_dispatch`` only in ``receipt_cd``, ``backend`` nowhere — a
+        typo'd backend silently routed to the compiled pallas kernel).
+        ``repro.api.EngineConfig`` layers stricter cross-knob rules on
+        top; this is the floor every config object must clear.
+        """
+        if self.num_partitions < 1:
+            raise ValueError(
+                f"num_partitions must be >= 1 (got {self.num_partitions})")
+        kops.resolve_backend(self.backend)   # raises on unknown names
+        blocks = tuple(self.kernel_blocks)
+        if len(blocks) != 3 or any(int(b) < 1 for b in blocks):
+            raise ValueError(
+                f"kernel_blocks must be three positive tile sizes "
+                f"(bi, bj, bk), got {self.kernel_blocks!r}")
+        if self.backend in kops.SPARSE_BACKENDS and blocks[0] != blocks[1]:
+            raise ValueError(
+                f"sparse backends require square row tiles (bi == bj), "
+                f"got kernel_blocks={self.kernel_blocks!r}")
+        if self.fd_mode not in ("level", "b2", "matvec"):
+            raise ValueError(
+                f"unknown fd_mode {self.fd_mode!r}: expected 'level', "
+                "'b2' or 'matvec'")
+        if self.cd_dispatch not in ("subset", "graph"):
+            raise ValueError(
+                f"unknown cd_dispatch {self.cd_dispatch!r}: expected "
+                "'subset' or 'graph'")
+        if self.cd_dispatch == "graph" and not self.device_loop:
+            raise ValueError(
+                "cd_dispatch='graph' runs the whole CD phase on device "
+                "and requires device_loop=True")
+        if self.fd_update_mode not in ("auto", "b2", "kernel"):
+            raise ValueError(
+                f"unknown fd_update_mode {self.fd_update_mode!r}: "
+                "expected 'auto', 'b2' or 'kernel'")
+        if self.max_sweeps < 1:
+            raise ValueError(
+                f"max_sweeps must be >= 1 (got {self.max_sweeps}): the "
+                "valve bounds one device-loop invocation; a sub-1 cap "
+                "can make no progress")
+        if self.peel_width is not None and self.peel_width < 1:
+            raise ValueError(
+                f"peel_width must be >= 1 or None (got {self.peel_width})")
+        if not (0.0 < self.dgm_row_threshold <= 1.0):
+            raise ValueError(
+                f"dgm_row_threshold must lie in (0, 1] (got "
+                f"{self.dgm_row_threshold}): it is the alive-row fraction "
+                "below which the subset dispatch re-induces")
+        if self.fd_b2_cells < 1:
+            raise ValueError(
+                f"fd_b2_cells must be >= 1 (got {self.fd_b2_cells})")
+
 
 @dataclasses.dataclass
 class RunStats:
@@ -168,6 +223,14 @@ class RunStats:
     overflow_fallbacks: int = 0     # peel buffer overflows -> host sweeps
     fd_groups: int = 0              # FD shape groups dispatched
     fd_padding_waste: float = 0.0   # 1 - used/(padded) cells of FD stacks
+    fd_peel_widths: List[int] = dataclasses.field(default_factory=list)
+    #                               # per-group gather-buffer widths used
+    fd_max_levels: List[int] = dataclasses.field(default_factory=list)
+    #                               # per-group measured largest peel level
+    #                               # (the width probe fed back into plans)
+    fd_mask_fallbacks: int = 0      # groups whose largest level exceeded
+    #                               # the gather buffer (on-device mask-form
+    #                               # fallback fired; exact either way)
     fd_shards: int = 0              # mesh devices driving FD (0 = local)
     fd_shard_rho: List[int] = dataclasses.field(default_factory=list)
     #                               # per-shard level sweeps (mesh FD)
@@ -717,13 +780,18 @@ def batched_level_loop(a, row_ext, support, alive, dv, lo, *,
     Both modes produce bit-identical deltas (integer regime, DESIGN.md
     section 8); the equivalence suite pins them against each other.
 
-    Returns (support, alive, dv, theta, rho, wedges, sweeps):
+    Returns (support, alive, dv, theta, rho, wedges, max_level, sweeps):
     ``theta`` (G, M) holds the tip numbers of peeled rows; ``rho`` (G,)
     counts sweeps in which group g actually peeled (the FD analogue of
     the paper's synchronization counter); ``wedges`` (G,) accumulates the
     dynamic wedge cost C_peel per group (f32-exact below 2^24, DESIGN.md
-    section 8).  Groups finish independently; a finished group is a
-    no-op for the remaining sweeps (empty peel set).
+    section 8); ``max_level`` (G,) records the LARGEST peel level each
+    group saw — the measured-width probe the driver feeds back into the
+    plan so repeat runs of the same shape signature size the gather
+    buffer from data instead of a heuristic (PR 5 satellite; a value
+    above ``peel_width`` also tells the host the mask-form fallback
+    fired).  Groups finish independently; a finished group is a no-op
+    for the remaining sweeps (empty peel set).
     """
     sparse = backend in kops.SPARSE_BACKENDS
     f32 = jnp.float32
@@ -792,11 +860,11 @@ def batched_level_loop(a, row_ext, support, alive, dv, lo, *,
         return delta, colsum
 
     def cond_fn(st):
-        alive, sweeps = st[1], st[6]
+        alive, sweeps = st[1], st[7]
         return jnp.any(alive) & (sweeps < max_sweeps)
 
     def body_fn(st):
-        support, alive, dv, theta, rho, wedges, sweeps = st
+        support, alive, dv, theta, rho, wedges, max_level, sweeps = st
         hi, cap = level_threshold(support, alive, lo)     # (G,), (G,)
         act = jnp.any(alive, axis=-1)                     # (G,)
         peel = select_peel(support, alive, hi)            # (G, M)
@@ -820,13 +888,15 @@ def batched_level_loop(a, row_ext, support, alive, dv, lo, *,
             support2, alive2, dv - colsum, theta,
             rho + act.astype(jnp.int32),
             wedges + jnp.where(act, c_peel, 0.0),
+            jnp.maximum(max_level, n_peel.astype(jnp.int32)),
             sweeps + 1,
         )
 
     theta0 = jnp.zeros((g_n, mm), f32)
     state0 = (
         support, alive, dv, theta0,
-        jnp.zeros(g_n, jnp.int32), jnp.zeros(g_n, f32), jnp.int32(0),
+        jnp.zeros(g_n, jnp.int32), jnp.zeros(g_n, f32),
+        jnp.zeros(g_n, jnp.int32), jnp.int32(0),
     )
     return jax.lax.while_loop(cond_fn, body_fn, state0)
 

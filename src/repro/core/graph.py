@@ -71,6 +71,25 @@ class BipartiteGraph:
         ev = (key % n_v).astype(np.int32)
         return BipartiteGraph(n_u=n_u, n_v=n_v, edges_u=eu, edges_v=ev)
 
+    @staticmethod
+    def from_dense(a) -> "BipartiteGraph":
+        """Graph from a dense 0/1 biadjacency matrix (rows = U, cols = V).
+
+        Accepts bool or numeric arrays; any entry other than 0 or 1 is
+        rejected (weighted matrices have no butterfly semantics here).
+        """
+        a = np.asarray(a)
+        if a.ndim != 2:
+            raise ValueError(
+                f"from_dense expects a 2-D biadjacency matrix, got shape "
+                f"{a.shape}")
+        if a.dtype != bool and not np.isin(a[a != 0], [1]).all():
+            raise ValueError(
+                "from_dense expects a 0/1 (or bool) biadjacency matrix; "
+                "found entries other than 0 and 1")
+        eu, ev = np.nonzero(a)
+        return BipartiteGraph.from_edges(a.shape[0], a.shape[1], eu, ev)
+
     # ------------------------------------------------------------------ #
     # basic accessors
     # ------------------------------------------------------------------ #
@@ -133,6 +152,12 @@ class BipartiteGraph:
     # ------------------------------------------------------------------ #
     # reorder / views
     # ------------------------------------------------------------------ #
+    def transposed(self) -> "BipartiteGraph":
+        """Swap the vertex sets (U <-> V).  Tip-decomposing the transpose
+        peels the other side — exact by symmetry (Table 3's *V rows)."""
+        return BipartiteGraph.from_edges(
+            self.n_v, self.n_u, self.edges_v, self.edges_u)
+
     def relabel_by_degree(self) -> "BipartiteGraph":
         """Relabel both sides in descending-degree order (Wang et al.).
 

@@ -1,23 +1,29 @@
-"""RECEIPT — compatibility facade over `core/engine/` (PR 2).
+"""RECEIPT — compatibility facade over `core/engine/` and `repro.api`.
 
 The engine that used to live here in one 1000-line module was split into
-the `core/engine/` package, built around a single parameterized
-device-resident peel core:
+the `core/engine/` package (PR 2), and the public surface moved to the
+`repro.api` plan/compile/execute service layer (PR 5).  Every name this
+module historically exported keeps working and produces BIT-IDENTICAL
+tip numbers (tests/test_api_compat.py pins it):
 
-* `engine/peel_loop.py` — the unified ``lax.while_loop`` sweep core
-  (CD range-peel, ParB min-peel, batched FD level-peel modes), the
-  `DeviceGraph` container and the blocking host-sweep fallback;
-* `engine/cd.py`        — coarse-grained decomposition (Alg. 3);
-* `engine/fd.py`        — fine-grained decomposition (Alg. 4) on the
-  batched level-peel runtime (grouped Pallas kernel dispatch,
-  double-buffered shape-group scheduling);
-* `engine/baselines.py` — the ParButterfly baseline on the same core.
+* ``tip_decompose`` is now a thin wrapper over ``repro.api.decompose``
+  — each call plans and executes on a fresh Executor, so legacy callers
+  see byte-for-byte the pre-PR-5 engine behavior (hold an
+  ``repro.api.Executor`` to get the cross-graph executable cache);
+* ``receipt_cd`` / ``receipt_fd`` / ``parb_tip_decompose`` remain the
+  phase-level engine entry points the service layer itself drives;
+* ``ReceiptConfig`` remains the engine-layer kwarg config —
+  ``repro.api.EngineConfig`` is its frozen, serializable, strictly
+  validated replacement for new code.
 
-Every public name (and the private aliases older call sites used) is
-re-exported here, so ``from repro.core.receipt import ...`` keeps
-working.  New code should import from ``repro.core.engine``.
+New code should import from ``repro.api`` (drivers) and
+``repro.core.engine`` (engine internals).
 """
 from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
 
 from .engine import (
     DeviceGraph,
@@ -33,8 +39,26 @@ from .engine import (
     parb_tip_decompose,
     receipt_cd,
     receipt_fd,
-    tip_decompose,
 )
+from .graph import BipartiteGraph
+
+
+def tip_decompose(
+    g: BipartiteGraph, cfg: Optional[ReceiptConfig] = None,
+    *, side: str = "U", mesh=None,
+) -> Tuple[np.ndarray, RunStats]:
+    """Full RECEIPT tip decomposition — legacy signature, routed through
+    the `repro.api` service layer (planning included; a fresh Executor
+    per call keeps behavior bit-identical to the pre-PR-5 engine).
+
+    Returns (theta int64[n_side], RunStats) exactly as before; see
+    ``repro.core.engine.tip_decompose`` for the knob/mesh semantics and
+    ``repro.api`` for the plan/compile/execute surface superseding this.
+    """
+    from .. import api
+
+    td = api.decompose(g, cfg, side=side, mesh=mesh)
+    return td.theta, td.stats
 from .engine.fd import _fd_peel_b2, _fd_peel_matvec  # noqa: F401 (compat)
 from .engine.peel_loop import (  # noqa: F401 (compat)
     apply_delta,

@@ -49,14 +49,54 @@ __all__ = [
     "find_hi_device",
     "tighten_extents_device",
     "default_backend",
+    "resolve_backend",
+    "route_label",
+    "KNOWN_BACKENDS",
     "SPARSE_BACKENDS",
 ]
 
 SPARSE_BACKENDS = ("pallas_sparse", "interpret_sparse")
+KNOWN_BACKENDS = ("pallas", "pallas_sparse", "interpret", "interpret_sparse",
+                  "xla")
+
+# kernel-route labels surfaced by the planning layer (repro.api): what a
+# backend actually executes, for humans reading an ExecutionPlan
+_ROUTE_LABELS = {
+    "pallas": "pallas-dense (compiled blocked kernel)",
+    "pallas_sparse": "pallas-sparse (compiled staircase stripe-skip)",
+    "interpret": "interpret-dense (Pallas interpreter)",
+    "interpret_sparse": "interpret-sparse (Pallas interpreter)",
+    "xla": "xla-oracle (pure-jnp reference)",
+}
 
 
 def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    """Validate + resolve a kernel backend name (None = platform default).
+
+    Every dispatcher below routes through this, so a typo'd backend fails
+    with an actionable error instead of silently falling through to the
+    compiled pallas path (the pre-PR-5 behavior).
+    """
+    if backend is None:
+        return default_backend()
+    if backend not in KNOWN_BACKENDS:
+        import difflib
+
+        hints = difflib.get_close_matches(backend, KNOWN_BACKENDS, n=1)
+        hint = f" (did you mean {hints[0]!r}?)" if hints else ""
+        raise ValueError(
+            f"unknown kernel backend {backend!r}{hint}; known backends: "
+            f"{', '.join(KNOWN_BACKENDS)}")
+    return backend
+
+
+def route_label(backend: Optional[str]) -> str:
+    """Human-readable kernel route of a backend (ExecutionPlan field)."""
+    return _ROUTE_LABELS[resolve_backend(backend)]
 
 
 @jax.jit
@@ -145,8 +185,7 @@ def butterfly_update(
     ``kmax_b`` are row-tile column extents ((n_a/bi,) / (n_b/bj,) int32)
     consumed only by the sparse backends.
     """
-    if backend is None:
-        backend = default_backend()
+    backend = resolve_backend(backend)
     if backend == "xla":
         return _update_ref(a, b, s, ids_a, ids_b)
     if backend in SPARSE_BACKENDS:
@@ -196,8 +235,7 @@ def butterfly_update_batched(
     extents ((G, n_a/bi) / (G, n_b/bj) int32) consumed only by the sparse
     backends — each stacked subset carries its own staircase.
     """
-    if backend is None:
-        backend = default_backend()
+    backend = resolve_backend(backend)
     if backend == "xla":
         return _update_ref_batched(a, b, s, ids_a, ids_b)
     if backend in SPARSE_BACKENDS:
@@ -232,8 +270,7 @@ def butterfly_support(
     a: (n_u, n_v) 0/1 float array; s: (n_u,) mask.  For the pallas and
     interpret backends, shapes must be padded to the kernel blocks.
     """
-    if backend is None:
-        backend = default_backend()
+    backend = resolve_backend(backend)
     if backend == "xla":
         return ref.butterfly_support_ref(a, s)
     n_u = a.shape[0]

@@ -87,6 +87,32 @@ def test_gate_tolerates_overflow_surcharge():
     assert bench_gate.gate(fresh, base, rel_tol=0.10) == []
 
 
+def test_gate_fails_on_lost_map_dispatch_reduction():
+    """The PR 5 seeded regression: Executor.map degenerating into one
+    dispatch per graph."""
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    fresh["executor_map"]["dispatch_reduction"] = 1.1
+    errors = bench_gate.gate(fresh, base, rel_tol=0.10)
+    assert any("dispatch_reduction" in e for e in errors), errors
+
+
+def test_gate_fails_on_cold_warm_fleet():
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    fresh["executor_map"]["warm_cache_hit_rate"] = 0.5
+    errors = bench_gate.gate(fresh, base, rel_tol=0.10)
+    assert any("warm_cache_hit_rate" in e for e in errors), errors
+
+
+def test_gate_fails_on_dropped_map_section():
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    del fresh["executor_map"]
+    errors = bench_gate.gate(fresh, base, rel_tol=0.10)
+    assert any("executor_map section missing" in e for e in errors), errors
+
+
 def test_gate_cli_roundtrip(tmp_path):
     """End-to-end through main(): exit 0 on shipped numbers, exit 1 on
     the seeded round-trip regression."""

@@ -258,7 +258,7 @@ for s, t in enumerate(slots):
     err = max(err, float(np.abs(
         theta_s[s, : nmem[t]] - want[t, : nmem[t]]).max()))
 alive0 = np.arange(M)[None, :] < nmem[:, None]
-_, _, _, th1, rho1, wedges1, _ = batched_level_loop(
+_, _, _, th1, rho1, wedges1, _maxlev, _ = batched_level_loop(
     jnp.asarray(a), jnp.zeros((G, M), jnp.int32), jnp.asarray(sup0),
     jnp.asarray(alive0), jnp.asarray(a.sum(1)), jnp.asarray(lo),
     backend="xla", blocks=(8, 8, 8), peel_width=M, max_sweeps=100000)
