@@ -269,12 +269,31 @@ def bench_executor_map(*, n_graphs: int = 12, check: bool = True) -> dict:
                 "Executor.map theta mismatch vs per-graph tip_decompose")
     # warm: a SECOND fleet of the same bucketed shapes — executables and
     # measured sizing come entirely out of the cache
+    fleet2 = mk(500)
     t0 = time.perf_counter()
-    ex.map(mk(500))
+    ex.map(fleet2)
     map_warm = time.perf_counter() - t0
     rep_warm = dict(ex.last_map_report)
     hits = rep_warm["cache_hits"]
     hit_rate = hits / max(hits + rep_warm["cache_misses"], 1)
+
+    # guardrail overhead (PR 6): the hardened warm path (input
+    # validation, fault-point consults, fallback wrapping, straggler
+    # timing) vs the bare guardrails=False path, measured in the SAME
+    # process on the SAME warm fleet (min of repeats) so the gate's
+    # ratio is not at the mercy of cross-run CI noise
+    ex_bare = Executor(cfg, guardrails=False)
+    ex_bare.map(fleet2)                      # warm the bare executor
+    guarded_w, bare_w = [], []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        ex.map(fleet2)
+        guarded_w.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        ex_bare.map(fleet2)
+        bare_w.append(time.perf_counter() - t0)
+    guarded_wall, bare_wall = min(guarded_w), min(bare_w)
+    guardrail_overhead = guarded_wall / max(bare_wall, 1e-9) - 1.0
     map_dispatches = (rep_cold["device_loop_calls"]
                       + rep_cold["counting_dispatches"]
                       + rep_cold["host_round_trips"])
@@ -291,13 +310,17 @@ def bench_executor_map(*, n_graphs: int = 12, check: bool = True) -> dict:
         "map_dispatches": map_dispatches,
         "dispatch_reduction": seq_dispatches / max(map_dispatches, 1),
         "warm_cache_hit_rate": hit_rate,
+        "guarded_wall_warm_s": guarded_wall,
+        "bare_wall_warm_s": bare_wall,
+        "guardrail_overhead": guardrail_overhead,
     }
     print(f"[bench_receipt] executor_map: {n_graphs} graphs, "
           f"{rec['chunks']} chunk(s): dispatches {seq_dispatches} -> "
           f"{map_dispatches} ({rec['dispatch_reduction']:.1f}x fewer), "
           f"wall warm {seq_warm:.2f}s -> {map_warm:.2f}s "
           f"({rec['map_wall_speedup_warm']:.1f}x), warm hit rate "
-          f"{hit_rate:.0%}", flush=True)
+          f"{hit_rate:.0%}, guardrail overhead "
+          f"{guardrail_overhead:+.1%}", flush=True)
     return rec
 
 

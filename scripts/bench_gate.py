@@ -54,6 +54,14 @@ WEDGE_RATIO_TOL = 1.10
 # and a warm same-shape fleet must run fully out of the executable cache
 MAP_DISPATCH_MIN_REDUCTION = 4.0
 MAP_HIT_RATE_MIN = 0.99
+# Hardened-runtime acceptance (PR 6): the guardrail machinery (input
+# validation, fault-point consults, fallback wrapping, straggler
+# timing) must cost < 5% on the warm executor_map path.  Both walls
+# come from the SAME bench process (min of interleaved repeats), so the
+# ratio is noise-resistant; a small absolute slack covers the
+# sub-millisecond regime where the ratio is meaningless.
+GUARD_OVERHEAD_MAX = 0.05
+GUARD_OVERHEAD_ABS_SLACK_S = 0.005
 
 
 def _graphs_by_name(payload: dict) -> dict:
@@ -137,6 +145,17 @@ def gate(fresh: dict, baseline: dict, rel_tol: float) -> list:
                 f"executor_map: warm_cache_hit_rate {hit:.2f} < "
                 f"{MAP_HIT_RATE_MIN} — a warm same-shape fleet should "
                 "run fully out of the executable cache")
+        # --- guardrail overhead (PR 6; fresh-run-only keys) ----------- #
+        ovh = f_map.get("guardrail_overhead")
+        if ovh is not None:
+            delta = (f_map.get("guarded_wall_warm_s", 0.0)
+                     - f_map.get("bare_wall_warm_s", 0.0))
+            if ovh > GUARD_OVERHEAD_MAX and delta > GUARD_OVERHEAD_ABS_SLACK_S:
+                errors.append(
+                    f"executor_map: guardrail_overhead {ovh:.1%} > "
+                    f"{GUARD_OVERHEAD_MAX:.0%} (+{delta * 1e3:.1f}ms) — "
+                    "the hardened runtime's guardrails slowed the warm "
+                    "map path beyond the acceptance budget")
     return errors
 
 

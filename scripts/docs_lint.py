@@ -15,7 +15,9 @@ Checks (all cheap, no jax import needed beyond the module graph):
    paper-to-code audit table can never silently rot.  The same symbol
    resolution runs over the "API layer" section (the ``repro.api``
    plan/compile/execute surface, PR 5), which must cite at least the
-   core service-layer symbols.
+   core service-layer symbols, and over the "Failure model" section
+   (the hardened runtime, PR 6), which must cite the error taxonomy,
+   the fault-injection harness, the fallback chain and verify mode.
 
 Exit code 0 on success; prints each failure and exits 1 otherwise.
 Run from the repo root: ``PYTHONPATH=src python scripts/docs_lint.py``.
@@ -90,6 +92,12 @@ SYMBOL_SECTIONS = {
         "repro.api.Planner",
         "repro.api.Executor",
         "repro.api.TipDecomposition",
+    ],
+    "## 7. Failure model": [
+        "repro.api.errors",
+        "repro.api.faults",
+        "repro.kernels.ops.fallback_chain",
+        "repro.api.verify_tip_decomposition",
     ],
 }
 

@@ -1,4 +1,4 @@
-"""`repro.api` — the plan/compile/execute service layer (DESIGN.md §6).
+"""`repro.api` — the plan/compile/execute service layer (DESIGN.md §6-7).
 
 The public surface of the RECEIPT engine, redesigned around three
 stages (PR 5 tentpole):
@@ -11,13 +11,20 @@ stages (PR 5 tentpole):
    statically schedulable structure RECEIPT is built on: CD dispatch
    mode and partition budget, bucketed device shapes, kernel route,
    peel-buffer widths, FD shape-group estimates, mesh shard counts and
-   a padded-bytes memory estimate — inspectable before any device work.
+   a padded-bytes memory estimate — inspectable before any device work,
+   and admission-controlled against ``EngineConfig.memory_budget_bytes``.
 3. **Execution** — ``Executor`` runs plans through a cross-graph
    executable cache keyed by plan shape signature (repeat graphs of the
    same bucketed shape skip tracing entirely) and batches fleets of
    small graphs through shared dispatches (``Executor.map``).  Results
    are ``TipDecomposition`` objects (tip numbers + ``RunStats`` +
    hierarchy queries).
+
+The hardened runtime (PR 6, DESIGN.md §7) adds the failure model:
+``errors`` (the structured ``ReceiptError`` taxonomy), ``faults`` (the
+deterministic injection harness), the backend fallback chain with
+per-signature quarantine, fleet isolation in ``Executor.map`` and the
+``decompose(verify=True)`` invariant checks.
 
 One-shot convenience::
 
@@ -28,12 +35,18 @@ One-shot convenience::
 The legacy names (``repro.core.receipt.tip_decompose`` /
 ``receipt_cd`` / ``receipt_fd`` / ``ReceiptConfig``) remain as thin
 compatibility wrappers over this layer.
+
+NOTE: this package initializer is LAZY (PEP 562).  The error taxonomy
+(``repro.api.errors``) and fault harness (``repro.api.faults``) are
+stdlib-only leaf modules imported by ``core/graph.py`` and the engine
+drivers; importing them must not drag the jax-heavy executor in (which
+would also be an import cycle).  Attribute access on the package — e.g.
+``from repro.api import Executor`` — resolves through ``__getattr__``
+and imports the owning submodule on first use.
 """
 from __future__ import annotations
 
-from .config import EngineConfig
-from .executor import Executor, TipDecomposition, decompose
-from .plan import ExecutionPlan, Planner
+import importlib
 
 __all__ = [
     "EngineConfig",
@@ -42,4 +55,48 @@ __all__ = [
     "Executor",
     "TipDecomposition",
     "decompose",
+    "verify_tip_decomposition",
+    "ReceiptError",
+    "GraphValidationError",
+    "PlanInfeasibleError",
+    "KernelBackendError",
+    "PeelOverflowError",
+    "VerificationError",
+    "FleetPartialFailure",
+    "FaultInjector",
+    "FaultSpec",
+    "errors",
+    "faults",
 ]
+
+_LAZY = {
+    "EngineConfig": "config",
+    "ExecutionPlan": "plan",
+    "Planner": "plan",
+    "Executor": "executor",
+    "TipDecomposition": "executor",
+    "decompose": "executor",
+    "verify_tip_decomposition": "executor",
+    "ReceiptError": "errors",
+    "GraphValidationError": "errors",
+    "PlanInfeasibleError": "errors",
+    "KernelBackendError": "errors",
+    "PeelOverflowError": "errors",
+    "VerificationError": "errors",
+    "FleetPartialFailure": "errors",
+    "FaultInjector": "faults",
+    "FaultSpec": "faults",
+}
+
+
+def __getattr__(name: str):
+    if name in ("errors", "faults"):
+        return importlib.import_module(f".{name}", __name__)
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(f".{mod}", __name__), name)
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

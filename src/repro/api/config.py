@@ -63,6 +63,16 @@ class EngineConfig:
     fd_overlap: bool = True
     fd_update_mode: str = "auto"
     fd_b2_cells: int = 1 << 24
+    # hardened-runtime knobs (DESIGN.md §7) — service-layer only, never
+    # forwarded to the engine's ReceiptConfig:
+    #   memory_budget_bytes  Planner admission control: plans whose
+    #                        padded-bytes estimate exceeds this degrade
+    #                        to smaller FD groups (more partitions) or
+    #                        raise PlanInfeasibleError.  None = no limit.
+    #   fault_spec           arm the deterministic fault-injection
+    #                        harness (repro.api.faults grammar).
+    memory_budget_bytes: Optional[int] = None
+    fault_spec: Optional[str] = None
 
     def __post_init__(self):
         # normalize sequence-typed fields (from_dict hands us lists)
@@ -77,6 +87,20 @@ class EngineConfig:
                 f"dtype must be one of {_DTYPES} (got {self.dtype!r}): "
                 "the engine's exactness contract is the f32 integer "
                 "regime (DESIGN.md §8)")
+        if self.memory_budget_bytes is not None:
+            if int(self.memory_budget_bytes) <= 0:
+                raise ValueError(
+                    f"memory_budget_bytes must be a positive byte count "
+                    f"(got {self.memory_budget_bytes}); use None for no "
+                    "admission-control budget")
+            object.__setattr__(self, "memory_budget_bytes",
+                               int(self.memory_budget_bytes))
+        if self.fault_spec is not None:
+            # parse eagerly so a typo'd site name fails at construction
+            # (the did-you-mean error), not mid-fleet
+            from .faults import FaultSpec
+
+            FaultSpec.parse(self.fault_spec)
         # the engine floor: enum/range checks shared with ReceiptConfig
         # (constructing one runs its __post_init__)
         self.to_receipt_config()
@@ -101,12 +125,15 @@ class EngineConfig:
     # ------------------------------------------------------------------ #
     # conversions
     # ------------------------------------------------------------------ #
+    # service-layer-only fields the engine's ReceiptConfig never sees
+    _API_ONLY = ("side", "dtype", "memory_budget_bytes", "fault_spec")
+
     def to_receipt_config(self) -> ReceiptConfig:
-        """The engine-layer view of this config (drops ``side``, maps the
-        dtype string to the jnp dtype)."""
+        """The engine-layer view of this config (drops the service-layer
+        fields, maps the dtype string to the jnp dtype)."""
         kw = {f.name: getattr(self, f.name)
               for f in dataclasses.fields(self)
-              if f.name not in ("side", "dtype")}
+              if f.name not in self._API_ONLY}
         return ReceiptConfig(dtype=jnp.dtype(self.dtype).type, **kw)
 
     @staticmethod

@@ -30,9 +30,10 @@ handful of dispatches instead of a full pipeline per graph.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,9 +50,33 @@ from ..core.graph import BipartiteGraph
 from ..core.scheduler import lpt_assign, pack_by_shape
 from ..kernels import ops as kops
 from ..kernels.butterfly_sparse import batched_row_extents
+from ..train.fault_tolerance import StragglerMonitor
+from . import faults
+from .errors import (
+    FleetPartialFailure,
+    GraphValidationError,
+    KernelBackendError,
+    ReceiptError,
+    VerificationError,
+)
 from .plan import ExecutionPlan, Planner
 
-__all__ = ["Executor", "TipDecomposition", "decompose"]
+__all__ = ["Executor", "TipDecomposition", "decompose",
+           "verify_tip_decomposition"]
+
+# device-program failures the fallback chain recovers from: the taxonomy's
+# KernelBackendError (incl. injected faults) plus whatever the XLA runtime
+# raises for a failed executable
+try:
+    from jax.errors import JaxRuntimeError as _JaxRuntimeError
+
+    _KERNEL_FAILURES: Tuple = (KernelBackendError, _JaxRuntimeError)
+except ImportError:                                    # pragma: no cover
+    _KERNEL_FAILURES = (KernelBackendError,)
+
+# failures of a plan's PRIMARY backend before its signature is quarantined
+# onto the fallback backend (subsequent runs skip the primary entirely)
+_QUARANTINE_AFTER = 2
 
 
 # --------------------------------------------------------------------- #
@@ -117,6 +142,11 @@ class _CacheEntry:
         default_factory=dict)
     shape_floors: Dict[str, List[int]] = dataclasses.field(
         default_factory=dict)
+    # hardened runtime (DESIGN.md §7): per-signature failure bookkeeping.
+    # After _QUARANTINE_AFTER primary-backend failures the signature is
+    # quarantined — subsequent runs start directly on degraded_backend.
+    failures: int = 0
+    degraded_backend: Optional[str] = None
 
 
 class Executor:
@@ -130,7 +160,8 @@ class Executor:
     """
 
     def __init__(self, config=None, *, side: Optional[str] = None,
-                 mesh=None, map_stack_cells: int = 1 << 26):
+                 mesh=None, map_stack_cells: int = 1 << 26,
+                 guardrails: bool = True):
         self._planner = Planner(config, side=side)
         self.mesh = mesh
         self.map_stack_cells = int(map_stack_cells)
@@ -138,6 +169,17 @@ class Executor:
         self._hits = 0
         self._misses = 0
         self.last_map_report: Optional[Dict] = None
+        # hardened runtime (DESIGN.md §7).  guardrails=False strips the
+        # degradation machinery from the hot path (no input validation,
+        # no fault-point consults, no fallback wrapping, no straggler
+        # timing) — the comparator the bench gate measures overhead
+        # against; production executors keep the default.
+        self.guardrails = bool(guardrails)
+        api_cfg = self._planner.config
+        spec = api_cfg.fault_spec if api_cfg is not None else None
+        self._injector = faults.FaultInjector(spec) if spec else None
+        self._stragglers = StragglerMonitor()
+        self._fallback_runs = 0
 
     # ------------------------------------------------------------------ #
     @property
@@ -152,25 +194,115 @@ class Executor:
     @property
     def cache_stats(self) -> Dict[str, int]:
         return dict(entries=len(self._entries), hits=self._hits,
-                    misses=self._misses)
+                    misses=self._misses,
+                    quarantined=sum(1 for e in self._entries.values()
+                                    if e.degraded_backend is not None),
+                    fallback_runs=self._fallback_runs)
+
+    @property
+    def fault_report(self) -> List[Dict]:
+        """Per-rule hit/fire accounting of this executor's injector
+        (empty when ``EngineConfig.fault_spec`` is unset)."""
+        return self._injector.report() if self._injector else []
 
     def plan(self, graph: BipartiteGraph) -> ExecutionPlan:
         return self._planner.plan(graph, mesh=self.mesh)
+
+    def _fault_scope(self):
+        """Activate this executor's injector (env-armed faults apply
+        regardless through ``faults.active_injector``)."""
+        if self.guardrails and self._injector is not None:
+            return faults.inject(self._injector)
+        if not self.guardrails:
+            return faults.suppressed()
+        return contextlib.nullcontext()
 
     # ------------------------------------------------------------------ #
     # single-graph plan/compile/execute
     # ------------------------------------------------------------------ #
     def decompose(self, graph: BipartiteGraph,
-                  plan: Optional[ExecutionPlan] = None) -> TipDecomposition:
-        """Full RECEIPT decomposition of one graph through the cache."""
+                  plan: Optional[ExecutionPlan] = None, *,
+                  verify: bool = False) -> TipDecomposition:
+        """Full RECEIPT decomposition of one graph through the cache.
+
+        ``verify=True`` re-derives the paper's invariants from the result
+        (residual butterfly supports at each subset boundary, theta
+        containment/monotonicity — ``verify_tip_decomposition``) and
+        records the check count in ``RunStats``; a violation raises
+        ``VerificationError``.
+        """
         if plan is None:
             plan = self.plan(graph)
         entry = self._seed(plan)
-        theta, stats = _engine_tip_decompose(
-            graph, self.config, side=self.side, mesh=self.mesh, plan=plan)
+        theta, stats = self._execute(graph, plan, entry)
         self._absorb(plan, entry)
+        if verify:
+            stats.verify_checks = verify_tip_decomposition(
+                graph, self.side, theta, bounds=stats.bounds,
+                plan_signature=plan.signature)
+            stats.verified = True
         return TipDecomposition(graph=graph, side=self.side, theta=theta,
                                 stats=stats, plan=plan)
+
+    def _run_cfg(self, backend: str) -> ReceiptConfig:
+        """Engine config for one (possibly degraded) execution attempt."""
+        rcfg = self.config
+        kw = {}
+        if kops.resolve_backend(rcfg.backend) != backend:
+            kw["backend"] = backend
+        if self._planner.memory_budget is not None:
+            # admission control may have downshifted the partition count;
+            # the plan's value is authoritative (plan.num_partitions)
+            kw["num_partitions"] = self._admitted_partitions
+        return dataclasses.replace(rcfg, **kw) if kw else rcfg
+
+    def _execute(self, graph: BipartiteGraph, plan: ExecutionPlan,
+                 entry: _CacheEntry):
+        """Run the engine, walking the backend fallback chain on kernel
+        failure (DESIGN.md §7): ``pallas -> interpret -> xla`` (each stop
+        exact), quarantining the plan signature after repeated primary
+        failures so later same-signature runs skip the broken backend."""
+        self._admitted_partitions = plan.num_partitions
+        if not self.guardrails:
+            with self._fault_scope():
+                theta, stats = _engine_tip_decompose(
+                    graph, self._run_cfg(plan.backend), side=self.side,
+                    mesh=self.mesh, plan=plan)
+            stats.backend_used = plan.backend
+            return theta, stats
+        primary = plan.backend
+        start = entry.degraded_backend or primary
+        chain = kops.fallback_chain(start)
+        failed: List[str] = []
+        last: Optional[Exception] = None
+        with self._fault_scope():
+            for b in chain:
+                try:
+                    theta, stats = _engine_tip_decompose(
+                        graph, self._run_cfg(b), side=self.side,
+                        mesh=self.mesh, plan=plan)
+                except _KERNEL_FAILURES as e:
+                    failed.append(b)
+                    last = e
+                    if b == primary:
+                        entry.failures += 1
+                        nxt = kops.fallback_backend(b)
+                        if (entry.failures >= _QUARANTINE_AFTER
+                                and entry.degraded_backend is None
+                                and nxt is not None):
+                            entry.degraded_backend = nxt
+                    continue
+                stats.backend_used = b
+                stats.backend_fallbacks = list(failed)
+                stats.quarantined = entry.degraded_backend is not None
+                if failed:
+                    self._fallback_runs += 1
+                return theta, stats
+        raise KernelBackendError(
+            f"every backend in the fallback chain failed: "
+            f"{' -> '.join(chain)} (last: {type(last).__name__}: {last})",
+            plan_signature=plan.signature, dispatch=plan.cd_dispatch,
+            backend=chain[-1])
 
     def _seed(self, plan: ExecutionPlan) -> _CacheEntry:
         entry = self._entries.get(plan.signature)
@@ -204,7 +336,9 @@ class Executor:
     # ------------------------------------------------------------------ #
     # multi-graph batched decomposition
     # ------------------------------------------------------------------ #
-    def map(self, graphs: Sequence[BipartiteGraph]) -> List[TipDecomposition]:
+    def map(self, graphs: Sequence[BipartiteGraph], *,
+            strict: bool = False
+            ) -> List[Union[TipDecomposition, ReceiptError]]:
         """Decompose a fleet of small graphs in a handful of batched
         dispatches (module docstring).  Exact: bit-identical tip numbers
         to per-graph ``decompose``/``tip_decompose``.
@@ -215,6 +349,16 @@ class Executor:
         only on a ``max_sweeps`` cap-exit) and ONE blocking fetch.
         ``last_map_report`` records the dispatch accounting the bench
         and the acceptance tests compare against the sequential path.
+
+        **Fleet isolation** (DESIGN.md §7): one bad member does not sink
+        the fleet.  The returned list has one slot PER INPUT GRAPH — a
+        ``TipDecomposition`` for every healthy member, the member's own
+        ``ReceiptError`` for every failed one.  A chunk whose batched
+        dispatch fails is retried down the backend fallback chain, and
+        on the terminal backend each member is re-run alone so only the
+        genuinely bad graph carries an error.  ``strict=True`` restores
+        raise-on-any-failure as a ``FleetPartialFailure`` aggregating
+        the per-graph errors.
         """
         cfg = self.config
         if cfg.fd_mode != "level":
@@ -230,43 +374,75 @@ class Executor:
         t0 = time.perf_counter()
         backend = kops.resolve_backend(cfg.backend)
         blocks = cfg.kernel_blocks
-        tasks = [self._map_task(i, g) for i, g in enumerate(graphs)]
-        results: List[Optional[TipDecomposition]] = [None] * len(tasks)
-        report = dict(n_graphs=len(tasks), groups=0, chunks=0,
+        results: List[Optional[TipDecomposition]] = [None] * len(graphs)
+        errors: Dict[int, ReceiptError] = {}
+        report = dict(n_graphs=len(graphs), groups=0, chunks=0,
                       counting_dispatches=0, device_loop_calls=0,
                       host_round_trips=0, cache_hits=0, cache_misses=0,
-                      backend=backend, wall_s=0.0)
+                      backend=backend, wall_s=0.0,
+                      chunk_failures=0, chunk_retries=0, isolated_graphs=0,
+                      errors={}, stragglers=[])
+        with self._fault_scope():
+            tasks = []
+            for i, g in enumerate(graphs):
+                try:
+                    tasks.append(self._map_task(i, g))
+                except ReceiptError as e:
+                    errors[i] = e
 
-        groups = pack_by_shape(
-            [t for t in tasks if t is not None],
-            size_of=lambda t: (t["rows_pad"], t["cols_pad"]),
-            weight_of=lambda t: t["wedges"],
-            bucket=lambda n: n,        # tasks carry pre-bucketed shapes
-        )
-        report["groups"] = len(groups)
-        for group in groups:
-            mm, cc = group[0]["rows_pad"], group[0]["cols_pad"]
-            # LPT-chunk the group under the stack-cell budget: balanced
-            # chunks (by wedge mass), each one batched dispatch.  The
-            # fit count rounds DOWN to a power of two so the padded
-            # group dim (bucket(g, 1) in _map_chunk) never exceeds the
-            # budget the caller sized to device memory.
-            per_graph = mm * cc
-            n_fit = max(int(self.map_stack_cells // max(per_graph, 1)), 1)
-            n_fit = 1 << (n_fit.bit_length() - 1)
-            n_chunks = max(-(-len(group) // n_fit), 1)
-            chunks = lpt_assign([t["wedges"] for t in group], n_chunks)
-            for chunk_idx in chunks:
-                # LPT balances wedge mass, not counts — slice any chunk
-                # that still exceeds the fit count so the padded stack
-                # never overruns the budget
-                for lo_i in range(0, len(chunk_idx), n_fit):
-                    part = chunk_idx[lo_i:lo_i + n_fit]
-                    self._map_chunk([group[i] for i in part], mm, cc,
-                                    backend, blocks, results, report)
+            groups = pack_by_shape(
+                tasks,
+                size_of=lambda t: (t["rows_pad"], t["cols_pad"]),
+                weight_of=lambda t: t["wedges"],
+                bucket=lambda n: n,    # tasks carry pre-bucketed shapes
+            )
+            report["groups"] = len(groups)
+            for group in groups:
+                mm, cc = group[0]["rows_pad"], group[0]["cols_pad"]
+                # LPT-chunk the group under the stack-cell budget:
+                # balanced chunks (by wedge mass), each one batched
+                # dispatch.  The fit count rounds DOWN to a power of two
+                # so the padded group dim (bucket(g, 1) in _map_chunk)
+                # never exceeds the budget the caller sized to device
+                # memory.
+                per_graph = mm * cc
+                n_fit = max(int(self.map_stack_cells // max(per_graph, 1)),
+                            1)
+                n_fit = 1 << (n_fit.bit_length() - 1)
+                n_chunks = max(-(-len(group) // n_fit), 1)
+                chunks = lpt_assign([t["wedges"] for t in group], n_chunks)
+                for chunk_idx in chunks:
+                    # LPT balances wedge mass, not counts — slice any
+                    # chunk that still exceeds the fit count so the
+                    # padded stack never overruns the budget
+                    for lo_i in range(0, len(chunk_idx), n_fit):
+                        part = chunk_idx[lo_i:lo_i + n_fit]
+                        self._map_chunk_guarded(
+                            [group[i] for i in part], mm, cc, backend,
+                            blocks, results, report, errors)
+        # straggler flagging: per-chunk wall clocks EWMA'd in the shared
+        # StragglerMonitor; members of flagged chunks carry the mark
+        strag = set(self._stragglers.stragglers())
+        if strag:
+            report["stragglers"] = sorted(
+                s for s in strag if isinstance(s, tuple) and s[0] == "map")
+            for r in results:
+                if (r is not None
+                        and getattr(r.stats, "chunk_sig", None) in strag):
+                    r.stats.straggler = True
+        report["errors"] = {
+            i: f"{type(e).__name__}: {e}" for i, e in sorted(errors.items())}
         report["wall_s"] = time.perf_counter() - t0
         self.last_map_report = report
-        return [r for r in results if r is not None]
+        if errors and strict:
+            raise FleetPartialFailure(
+                "Executor.map(strict=True)", errors=errors,
+                n_ok=sum(1 for r in results if r is not None),
+                backend=backend)
+        out: List[Union[TipDecomposition, ReceiptError]] = list(results)
+        for i, e in errors.items():
+            out[i] = e
+        return out
 
     # ------------------------------------------------------------------ #
     def _map_task(self, idx: int, graph: BipartiteGraph) -> Dict:
@@ -275,9 +451,15 @@ class Executor:
         wedge-capable column compaction, bucketed shape."""
         cfg = self.config
         if not isinstance(graph, BipartiteGraph):
-            raise ValueError(
+            raise GraphValidationError(
                 f"Executor.map expects BipartiteGraphs, got "
-                f"{type(graph).__name__} at index {idx}")
+                f"{type(graph).__name__}", graph_index=idx)
+        if self.guardrails:
+            try:
+                graph.validate()
+            except GraphValidationError as e:
+                raise GraphValidationError(
+                    e.message, graph_index=idx, **e.context) from None
         g = graph.transposed() if self.side == "V" else graph
         if cfg.degree_sort:
             perm_u = np.argsort(-g.degrees_u(), kind="stable")
@@ -304,10 +486,83 @@ class Executor:
             wedges=float(sub.wedge_counts_u().sum()),
         )
 
+    def _map_chunk_guarded(self, chunk: List[Dict], mm: int, cc: int,
+                           backend: str, blocks, results: List,
+                           report: Dict, errors: Dict[int, ReceiptError]
+                           ) -> None:
+        """Fleet isolation around one chunk dispatch (DESIGN.md §7).
+
+        The batched dispatch is retried down the backend fallback chain
+        (whole chunk — the cheap case: a backend bug / injected launch
+        fault affects every member equally).  If the TERMINAL backend
+        still fails, members are re-run one at a time so the error is
+        pinned to the graph(s) that actually caused it; healthy members
+        of a failing chunk keep their (bit-identical) results.
+        """
+        if not self.guardrails:
+            self._map_chunk(chunk, mm, cc, backend, blocks, results,
+                            report)
+            return
+        chain = kops.fallback_chain(backend)
+        for j, b in enumerate(chain):
+            terminal = j == len(chain) - 1
+            try:
+                self._map_chunk(chunk, mm, cc, b, blocks, results, report)
+                if j:
+                    report["chunk_retries"] += 1
+                    self._fallback_runs += 1
+                return
+            except _KERNEL_FAILURES:
+                report["chunk_failures"] += 1
+                if not terminal:
+                    continue
+                if len(chunk) == 1:
+                    raise          # single member: the per-graph handler
+                #                  # below owns the error slot
+                # terminal backend, multi-member chunk: isolate per graph
+                for t in chunk:
+                    try:
+                        self._map_chunk([t], mm, cc, b, blocks, results,
+                                        report)
+                        report["isolated_graphs"] += 1
+                    except _KERNEL_FAILURES as e:
+                        errors[t["idx"]] = (
+                            e if isinstance(e, ReceiptError) else
+                            KernelBackendError(
+                                f"map chunk member failed on terminal "
+                                f"backend: {type(e).__name__}: {e}",
+                                backend=b, graph_index=t["idx"]))
+                return
+            except ReceiptError as e:
+                # non-kernel failure (overflow bound, injected map_chunk
+                # fault on the fetch): not a backend problem, isolate
+                # straight away
+                report["chunk_failures"] += 1
+                if len(chunk) == 1:
+                    errors[chunk[0]["idx"]] = e
+                    return
+                for t in chunk:
+                    try:
+                        self._map_chunk([t], mm, cc, b, blocks, results,
+                                        report)
+                        report["isolated_graphs"] += 1
+                    except (ReceiptError,) + _KERNEL_FAILURES as pe:
+                        errors[t["idx"]] = (
+                            pe if isinstance(pe, ReceiptError) else
+                            KernelBackendError(
+                                f"map chunk member failed: "
+                                f"{type(pe).__name__}: {pe}",
+                                backend=b, graph_index=t["idx"]))
+                return
+
     def _map_chunk(self, chunk: List[Dict], mm: int, cc: int, backend: str,
                    blocks, results: List, report: Dict) -> None:
         """Decompose one stacked chunk: batched counting + batched level
         peel + one fetch."""
+        t_chunk = time.perf_counter()
+        faults.fault_point(
+            "map_chunk", KernelBackendError, chunk=report["chunks"],
+            backend=backend, n_graphs=len(chunk))
         cfg = self.config
         sparse = backend in kops.SPARSE_BACKENDS
         g_real = len(chunk)
@@ -392,6 +647,10 @@ class Executor:
                 max_sweeps=cfg.max_sweeps, update_mode=update_mode)
             report["device_loop_calls"] += 1
         report["chunks"] += 1
+        chunk_id = ("map", mm, cc, report["chunks"])
+        if self.guardrails:
+            self._stragglers.record(chunk_id,
+                                    time.perf_counter() - t_chunk)
 
         for k, t in enumerate(chunk):
             theta = np.zeros(t["n_u"], np.int64)
@@ -401,8 +660,117 @@ class Executor:
             stats.rho_fd = int(rho_acc[k])
             stats.wedges_fd = int(wedges_acc[k])
             stats.wedges_pvbcnt = t["graph"].counting_wedge_bound()
+            stats.backend_used = backend
+            stats.chunk_sig = chunk_id     # straggler flagging key (map)
             results[t["idx"]] = TipDecomposition(
                 graph=t["graph"], side=self.side, theta=theta, stats=stats)
+
+
+# --------------------------------------------------------------------- #
+# verify mode: recompute the paper's invariants from the result
+# --------------------------------------------------------------------- #
+def _butterfly_supports_host(g: BipartiteGraph,
+                             members: np.ndarray) -> np.ndarray:
+    """Butterfly supports of ``members`` in their induced subgraph,
+    recomputed on the host with an INDEPENDENT formulation (float64
+    dense wedge matrix ``W = A @ A.T``, ``B[u] = sum_{u'!=u}
+    C(W[u,u'], 2)``) so verify mode shares no code with the kernels it
+    checks."""
+    pos = np.full(g.n_u, -1, np.int64)
+    pos[members] = np.arange(members.size)
+    keep = pos[g.edges_u] >= 0
+    a = np.zeros((members.size, g.n_v), np.float64)
+    a[pos[g.edges_u[keep]], g.edges_v[keep]] = 1.0
+    w = a @ a.T
+    cw = w * (w - 1.0) / 2.0
+    np.fill_diagonal(cw, 0.0)
+    return cw.sum(axis=1)
+
+
+def verify_tip_decomposition(graph: BipartiteGraph, side: str,
+                             theta: np.ndarray, *,
+                             bounds: Optional[Sequence[float]] = None,
+                             max_boundaries: int = 8,
+                             plan_signature=None) -> int:
+    """Check a claimed tip decomposition against RECEIPT's invariants;
+    returns the number of checks performed, raises ``VerificationError``
+    on the first violation.
+
+    Checks (DESIGN.md §7):
+
+    1. shape/domain: ``theta`` covers the peeled side, no negatives;
+    2. support bound: ``theta[u] <= B0[u]`` (a vertex's tip number never
+       exceeds its initial butterfly support — peeling only lowers it);
+    3. bound monotonicity: the CD subset bounds are non-decreasing and
+       ``theta.max() < bounds[-1]`` (Alg. 3's termination guarantee);
+    4. theta containment at each boundary ``b``: the member set
+       ``{u : theta[u] >= b}`` must be a b-tip — every member's support
+       INDUCED ON THE SET is >= b.  By maximality of the b-tip this
+       catches any upward-corrupted theta: a vertex that does not belong
+       drags its induced support below b.
+
+    Supports are recomputed host-side by an independent dense float64
+    formulation (``_butterfly_supports_host``) — no kernel code shared
+    with the path under test.
+    """
+    g = graph.transposed() if side == "V" else graph
+    th = np.asarray(theta)
+    checks = 0
+
+    def _fail(msg, **ctx):
+        raise VerificationError(msg, plan_signature=plan_signature, **ctx)
+
+    if th.shape != (g.n_u,):
+        _fail(f"theta shape {th.shape} != peeled side ({g.n_u},)")
+    checks += 1
+    if th.size == 0:
+        return checks
+    if np.any(th < 0):
+        _fail(f"negative tip numbers at "
+              f"{np.where(th < 0)[0][:4].tolist()}")
+    checks += 1
+
+    sup0 = _butterfly_supports_host(g, np.arange(g.n_u))
+    bad = np.where(th > sup0 + 0.5)[0]
+    if bad.size:
+        u = int(bad[0])
+        _fail(f"theta exceeds initial butterfly support: theta[{u}]="
+              f"{int(th[u])} > B0[{u}]={sup0[u]:.0f} "
+              f"({bad.size} violation(s))")
+    checks += 1
+
+    if bounds:
+        bs = [float(b) for b in bounds]
+        if any(b2 < b1 for b1, b2 in zip(bs, bs[1:])):
+            _fail(f"CD subset bounds not monotone: {bs}")
+        checks += 1
+        if float(th.max()) >= bs[-1]:
+            _fail(f"theta.max()={int(th.max())} >= terminal bound "
+                  f"{bs[-1]} (bounds[-1] must exceed theta_max)")
+        checks += 1
+        levels = sorted({b for b in bs if 0.0 < b < np.inf})
+    else:
+        # no CD bounds recorded (Executor.map results): probe up to
+        # max_boundaries distinct positive theta levels instead
+        uniq = np.unique(th[th > 0]).astype(np.float64)
+        if uniq.size > max_boundaries:
+            pick = np.linspace(0, uniq.size - 1, max_boundaries)
+            uniq = uniq[np.round(pick).astype(int)]
+        levels = [float(b) for b in uniq]
+
+    for b in levels:
+        members = np.where(th >= b)[0]
+        if members.size == 0:
+            continue
+        sup = _butterfly_supports_host(g, members)
+        low = np.where(sup < b - 0.5)[0]
+        if low.size:
+            u = int(members[low[0]])
+            _fail(f"theta containment violated at boundary {b:.0f}: "
+                  f"vertex {u} (theta={int(th[u])}) has induced support "
+                  f"{sup[low[0]]:.0f} < {b:.0f}", boundary=b)
+        checks += 1
+    return checks
 
 
 # --------------------------------------------------------------------- #
@@ -410,7 +778,8 @@ class Executor:
 # --------------------------------------------------------------------- #
 def decompose(graph: BipartiteGraph, config=None, *,
               side: Optional[str] = None, mesh=None,
-              plan: Optional[ExecutionPlan] = None) -> TipDecomposition:
+              plan: Optional[ExecutionPlan] = None,
+              verify: bool = False) -> TipDecomposition:
     """Plan + execute one decomposition on a fresh Executor.
 
     ``config`` may be an ``EngineConfig``, a legacy ``ReceiptConfig``
@@ -418,4 +787,5 @@ def decompose(graph: BipartiteGraph, config=None, *,
     cross-call measured-sizing reuse — byte-for-byte the legacy engine
     behavior; hold an ``Executor`` to get the executable cache.
     """
-    return Executor(config, side=side, mesh=mesh).decompose(graph, plan=plan)
+    return Executor(config, side=side, mesh=mesh).decompose(
+        graph, plan=plan, verify=verify)

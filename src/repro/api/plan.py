@@ -33,6 +33,7 @@ from ..core.engine.peel_loop import ReceiptConfig, bucket
 from ..core.graph import BipartiteGraph
 from ..kernels import ops as kops
 from .config import EngineConfig
+from .errors import PlanInfeasibleError
 
 __all__ = ["ExecutionPlan", "PlanMeasurements", "Planner"]
 
@@ -99,6 +100,12 @@ class ExecutionPlan:
     degree_sort: bool
     device_loop: bool
     padded_bytes: int                # device-memory estimate
+    memory_budget_bytes: Optional[int] = None   # admission-control budget
+    degraded_from_partitions: Optional[int] = None
+    #                                # set when admission control downshifted
+    #                                # the plan to smaller FD groups: the
+    #                                # config's ORIGINAL partition count
+    #                                # (num_partitions holds the admitted one)
     measured: PlanMeasurements = dataclasses.field(
         default_factory=PlanMeasurements)
 
@@ -159,11 +166,16 @@ class ExecutionPlan:
         est = ", ".join(
             f"{g['count']}x({g['rows']}x{g['cols']})"
             for g in self.est_fd_groups) or "none"
+        admit = ""
+        if self.degraded_from_partitions is not None:
+            admit = (f", admission-degraded from "
+                     f"P={self.degraded_from_partitions} under "
+                     f"{(self.memory_budget_bytes or 0) / 2**20:.1f} MiB")
         return (
             f"ExecutionPlan[{self.side}]: |U|={self.n_u} |V|={self.n_v} "
             f"m={self.m}\n"
             f"  device matrix : {self.rows_pad} x {self.cols_pad} "
-            f"(~{self.padded_bytes / 2**20:.1f} MiB padded)\n"
+            f"(~{self.padded_bytes / 2**20:.1f} MiB padded{admit})\n"
             f"  kernel route  : {self.kernel_route}, blocks="
             f"{self.kernel_blocks}\n"
             f"  CD            : dispatch={self.cd_dispatch!r}, "
@@ -200,10 +212,13 @@ class Planner:
             self.config = config
             self.rcfg = config.to_receipt_config()
             self.side = config.side
+            self.memory_budget = config.memory_budget_bytes
         elif isinstance(config, ReceiptConfig):
             self.config = None          # legacy currency: no strict view
             self.rcfg = config
             self.side = side or "U"
+            self.memory_budget = None   # admission control is a service-
+            #                           # layer feature (EngineConfig knob)
         else:
             raise ValueError(
                 f"Planner expects an EngineConfig or ReceiptConfig, got "
@@ -219,6 +234,7 @@ class Planner:
                 f"{type(graph).__name__}); ingest edge lists with "
                 "BipartiteGraph.from_edges or dense 0/1 matrices with "
                 "BipartiteGraph.from_dense")
+        graph.validate()
         cfg = self.rcfg
         g = graph.transposed() if self.side == "V" else graph
         backend = kops.resolve_backend(cfg.backend)
@@ -239,41 +255,100 @@ class Planner:
 
         # --- memory estimate ------------------------------------------- #
         itemsize = 4                                    # f32 regime
-        stack_cells = sum(g_["count"] * g_["rows"] * g_["cols"]
-                          for g_ in est_groups)
-        padded_bytes = itemsize * (
+        fixed_bytes = itemsize * (
             rows_pad * cols_pad                         # CD biadjacency
             + width0 * cols_pad                         # CD peel buffer
-            + stack_cells                               # FD stacks (est)
         )
+        stack_cells = sum(g_["count"] * g_["rows"] * g_["cols"]
+                          for g_ in est_groups)
+        padded_bytes = fixed_bytes + itemsize * stack_cells
+
+        # --- admission control (DESIGN.md §7) -------------------------- #
+        # Over-budget plans DEGRADE before they reject: re-partitioning
+        # resizes the FD stacks (subset sizes trade against per-group
+        # padding, so the estimate is NOT monotone in P — both directions
+        # are probed, nearest the requested count first), trading
+        # dispatch count for peak memory.  Only when the fixed CD
+        # footprint alone overflows, or no probed partitioning fits, is
+        # the plan infeasible.
+        admitted_p = cfg.num_partitions
+        degraded_from = None
+        budget = self.memory_budget
+        if budget is not None and padded_bytes > budget:
+            if fixed_bytes > budget:
+                raise PlanInfeasibleError(
+                    f"the CD device matrix alone needs {fixed_bytes} "
+                    f"padded bytes ({rows_pad} x {cols_pad} biadjacency + "
+                    f"{width0}-row peel buffer), over the "
+                    f"memory_budget_bytes={budget} admission budget — no "
+                    "FD downshift can help; raise the budget or shrink "
+                    "the graph/blocks",
+                    dispatch=cfg.cd_dispatch, backend=backend,
+                    padded_bytes=padded_bytes, budget=budget)
+            cands: List[int] = []
+            lo_p = hi_p = cfg.num_partitions
+            for _ in range(8):                      # bounded probe, near
+                lo_p = max(lo_p // 2, 1)            # to far in both
+                hi_p *= 2                           # directions
+                for q in (lo_p, hi_p):
+                    if q != cfg.num_partitions and q not in cands:
+                        cands.append(q)
+            best = (padded_bytes, admitted_p, est_groups, est_waste)
+            found = False
+            for p_try in cands:
+                groups_try, waste_try = self._estimate_fd_groups(
+                    g, cfg, backend, num_partitions=p_try)
+                cells = sum(g_["count"] * g_["rows"] * g_["cols"]
+                            for g_ in groups_try)
+                bytes_try = fixed_bytes + itemsize * cells
+                if bytes_try < best[0]:
+                    best = (bytes_try, p_try, groups_try, waste_try)
+                if bytes_try <= budget:
+                    best = (bytes_try, p_try, groups_try, waste_try)
+                    found = True
+                    break                           # first fit = nearest
+            padded_bytes, admitted_p, est_groups, est_waste = best
+            if not found and padded_bytes > budget:
+                raise PlanInfeasibleError(
+                    f"plan needs {padded_bytes} padded bytes, over the "
+                    f"memory_budget_bytes={budget} admission budget even "
+                    f"at the best probed partitioning ({admitted_p} "
+                    f"partitions; requested {cfg.num_partitions})",
+                    dispatch=cfg.cd_dispatch, backend=backend,
+                    padded_bytes=padded_bytes, budget=budget)
+            if admitted_p != cfg.num_partitions:
+                degraded_from = cfg.num_partitions
 
         mesh_shards = int(mesh.size) if mesh is not None else 0
         cfg_items = tuple(sorted(
             (f.name, _freeze(getattr(cfg, f.name)))
             for f in dataclasses.fields(cfg)))
         signature = (rows_pad, cols_pad, self.side, backend, mesh_shards,
-                     cfg_items)
+                     admitted_p, cfg_items)
         return ExecutionPlan(
             signature=signature,
             side=self.side, n_u=g.n_u, n_v=g.n_v, m=g.m,
             backend=backend, kernel_route=kops.route_label(backend),
             kernel_blocks=tuple(cfg.kernel_blocks),
             cd_dispatch=cfg.cd_dispatch,
-            num_partitions=cfg.num_partitions,
+            num_partitions=admitted_p,
             rows_pad=rows_pad, cols_pad=cols_pad,
             cd_peel_width0=width0,
             cd_host_syncs_bound=(2 if cfg.cd_dispatch == "graph"
-                                 else cfg.num_partitions + 1),
+                                 else admitted_p + 1),
             fd_mode=cfg.fd_mode, fd_update_policy=cfg.fd_update_mode,
             est_fd_groups=est_groups, est_fd_padding_waste=est_waste,
             mesh_shards=mesh_shards,
             degree_sort=cfg.degree_sort, device_loop=cfg.device_loop,
             padded_bytes=padded_bytes,
+            memory_budget_bytes=budget if budget is not None else None,
+            degraded_from_partitions=degraded_from,
         )
 
     # ------------------------------------------------------------------ #
     def _estimate_fd_groups(self, g: BipartiteGraph, cfg: ReceiptConfig,
-                            backend: str):
+                            backend: str,
+                            num_partitions: Optional[int] = None):
         """Wedge-equipartition ESTIMATE of the FD shape groups.
 
         CD partitions residual wedge mass roughly evenly over P subsets,
@@ -290,7 +365,8 @@ class Planner:
         row_align, col_align, _ = _aligns(cfg, backend)
         w = np.sort(g.wedge_counts_u().astype(np.float64))
         total = float(w.sum())
-        p = max(cfg.num_partitions, 1)
+        p = max(num_partitions if num_partitions is not None
+                else cfg.num_partitions, 1)
         if g.n_u == 0 or total <= 0:
             return [], 0.0
         cum = np.cumsum(w)

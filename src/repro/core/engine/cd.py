@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...api.errors import KernelBackendError, PeelOverflowError
+from ...api.faults import fault_point
 from ...kernels import ops as kops
 from ..graph import BipartiteGraph
 from .peel_loop import (
@@ -44,6 +46,13 @@ from .peel_loop import (
 )
 
 __all__ = ["receipt_cd", "cd_checkpoint_state", "find_hi_np"]
+
+# Bounded retry-with-widening (DESIGN.md §7): each overflow replay
+# doubles the peel buffer, and the buffer is clamped at the padded row
+# count, so a healthy run replays at most O(log rows_pad) times; the
+# bound exists to turn a buggy no-progress loop into a structured
+# PeelOverflowError instead of a hang.
+_MAX_OVERFLOW_REPLAYS = 64
 
 
 def find_hi_np(support: np.ndarray, w: np.ndarray, alive: np.ndarray,
@@ -178,6 +187,8 @@ def receipt_cd(
         # --- initial per-vertex counting (pvBcnt) ---------------------- #
         sparse = backend in kops.SPARSE_BACKENDS
         alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+        fault_point("kernel_launch", KernelBackendError,
+                    dispatch="subset", backend=backend, phase="count")
         support = support_all(dg.a, alive, dg.ids,
                               dg.kmax if sparse else None,
                               backend=backend, blocks=blocks)
@@ -239,7 +250,19 @@ def receipt_cd(
                     dg.rows_pad,
                     bucket(max(n_first, blocks[1]), blocks[1]),
                 ))
+            if fault_point("peel_buffer", dispatch="subset", subset=i,
+                           backend=backend):
+                # injected sizing fault: undersize the buffer to the
+                # smallest width the backend accepts (one row on xla,
+                # one block tile on the kernel routes) so the overflow
+                # replay path is forced on any larger sweep (degrade-
+                # style point — results stay exact through the replay +
+                # retry-with-widening)
+                peel_width = 1 if backend == "xla" else blocks[1]
+            replays = 0
             while True:
+                fault_point("kernel_launch", KernelBackendError,
+                            dispatch="subset", subset=i, backend=backend)
                 (support, alive, dv, _th, peeled, d_rho, d_wedges, d_hucs,
                  d_elided, d_covered, _d_sweeps, ovf) = device_peel_loop(
                     dg.a, dg.ids, dg.row_ext, dg.kmax, support, alive, dv,
@@ -266,7 +289,15 @@ def receipt_cd(
                 if bool(ovf_h):
                     # peel buffer overflow: replay this one sweep on the
                     # host at the precise bucket, re-enter with a wider
-                    # buffer
+                    # buffer (bounded retry-with-widening, DESIGN.md §7)
+                    replays += 1
+                    if replays > _MAX_OVERFLOW_REPLAYS:
+                        raise PeelOverflowError(
+                            f"peel-buffer overflow replay made no progress "
+                            f"after {_MAX_OVERFLOW_REPLAYS} widenings "
+                            f"(width={peel_width}, rows_pad={dg.rows_pad})",
+                            dispatch="subset", subset=i, backend=backend,
+                            peel_width=peel_width, rows_pad=dg.rows_pad)
                     stats.overflow_fallbacks += 1
                     support, alive, info = host_sweep(
                         dg, cfg, stats, support, alive, hi, lo, backend,
@@ -322,6 +353,8 @@ def receipt_cd(
         if n_alive == 0:
             break
         if cfg.use_dgm and n_alive < cfg.dgm_row_threshold * dg.rows_pad:
+            fault_point("dgm_boundary", KernelBackendError,
+                        dispatch="subset", subset=i, backend=backend)
             live = np.where(alive_np)[0]
             new_members = dg.members[live]
             sup_keep = sup_np[live]
@@ -408,6 +441,8 @@ def _receipt_cd_graph(
     stats.wedges_pvbcnt = g.counting_wedge_bound()
 
     alive = jnp.zeros(dg.rows_pad, bool).at[: dg.n_rows].set(True)
+    fault_point("kernel_launch", KernelBackendError,
+                dispatch="graph", backend=backend, phase="count")
     support = support_all(dg.a, alive, dg.ids,
                           dg.kmax if sparse else None,
                           backend=backend, blocks=blocks)
@@ -441,8 +476,18 @@ def _receipt_cd_graph(
         n_first = int((alive_np & (sup_np < hi0)).sum())
         peel_width = max(peel_width, min(
             dg.rows_pad, bucket(max(n_first, blocks[1]), blocks[1])))
+    if fault_point("peel_buffer", dispatch="graph", backend=backend):
+        # injected sizing fault: undersize the buffer to the smallest
+        # width the backend accepts (one row on xla, one block tile on
+        # the kernel routes) so the overflow replay is forced on any
+        # larger sweep (exact through the host replay +
+        # retry-with-widening)
+        peel_width = 1 if backend == "xla" else blocks[1]
     state = cd_graph_state0(dg, support, alive, p_total)
+    replays = 0
     while True:
+        fault_point("kernel_launch", KernelBackendError,
+                    dispatch="graph", backend=backend)
         state = device_cd_graph_loop(
             dg.ids, state,
             backend=backend, blocks=blocks, use_huc=cfg.use_huc,
@@ -455,8 +500,20 @@ def _receipt_cd_graph(
         if bool(st["done"]):
             break
         state = dict(state, iters=jnp.int32(0))   # fresh invocation budget
+        if int(st["dgm"]):
+            fault_point("dgm_boundary", KernelBackendError,
+                        dispatch="graph", backend=backend,
+                        compactions=int(st["dgm"]))
         if not bool(st["ovf"]):
             continue                              # max_sweeps cap-exit
+        replays += 1
+        if replays > _MAX_OVERFLOW_REPLAYS:
+            raise PeelOverflowError(
+                f"peel-buffer overflow replay made no progress after "
+                f"{_MAX_OVERFLOW_REPLAYS} widenings (width={peel_width}, "
+                f"rows_pad={dg.rows_pad})",
+                dispatch="graph", backend=backend,
+                peel_width=peel_width, rows_pad=dg.rows_pad)
         # peel-buffer overflow: replay this ONE sweep on the host at the
         # precise bucket — against the CARRIED residual graph (column-
         # permuted/compacted by the on-device DGM boundaries, so dg.a

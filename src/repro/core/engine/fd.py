@@ -65,6 +65,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...api.errors import KernelBackendError
+from ...api.faults import fault_point
 from ...kernels import ops as kops
 from ...kernels.butterfly_sparse import batched_row_extents
 from ..graph import BipartiteGraph, pad_to_multiple
@@ -455,6 +457,9 @@ def _run_level_groups(tasks, init_support, cfg, backend, stats, theta,
 
     def launch(built):
         g_n, mm, w1 = built["a"].shape[0], built["mm"], built["w1"]
+        fault_point("kernel_launch", KernelBackendError,
+                    dispatch="fd_level", backend=backend,
+                    group_shape=(g_n, mm))
         a_dev = jnp.asarray(built["a"], cfg.dtype)
         sup_dev = jnp.asarray(built["sup0"], cfg.dtype)
         alive_dev = jnp.asarray(built["alive0"])

@@ -240,6 +240,19 @@ class RunStats:
     time_count: float = 0.0
     time_cd: float = 0.0
     time_fd: float = 0.0
+    # hardened-runtime evidence (DESIGN.md §7): which backend actually
+    # produced the result, the degradation path that led there, and what
+    # the self-verification pass checked
+    backend_used: str = ""          # resolved backend the run completed on
+    backend_fallbacks: List[str] = dataclasses.field(default_factory=list)
+    #                               # backends that FAILED before this run
+    #                               # succeeded (the walked fallback chain)
+    quarantined: bool = False       # run started on a quarantined-signature
+    #                               # fallback backend (skipped the primary)
+    straggler: bool = False         # Executor.map flagged this graph's
+    #                               # chunk as a straggler (EWMA threshold)
+    verified: bool = False          # decompose(verify=True) ran + passed
+    verify_checks: int = 0          # invariant checks the verifier executed
 
     @property
     def wedges_total(self) -> int:

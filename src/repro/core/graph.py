@@ -14,6 +14,8 @@ V is never deleted.  The substrate provides:
     the KONECT datasets used in the paper) plus the paper's Fig.1 example.
 
 Everything here is host-side preprocessing: numpy only, no jax.
+(``repro.api.errors`` is a stdlib-only leaf module — importing it does
+not break that contract; the ``repro.api`` package initializer is lazy.)
 """
 from __future__ import annotations
 
@@ -21,6 +23,8 @@ import dataclasses
 from typing import Optional, Tuple
 
 import numpy as np
+
+from ..api.errors import GraphValidationError
 
 __all__ = [
     "BipartiteGraph",
@@ -61,9 +65,9 @@ class BipartiteGraph:
         ev = np.asarray(ev, dtype=np.int32)
         if eu.size:
             if eu.min() < 0 or eu.max() >= n_u:
-                raise ValueError("U endpoint out of range")
+                raise GraphValidationError("U endpoint out of range")
             if ev.min() < 0 or ev.max() >= n_v:
-                raise ValueError("V endpoint out of range")
+                raise GraphValidationError("V endpoint out of range")
         # dedup + canonical sort
         key = eu.astype(np.int64) * n_v + ev.astype(np.int64)
         key = np.unique(key)
@@ -72,23 +76,88 @@ class BipartiteGraph:
         return BipartiteGraph(n_u=n_u, n_v=n_v, edges_u=eu, edges_v=ev)
 
     @staticmethod
-    def from_dense(a) -> "BipartiteGraph":
+    def from_dense(a, *, binarize: bool = False) -> "BipartiteGraph":
         """Graph from a dense 0/1 biadjacency matrix (rows = U, cols = V).
 
         Accepts bool or numeric arrays; any entry other than 0 or 1 is
         rejected (weighted matrices have no butterfly semantics here).
+        NaN/inf entries and zero-size sides are always rejected.
+        ``binarize=True`` is the escape hatch for score/weight matrices:
+        every finite nonzero entry becomes an edge.
         """
         a = np.asarray(a)
         if a.ndim != 2:
-            raise ValueError(
+            raise GraphValidationError(
                 f"from_dense expects a 2-D biadjacency matrix, got shape "
                 f"{a.shape}")
-        if a.dtype != bool and not np.isin(a[a != 0], [1]).all():
-            raise ValueError(
-                "from_dense expects a 0/1 (or bool) biadjacency matrix; "
-                "found entries other than 0 and 1")
+        if a.shape[0] == 0 or a.shape[1] == 0:
+            raise GraphValidationError(
+                f"from_dense got a zero-size side (shape {a.shape}); an "
+                "empty vertex set has no dense biadjacency — construct an "
+                "edgeless graph explicitly with from_edges(n_u, n_v, [], [])")
+        if np.issubdtype(a.dtype, np.floating) and not np.isfinite(a).all():
+            bad = int((~np.isfinite(a)).sum())
+            raise GraphValidationError(
+                f"from_dense found {bad} NaN/inf entr"
+                f"{'y' if bad == 1 else 'ies'}; a biadjacency matrix must "
+                "be finite (binarize=True does not rescue non-finite input)")
+        if not binarize and a.dtype != bool:
+            nz = a[a != 0]
+            if not np.isin(nz, [1]).all():
+                n_neg = int((nz < 0).sum()) if np.issubdtype(
+                    a.dtype, np.number) else 0
+                detail = (f"including {n_neg} negative entr"
+                          f"{'y' if n_neg == 1 else 'ies'}; "
+                          if n_neg else "")
+                raise GraphValidationError(
+                    "from_dense expects a 0/1 (or bool) biadjacency matrix; "
+                    f"found entries other than 0 and 1 ({detail}weighted "
+                    "matrices have no butterfly semantics — pass "
+                    "binarize=True to treat every nonzero as an edge)")
         eu, ev = np.nonzero(a)
         return BipartiteGraph.from_edges(a.shape[0], a.shape[1], eu, ev)
+
+    # ------------------------------------------------------------------ #
+    # structural integrity
+    # ------------------------------------------------------------------ #
+    def validate(self) -> "BipartiteGraph":
+        """Structural integrity check; returns ``self`` or raises
+        ``GraphValidationError``.
+
+        ``from_edges``/``from_dense`` construct valid graphs, but the
+        dataclass is directly constructible (fleet inputs may arrive
+        deserialized), so the Executor re-checks before batching: sizes
+        non-negative, edge arrays integer / parallel / in range.
+        """
+        if not (isinstance(self.n_u, (int, np.integer))
+                and isinstance(self.n_v, (int, np.integer))):
+            raise GraphValidationError(
+                f"vertex-set sizes must be ints (got n_u="
+                f"{type(self.n_u).__name__}, n_v={type(self.n_v).__name__})")
+        if self.n_u < 0 or self.n_v < 0:
+            raise GraphValidationError(
+                f"vertex-set sizes must be >= 0 (got n_u={self.n_u}, "
+                f"n_v={self.n_v})")
+        eu, ev = np.asarray(self.edges_u), np.asarray(self.edges_v)
+        if eu.ndim != 1 or ev.ndim != 1 or eu.shape != ev.shape:
+            raise GraphValidationError(
+                f"edge endpoint arrays must be parallel 1-D (got shapes "
+                f"{eu.shape} and {ev.shape})")
+        if eu.size and not (np.issubdtype(eu.dtype, np.integer)
+                            and np.issubdtype(ev.dtype, np.integer)):
+            raise GraphValidationError(
+                f"edge endpoints must be integers (got dtypes {eu.dtype}, "
+                f"{ev.dtype})")
+        if eu.size:
+            if eu.min() < 0 or eu.max() >= self.n_u:
+                raise GraphValidationError(
+                    f"U endpoint out of range [0, {self.n_u}) "
+                    f"(min={eu.min()}, max={eu.max()})")
+            if ev.min() < 0 or ev.max() >= self.n_v:
+                raise GraphValidationError(
+                    f"V endpoint out of range [0, {self.n_v}) "
+                    f"(min={ev.min()}, max={ev.max()})")
+        return self
 
     # ------------------------------------------------------------------ #
     # basic accessors

@@ -51,6 +51,8 @@ __all__ = [
     "default_backend",
     "resolve_backend",
     "route_label",
+    "fallback_backend",
+    "fallback_chain",
     "KNOWN_BACKENDS",
     "SPARSE_BACKENDS",
 ]
@@ -97,6 +99,36 @@ def resolve_backend(backend: Optional[str]) -> str:
 def route_label(backend: Optional[str]) -> str:
     """Human-readable kernel route of a backend (ExecutionPlan field)."""
     return _ROUTE_LABELS[resolve_backend(backend)]
+
+
+# graceful-degradation routing (DESIGN.md §7): every backend's next stop
+# when its launches fail — compiled kernel -> same kernel body under the
+# interpreter -> the pure-jnp oracle.  All stops are exact (bit-identical
+# in the f32 integer regime), so degrading trades speed, never results.
+_FALLBACK_NEXT = {
+    "pallas": "interpret",
+    "pallas_sparse": "interpret_sparse",
+    "interpret": "xla",
+    "interpret_sparse": "xla",
+    "xla": None,
+}
+
+
+def fallback_backend(backend: Optional[str]) -> Optional[str]:
+    """The next backend in the degradation chain (None = end of chain)."""
+    return _FALLBACK_NEXT[resolve_backend(backend)]
+
+
+def fallback_chain(backend: Optional[str]) -> tuple:
+    """The full degradation chain starting AT ``backend`` (inclusive):
+    ``pallas -> interpret -> xla``, ``interpret_sparse -> xla``, ...
+    The Executor walks this on ``KernelBackendError`` (DESIGN.md §7)."""
+    b: Optional[str] = resolve_backend(backend)
+    chain = []
+    while b is not None:
+        chain.append(b)
+        b = _FALLBACK_NEXT[b]
+    return tuple(chain)
 
 
 @jax.jit

@@ -35,8 +35,13 @@ class RestartManager:
     ckpt: CheckpointManager
     save_every: int = 100
     max_failures: int = 10
+    # failure log bound: the newest entries win (a restart storm must not
+    # grow host memory without bound)
+    max_failure_log: int = 50
 
     failures: int = 0
+    failure_log: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)
 
     def maybe_save(self, step: int, state: Any, *, blocking: bool = False):
         if step % self.save_every == 0 and step > 0:
@@ -53,9 +58,26 @@ class RestartManager:
         return state, latest
 
     def record_failure(self, exc: BaseException) -> bool:
-        """Returns True if the run should restart, False to abort."""
+        """Returns True if the run should restart, False to abort.
+
+        Every failure is appended to a BOUNDED log (type, truncated
+        message, wall-clock time) so a post-mortem can reconstruct the
+        restart history without the manager growing without bound."""
         self.failures += 1
+        self.failure_log.append(dict(
+            type=type(exc).__name__,
+            message=str(exc)[:512],
+            time=time.time(),
+        ))
+        if len(self.failure_log) > self.max_failure_log:
+            del self.failure_log[: len(self.failure_log)
+                                 - self.max_failure_log]
         return self.failures <= self.max_failures
+
+    def failure_report(self) -> List[Dict[str, Any]]:
+        """The bounded failure log, oldest first (copies — safe to
+        mutate)."""
+        return [dict(e) for e in self.failure_log]
 
 
 class ElasticMesh:

@@ -175,7 +175,8 @@ def test_executor_cache_hits_and_misses():
     ex = Executor(_cfg())
     g1 = powerlaw_bipartite(100, 60, 700, seed=0)
     ex.decompose(g1)
-    assert ex.cache_stats == dict(entries=1, hits=0, misses=1)
+    assert ex.cache_stats == dict(entries=1, hits=0, misses=1,
+                                  quarantined=0, fallback_runs=0)
     ex.decompose(powerlaw_bipartite(100, 60, 700, seed=5))
     assert ex.cache_stats["hits"] == 1
     ex.decompose(powerlaw_bipartite(420, 60, 700, seed=0))  # new bucket

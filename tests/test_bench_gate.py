@@ -105,6 +105,34 @@ def test_gate_fails_on_cold_warm_fleet():
     assert any("warm_cache_hit_rate" in e for e in errors), errors
 
 
+def test_gate_fails_on_guardrail_overhead():
+    """The PR 6 seeded regression: the hardened runtime's guardrails
+    slowing the warm map path beyond the 5% acceptance budget."""
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    fresh["executor_map"]["bare_wall_warm_s"] = 1.0
+    fresh["executor_map"]["guarded_wall_warm_s"] = 1.2
+    fresh["executor_map"]["guardrail_overhead"] = 0.2
+    errors = bench_gate.gate(fresh, base, rel_tol=0.10)
+    assert any("guardrail_overhead" in e for e in errors), errors
+
+
+def test_gate_guardrail_overhead_absolute_slack():
+    """Sub-millisecond deltas are noise even at a large ratio — the
+    absolute slack must swallow them (and baselines without the PR 6
+    keys must not trip the gate at all)."""
+    base = _baseline()
+    fresh = copy.deepcopy(base)
+    fresh["executor_map"]["bare_wall_warm_s"] = 0.001
+    fresh["executor_map"]["guarded_wall_warm_s"] = 0.002
+    fresh["executor_map"]["guardrail_overhead"] = 1.0
+    assert bench_gate.gate(fresh, base, rel_tol=0.10) == []
+    fresh["executor_map"].pop("guardrail_overhead")
+    fresh["executor_map"].pop("guarded_wall_warm_s")
+    fresh["executor_map"].pop("bare_wall_warm_s")
+    assert bench_gate.gate(fresh, base, rel_tol=0.10) == []
+
+
 def test_gate_fails_on_dropped_map_section():
     base = _baseline()
     fresh = copy.deepcopy(base)
