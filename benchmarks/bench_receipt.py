@@ -51,12 +51,16 @@ def _load_gate_constants():
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
     return (mod.OVF_RT_SURCHARGE, mod.WEDGE_RATIO_TOL,
-            mod.MAP_DISPATCH_MIN_REDUCTION, mod.MAP_HIT_RATE_MIN)
+            mod.MAP_DISPATCH_MIN_REDUCTION, mod.MAP_HIT_RATE_MIN,
+            mod.TILED_WALL_MAX_RATIO)
 
 
 (OVF_RT_SURCHARGE, WEDGE_RATIO_TOL,
- MAP_DISPATCH_MIN_REDUCTION, MAP_HIT_RATE_MIN) = _load_gate_constants()
+ MAP_DISPATCH_MIN_REDUCTION, MAP_HIT_RATE_MIN,
+ TILED_WALL_MAX_RATIO) = _load_gate_constants()
 
+from datasets import DATASETS
+from repro.core.graph import powerlaw_bipartite
 from repro.core.peeling import bup_oracle
 from repro.core.receipt import (
     ReceiptConfig,
@@ -66,11 +70,44 @@ from repro.core.receipt import (
 from repro.data.synthetic import interaction_graph
 
 GRAPHS = [
-    # (name, n_users, n_items, n_interactions)
-    ("pl_small", 512, 256, 4_000),
-    ("pl_medium", 1_024, 512, 8_000),
-    ("pl_large", 2_048, 1_024, 16_000),
+    # (name, builder) — interaction graphs (KONECT-shaped power law) plus
+    # the paper-regime dataset matrix (benchmarks/datasets.py, Table 2):
+    # every entry gets the full engine suite AND the name-matched
+    # deterministic-counter gates in scripts/bench_gate.py
+    ("pl_small", lambda: interaction_graph(512, 256, 4_000, seed=7)),
+    ("pl_medium", lambda: interaction_graph(1_024, 512, 8_000, seed=7)),
+    ("pl_large", lambda: interaction_graph(2_048, 1_024, 16_000, seed=7)),
+    ("itu_like", DATASETS["itu_like"]),
+    ("tru_like", DATASETS["tru_like"]),
+    ("dev_like", DATASETS["dev_like"]),
+    ("orv_like", DATASETS["orv_like"]),
 ]
+
+# dense-vs-tiled representation matrix: the regime graphs (tile
+# occupancy near 1 — dense territory) plus genuinely sparse graphs
+# above the Planner's min-size floor (occupancy << 1 — tiled territory).
+# The measured crossover between the two cohorts is what the Planner's
+# routing constants (repro/api/plan.py TILED_OCCUPANCY_CROSSOVER /
+# TILED_MIN_DENSE_CELLS) must bracket; bench_gate.py enforces it.
+REPRESENTATION_GRAPHS = [
+    ("itu_like", DATASETS["itu_like"]),
+    ("tru_like", DATASETS["tru_like"]),
+    ("dev_like", DATASETS["dev_like"]),
+    ("orv_like", DATASETS["orv_like"]),
+    ("sp_quick", lambda: powerlaw_bipartite(1_024, 1_024, 6_000,
+                                            alpha_u=2.0, alpha_v=2.0,
+                                            seed=11)),
+    # the sparse ladder that brackets the wall crossover: sp_mid is the
+    # densest cell count where dense still wins (barely), sp_large is
+    # where the tiled engine's O(n_slots) sweeps beat the dense matmul
+    ("sp_mid", lambda: powerlaw_bipartite(4_096, 4_096, 24_000,
+                                          alpha_u=2.0, alpha_v=2.0,
+                                          seed=14)),
+    ("sp_large", lambda: powerlaw_bipartite(8_192, 8_192, 32_000,
+                                            alpha_u=2.0, alpha_v=2.0,
+                                            seed=15)),
+]
+REPRESENTATION_QUICK = ("itu_like", "dev_like", "sp_quick")
 
 
 def _stats_dict(stats) -> dict:
@@ -110,9 +147,8 @@ def _run_engine(fn, *args, **kw):
     return out, stats, cold, warm, fd_warm
 
 
-def bench_graph(name: str, n_u: int, n_v: int, m: int, *,
-                partitions: int, check: bool) -> dict:
-    g = interaction_graph(n_u, n_v, m, seed=7)
+def bench_graph(name: str, builder, *, partitions: int, check: bool) -> dict:
+    g = builder()
     rec = {"name": name, "n_u": g.n_u, "n_v": g.n_v, "m": g.m,
            "num_partitions": partitions, "engines": {}}
 
@@ -233,6 +269,98 @@ def bench_graph(name: str, n_u: int, n_v: int, m: int, *,
     return rec
 
 
+def bench_representations(*, quick: bool, check: bool) -> dict:
+    """Dense vs tiled representation matrix (ISSUE 7 tentpole).
+
+    For each graph: the full dense CD+FD pipeline and the tiled
+    whole-graph level-peel engine, both on the xla backend (CPU CI), with
+    traversed-wedge counters and warm walls; plus the Planner's routing
+    verdict for representation="auto" and its cost-model inputs.  The
+    measured dense/tiled crossover (highest tiled-winning occupancy vs
+    lowest dense-winning) is recorded so bench_gate.py can assert the
+    Planner's routing constants bracket what was actually measured —
+    the constants are provenanced here, never guessed.
+    """
+    from repro.api import EngineConfig, Planner
+    from repro.api.plan import (
+        TILED_MIN_DENSE_CELLS,
+        TILED_OCCUPANCY_CROSSOVER,
+    )
+
+    names = REPRESENTATION_QUICK if quick else None
+    records = []
+    for name, builder in REPRESENTATION_GRAPHS:
+        if names is not None and name not in names:
+            continue
+        g = builder()
+        plan = Planner(EngineConfig(backend="xla")).plan(g)
+        theta_ref = None
+        if check and g.n_u * g.n_v <= 1 << 22:
+            # the host oracle is O(n_u^2); on the big sparse-ladder
+            # graphs the dense<->tiled bit-identity check below is the
+            # (still exact) stand-in — the dense pipeline is itself
+            # oracle-checked on every regime graph
+            theta_ref, _ = bup_oracle(g)
+        entry = {"name": name, "n_u": g.n_u, "n_v": g.n_v, "m": g.m,
+                 "tile_occupancy": plan.cost_model["tile_occupancy"],
+                 "dense_cells": plan.cost_model["dense_cells"],
+                 # representation footprints (roofline_report --tiled)
+                 "dense_bytes": plan.cost_model["dense_fixed_bytes"],
+                 "tiled_bytes": plan.cost_model["tiled_bytes"],
+                 "n_tiles": plan.cost_model["n_tiles"],
+                 "routed": plan.representation}
+        thetas = {}
+        for label, rep in (("dense", "dense"), ("tiled", "tiled")):
+            cfg = ReceiptConfig(backend="xla", representation=rep)
+            theta, stats, cold, warm, _ = _run_engine(tip_decompose, g, cfg)
+            thetas[label] = np.asarray(theta)
+            if theta_ref is not None:
+                assert (np.asarray(theta) == theta_ref).all(), (
+                    f"{name}/{label}: theta mismatch vs BUP oracle")
+            entry[label] = {
+                "wall_cold_s": cold, "wall_warm_s": warm,
+                "wedges_traversed": stats.wedges_cd + stats.wedges_fd,
+                "rho": stats.rho_cd + stats.rho_fd,
+            }
+        if check:
+            assert (thetas["dense"] == thetas["tiled"]).all(), (
+                f"{name}: dense and tiled theta diverged")
+        entry["wedge_ratio"] = (
+            entry["tiled"]["wedges_traversed"]
+            / max(entry["dense"]["wedges_traversed"], 1))
+        entry["wall_ratio_warm"] = (
+            entry["tiled"]["wall_warm_s"]
+            / max(entry["dense"]["wall_warm_s"], 1e-9))
+        records.append(entry)
+        print(f"  {name:10s} occ={entry['tile_occupancy']:.3f} "
+              f"routed={entry['routed']:5s} "
+              f"wedges tiled/dense={entry['wedge_ratio']:.3f} "
+              f"wall tiled/dense={entry['wall_ratio_warm']:.2f}", flush=True)
+
+    tiled_wins = [r["tile_occupancy"] for r in records
+                  if r["wall_ratio_warm"] <= 1.0]
+    dense_wins = [r["tile_occupancy"] for r in records
+                  if r["wall_ratio_warm"] > 1.0]
+    rec = {
+        "graphs": records,
+        "occupancy_crossover": TILED_OCCUPANCY_CROSSOVER,
+        "min_dense_cells": TILED_MIN_DENSE_CELLS,
+        "measured": {
+            # the wall-clock crossover bracket this run observed (None
+            # when a side is empty, e.g. the quick subset)
+            "max_tiled_win_occupancy": max(tiled_wins) if tiled_wins
+            else None,
+            "min_dense_win_occupancy": min(dense_wins) if dense_wins
+            else None,
+        },
+    }
+    print(f"[bench_receipt] representations: tiled wins up to occupancy "
+          f"{rec['measured']['max_tiled_win_occupancy']}, dense wins from "
+          f"{rec['measured']['min_dense_win_occupancy']} "
+          f"(routing constant {TILED_OCCUPANCY_CROSSOVER})", flush=True)
+    return rec
+
+
 def bench_executor_map(*, n_graphs: int = 12, check: bool = True) -> dict:
     """Multi-graph batched decomposition (PR 5): ``Executor.map`` over a
     fleet of small cohort graphs vs a sequential per-graph
@@ -336,13 +464,16 @@ def main(argv=None) -> int:
 
     graphs = GRAPHS[:1] if args.quick else GRAPHS
     results = []
-    for name, n_u, n_v, m in graphs:
-        print(f"[bench_receipt] {name}: n_u={n_u} n_v={n_v} m~{m}",
-              flush=True)
+    for name, builder in graphs:
+        print(f"[bench_receipt] {name}", flush=True)
         results.append(bench_graph(
-            name, n_u, n_v, m, partitions=args.partitions,
+            name, builder, partitions=args.partitions,
             check=not args.no_check,
         ))
+
+    print("[bench_receipt] representations (dense vs tiled)", flush=True)
+    representations = bench_representations(
+        quick=args.quick, check=not args.no_check)
 
     exec_map = bench_executor_map(
         n_graphs=8 if args.quick else 12, check=not args.no_check)
@@ -352,6 +483,7 @@ def main(argv=None) -> int:
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend": "xla (CPU)",
         "graphs": results,
+        "representations": representations,
         "executor_map": exec_map,
     }
     Path(args.out).write_text(json.dumps(payload, indent=2))
@@ -382,6 +514,19 @@ def main(argv=None) -> int:
                   f"FAILED (rt_ok={rt_ok}, wedge_ratio="
                   f"{r['derived']['cd_graph_wedge_ratio']:.3f})")
         ok = ok and rt_ok and wedge_ok
+    # tiled representation (ISSUE 7 acceptance): on every graph the cost
+    # model routes tiled, the tiled engine must traverse no more wedges
+    # than the dense pipeline and keep warm wall within the gate ratio
+    for r in representations["graphs"]:
+        if r["routed"] != "tiled":
+            continue
+        t_ok = (r["wedge_ratio"] <= 1.0
+                and r["wall_ratio_warm"] <= TILED_WALL_MAX_RATIO)
+        if not t_ok:
+            print(f"[bench_receipt] {r['name']}: tiled-representation "
+                  f"gate FAILED (wedge_ratio={r['wedge_ratio']:.3f}, "
+                  f"wall_ratio={r['wall_ratio_warm']:.2f})")
+        ok = ok and t_ok
     if not args.quick:
         # wall-clock criteria run on the FULL bench only: --quick is the
         # per-push CI smoke (scripts/ci.sh quick fails on this exit

@@ -1,12 +1,23 @@
 """Render the EXPERIMENTS.md roofline table from results/dryrun.json.
 
     PYTHONPATH=src python -m benchmarks.roofline_report [results/dryrun.json]
+    PYTHONPATH=src python -m benchmarks.roofline_report --tiled BENCH.json
 
 Per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
 MODEL_FLOPS/HLO_FLOPs utility ratio, peak-memory check, and the
 roofline fraction (t_compute / t_bound).  Also nominates the three
 hillclimb cells (worst fraction / most collective-bound / most
 paper-representative).
+
+``--tiled`` instead renders the dense-vs-tiled representation roofline
+from a bench_receipt.py JSON (the ISSUE 7 ``representations`` section):
+per graph, the bytes each representation holds resident and the
+count-sweep flops it issues.  The flops ratio IS the tile occupancy —
+the band-streaming update does ``2 * n_slots * bi^2 * bk`` flops per
+row band against dense's ``2 * rows^2 * cols`` whole-matrix product,
+which cancels to ``n_tiles / (n_row_tiles * n_col_tiles)`` — so the
+table makes the cost model's routing inputs auditable next to the
+measured walls.
 """
 from __future__ import annotations
 
@@ -26,6 +37,42 @@ def fmt_b(x):
     if not x:
         return "    -"
     return f"{x/1e9:7.2f}GB"
+
+
+def tiled_table(path="BENCH_receipt.json"):
+    """Dense-vs-tiled representation roofline from a bench JSON."""
+    payload = json.load(open(path))
+    rep = payload.get("representations")
+    if not rep:
+        print(f"{path}: no 'representations' section (run "
+              "benchmarks/bench_receipt.py from this checkout)")
+        return 1
+    print("| graph | occ | routed | dense bytes | tiled bytes | "
+          "bytes ratio | dense sweep flops | tiled sweep flops | "
+          "warm wall ratio |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rep.get("graphs", []):
+        db, tb = r.get("dense_bytes"), r.get("tiled_bytes")
+        if db is None or tb is None:
+            continue                    # pre-ISSUE-7 baseline record
+        occ = r["tile_occupancy"]
+        # one whole-graph count sweep: dense W = A A^T is
+        # 2 * rows^2 * cols flops; the tiled band-streaming oracle does
+        # the occupancy fraction of it (zero tiles have no slot)
+        dense_flops = 2.0 * r["n_u"] * r["n_u"] * r["n_v"]
+        tiled_flops = occ * dense_flops
+        print(f"| {r['name']} | {occ:.3f} | {r['routed']} "
+              f"| {db / 2**20:7.1f}MiB | {tb / 2**20:7.1f}MiB "
+              f"| {tb / db:.3f} "
+              f"| {dense_flops:.2e} | {tiled_flops:.2e} "
+              f"| {r['wall_ratio_warm']:.2f} |")
+    meas = rep.get("measured") or {}
+    lo = meas.get("max_tiled_win_occupancy")
+    if lo is not None:
+        print(f"\nmeasured crossover: tiled wins on wall up to "
+              f"occupancy {lo:.3f} (routing constant "
+              f"{rep.get('occupancy_crossover')})")
+    return 0
 
 
 def main(path="results/dryrun.json"):
@@ -68,4 +115,6 @@ def main(path="results/dryrun.json"):
 
 
 if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--tiled":
+        sys.exit(tiled_table(*sys.argv[2:]))
     main(*sys.argv[1:])

@@ -62,6 +62,13 @@ MAP_HIT_RATE_MIN = 0.99
 # sub-millisecond regime where the ratio is meaningless.
 GUARD_OVERHEAD_MAX = 0.05
 GUARD_OVERHEAD_ABS_SLACK_S = 0.005
+# Tiled representation acceptance (ISSUE 7): on every bench graph the
+# cost model routes tiled, the tiled engine must traverse AT MOST the
+# dense pipeline's wedge count (the whole point of skipping zero tiles)
+# and keep warm wall within 1.2x of dense at the measured crossover —
+# wall is gated here (despite runner noise) because the ratio compares
+# two walls from the SAME process, like the guardrail gate above.
+TILED_WALL_MAX_RATIO = 1.2
 
 
 def _graphs_by_name(payload: dict) -> dict:
@@ -126,6 +133,58 @@ def gate(fresh: dict, baseline: dict, rel_tol: float) -> list:
                     continue
                 _check_rel(errors, name, f"cd[{disp}].{metric}",
                            fv, bv, rel_tol)
+
+    # --- representation routing: dense vs tiled (ISSUE 7) ------------- #
+    f_rep = fresh.get("representations")
+    if baseline.get("representations") is not None and f_rep is None:
+        errors.append("representations section missing from the fresh run "
+                      "(the dense-vs-tiled bench stopped running)")
+    elif f_rep is not None:
+        occ_x = f_rep.get("occupancy_crossover")
+        min_cells = f_rep.get("min_dense_cells")
+        for r in f_rep.get("graphs", []):
+            name = r["name"]
+            # routing-constant consistency: the Planner must route tiled
+            # exactly where the recorded constants say it should
+            should_tile = (r["tile_occupancy"] <= occ_x
+                           and r["dense_cells"] >= min_cells)
+            routed_tiled = r["routed"] == "tiled"
+            if should_tile != routed_tiled:
+                errors.append(
+                    f"representations[{name}]: cost model routed "
+                    f"{r['routed']!r} but occupancy="
+                    f"{r['tile_occupancy']:.3f} / cells={r['dense_cells']} "
+                    f"against crossover {occ_x} / min cells {min_cells} "
+                    f"says {'tiled' if should_tile else 'dense'}")
+            if not routed_tiled:
+                continue
+            # sparse-regime acceptance: tiled traverses no more wedges
+            # than dense, and warm wall stays within the gate ratio
+            if r["wedge_ratio"] > 1.0:
+                errors.append(
+                    f"representations[{name}]: tiled traversed MORE "
+                    f"wedges than dense (ratio {r['wedge_ratio']:.3f}) — "
+                    "the nonzero-tile skip stopped paying")
+            if r["wall_ratio_warm"] > TILED_WALL_MAX_RATIO:
+                errors.append(
+                    f"representations[{name}]: tiled warm wall "
+                    f"{r['wall_ratio_warm']:.2f}x dense > "
+                    f"{TILED_WALL_MAX_RATIO}x at measured crossover")
+        # the measured crossover must bracket the routing constant: when
+        # the run includes tiled-routed graphs (the full bench's sparse
+        # ladder), some graph must actually win on wall — a kernel
+        # regression that flips the winners fails loudly.  Quick runs
+        # only carry dense-routed graphs; their wedge/routing gates
+        # above still bind.
+        any_tiled = any(r["routed"] == "tiled"
+                        for r in f_rep.get("graphs", []))
+        meas = f_rep.get("measured", {})
+        lo = meas.get("max_tiled_win_occupancy")
+        if any_tiled and lo is None:
+            errors.append(
+                "representations: no tiled-routed graph won on wall — "
+                "the tiled kernels regressed or the bench lost its "
+                "sparse-regime graphs")
 
     # --- Executor.map: batched multi-graph decomposition (PR 5) ------- #
     f_map = fresh.get("executor_map")

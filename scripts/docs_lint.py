@@ -99,6 +99,12 @@ SYMBOL_SECTIONS = {
         "repro.kernels.ops.fallback_chain",
         "repro.api.verify_tip_decomposition",
     ],
+    "## 9. Representation routing": [
+        "repro.core.graph.TiledGraph",
+        "repro.kernels.butterfly_tiled",
+        "repro.core.engine.tiled.receipt_tiled",
+        "repro.api.plan.TILED_OCCUPANCY_CROSSOVER",
+    ],
 }
 
 

@@ -63,6 +63,15 @@ class EngineConfig:
     fd_overlap: bool = True
     fd_update_mode: str = "auto"
     fd_b2_cells: int = 1 << 24
+    representation: str = "auto"
+    #   biadjacency layout: "dense" (padded matrix through CD + FD),
+    #   "tiled" (nonzero-block slot list through the whole-graph
+    #   level-peel engine), or "auto" — the Planner's cost model picks
+    #   per graph (DESIGN.md §9: dense below the measured density/size
+    #   crossover, tiled above it or whenever the dense matrix would
+    #   blow the memory budget).  The engine default is "dense";
+    #   the service layer defaults to routing.
+    tiled_regather_every: int = 1
     # hardened-runtime knobs (DESIGN.md §7) — service-layer only, never
     # forwarded to the engine's ReceiptConfig:
     #   memory_budget_bytes  Planner admission control: plans whose

@@ -180,6 +180,8 @@ class Executor:
         self._injector = faults.FaultInjector(spec) if spec else None
         self._stragglers = StragglerMonitor()
         self._fallback_runs = 0
+        self._admitted_partitions = self.config.num_partitions
+        self._plan_representation = "dense"
 
     # ------------------------------------------------------------------ #
     @property
@@ -254,6 +256,10 @@ class Executor:
             # admission control may have downshifted the partition count;
             # the plan's value is authoritative (plan.num_partitions)
             kw["num_partitions"] = self._admitted_partitions
+        if rcfg.representation != self._plan_representation:
+            # the Planner's cost model resolved "auto" (or admission
+            # control rerouted); the plan's representation is authoritative
+            kw["representation"] = self._plan_representation
         return dataclasses.replace(rcfg, **kw) if kw else rcfg
 
     def _execute(self, graph: BipartiteGraph, plan: ExecutionPlan,
@@ -263,6 +269,7 @@ class Executor:
         exact), quarantining the plan signature after repeated primary
         failures so later same-signature runs skip the broken backend."""
         self._admitted_partitions = plan.num_partitions
+        self._plan_representation = plan.representation
         if not self.guardrails:
             with self._fault_scope():
                 theta, stats = _engine_tip_decompose(

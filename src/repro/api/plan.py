@@ -37,6 +37,31 @@ from .errors import PlanInfeasibleError
 
 __all__ = ["ExecutionPlan", "PlanMeasurements", "Planner"]
 
+# ---------------------------------------------------------------------- #
+# dense -> tiled routing crossover (representation="auto")
+#
+# The tiled wedge kernel visits ``n_row_tiles * n_slots`` tile pairs
+# where the dense kernel's grid is ``n_row_tiles * n_col_tiles *
+# n_row_tiles`` — so the work ratio is the TILE-GRID OCCUPANCY
+# ``n_slots / (n_row_tiles * n_col_tiles)``.  Both constants are
+# MEASURED, not guessed: benchmarks/bench_receipt.py's "representations"
+# section times dense vs tiled across the paper-regime graphs
+# (benchmarks/datasets.py) plus a sparse power-law ladder and records
+# the observed winners in BENCH_receipt.json; bench_gate.py asserts
+# these constants bracket the measurement.  At occupancy ~1 the tiled
+# form is pure overhead (same tile pairs + gather indirection); the
+# measured warm walls on the ladder (xla backend) put the crossover
+# between sp_mid (occupancy 0.033, 2^24 dense cells, dense wins at
+# 1.08x) and sp_large (occupancy 0.025, 2^25 cells, tiled wins at
+# 0.58x), so routing fires at occupancy <= 0.03 AND >= 2^24 padded
+# dense cells — below that cell count the dense matmul's constant
+# factor wins at any sparsity we measured.  Memory admission overrides
+# the speed crossover: when the dense matrix cannot fit the budget,
+# tiled is chosen regardless.
+# ---------------------------------------------------------------------- #
+TILED_OCCUPANCY_CROSSOVER = 0.03
+TILED_MIN_DENSE_CELLS = 1 << 24
+
 
 @dataclasses.dataclass
 class PlanMeasurements:
@@ -100,6 +125,14 @@ class ExecutionPlan:
     degree_sort: bool
     device_loop: bool
     padded_bytes: int                # device-memory estimate
+    representation: str = "dense"    # resolved biadjacency layout:
+    #                                # "dense" | "tiled" (never "auto" —
+    #                                # the Planner's cost model resolves
+    #                                # the knob; part of the signature)
+    cost_model: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #                                # the routing decision's inputs:
+    #                                # dense/tiled byte+work estimates,
+    #                                # tile occupancy, crossover constants
     memory_budget_bytes: Optional[int] = None   # admission-control budget
     degraded_from_partitions: Optional[int] = None
     #                                # set when admission control downshifted
@@ -171,9 +204,14 @@ class ExecutionPlan:
             admit = (f", admission-degraded from "
                      f"P={self.degraded_from_partitions} under "
                      f"{(self.memory_budget_bytes or 0) / 2**20:.1f} MiB")
+        occ = self.cost_model.get("tile_occupancy")
+        rep = self.representation
+        if rep == "tiled" and occ is not None:
+            rep += f" (occupancy {occ:.2f})"
         return (
             f"ExecutionPlan[{self.side}]: |U|={self.n_u} |V|={self.n_v} "
             f"m={self.m}\n"
+            f"  representation: {rep}\n"
             f"  device matrix : {self.rows_pad} x {self.cols_pad} "
             f"(~{self.padded_bytes / 2**20:.1f} MiB padded{admit})\n"
             f"  kernel route  : {self.kernel_route}, blocks="
@@ -263,6 +301,39 @@ class Planner:
                           for g_ in est_groups)
         padded_bytes = fixed_bytes + itemsize * stack_cells
 
+        # --- representation routing (DESIGN.md §9) --------------------- #
+        # "auto" resolves against the measured occupancy/size crossover
+        # (module constants above), with memory admission overriding the
+        # speed heuristic: a dense matrix that cannot fit the budget
+        # routes tiled regardless of density.  The mesh FD driver is
+        # dense-only, so a sharded executor always plans dense.
+        mesh_shards = int(mesh.size) if mesh is not None else 0
+        req_rep = getattr(cfg, "representation", "dense")
+        tiled_est = self._estimate_tiled(g, cfg, backend)
+        dense_cells = rows_pad * cols_pad
+        budget = self.memory_budget
+        if req_rep == "tiled":
+            representation = "tiled"
+        elif req_rep == "auto" and mesh_shards == 0 and (
+                (budget is not None and fixed_bytes > budget)
+                or (tiled_est["tile_occupancy"] <= TILED_OCCUPANCY_CROSSOVER
+                    and dense_cells >= TILED_MIN_DENSE_CELLS)):
+            representation = "tiled"
+        else:
+            representation = "dense"
+        cost_model = {
+            "requested": req_rep,
+            "dense_bytes": padded_bytes,
+            "dense_fixed_bytes": fixed_bytes,
+            "dense_cells": dense_cells,
+            "tiled_bytes": tiled_est["tiled_bytes"],
+            "n_tiles": tiled_est["n_tiles"],
+            "tile_occupancy": tiled_est["tile_occupancy"],
+            "tile_blocks": tiled_est["tile_blocks"],
+            "occupancy_crossover": TILED_OCCUPANCY_CROSSOVER,
+            "min_dense_cells": TILED_MIN_DENSE_CELLS,
+        }
+
         # --- admission control (DESIGN.md §7) -------------------------- #
         # Over-budget plans DEGRADE before they reject: re-partitioning
         # resizes the FD stacks (subset sizes trade against per-group
@@ -270,19 +341,32 @@ class Planner:
         # are probed, nearest the requested count first), trading
         # dispatch count for peak memory.  Only when the fixed CD
         # footprint alone overflows, or no probed partitioning fits, is
-        # the plan infeasible.
+        # the plan infeasible — and a representation="auto" plan takes
+        # the tiled route instead of rejecting when the tile list fits.
         admitted_p = cfg.num_partitions
         degraded_from = None
-        budget = self.memory_budget
-        if budget is not None and padded_bytes > budget:
+        if representation == "tiled":
+            padded_bytes = tiled_est["tiled_bytes"]
+            est_groups, est_waste = [], 0.0
+            if budget is not None and padded_bytes > budget:
+                raise PlanInfeasibleError(
+                    f"the tiled representation still needs {padded_bytes} "
+                    f"bytes ({tiled_est['n_tiles']} nonzero "
+                    f"{tiled_est['tile_blocks'][0]}x"
+                    f"{tiled_est['tile_blocks'][1]} tiles), over the "
+                    f"memory_budget_bytes={budget} admission budget — "
+                    "raise the budget or shrink the graph/blocks",
+                    dispatch=cfg.cd_dispatch, backend=backend,
+                    padded_bytes=padded_bytes, budget=budget)
+        elif budget is not None and padded_bytes > budget:
             if fixed_bytes > budget:
                 raise PlanInfeasibleError(
                     f"the CD device matrix alone needs {fixed_bytes} "
                     f"padded bytes ({rows_pad} x {cols_pad} biadjacency + "
                     f"{width0}-row peel buffer), over the "
                     f"memory_budget_bytes={budget} admission budget — no "
-                    "FD downshift can help; raise the budget or shrink "
-                    "the graph/blocks",
+                    "FD downshift can help; raise the budget, shrink the "
+                    "graph/blocks, or route representation='tiled'",
                     dispatch=cfg.cd_dispatch, backend=backend,
                     padded_bytes=padded_bytes, budget=budget)
             cands: List[int] = []
@@ -309,22 +393,29 @@ class Planner:
                     break                           # first fit = nearest
             padded_bytes, admitted_p, est_groups, est_waste = best
             if not found and padded_bytes > budget:
-                raise PlanInfeasibleError(
-                    f"plan needs {padded_bytes} padded bytes, over the "
-                    f"memory_budget_bytes={budget} admission budget even "
-                    f"at the best probed partitioning ({admitted_p} "
-                    f"partitions; requested {cfg.num_partitions})",
-                    dispatch=cfg.cd_dispatch, backend=backend,
-                    padded_bytes=padded_bytes, budget=budget)
-            if admitted_p != cfg.num_partitions:
+                if (req_rep == "auto" and mesh_shards == 0
+                        and tiled_est["tiled_bytes"] <= budget):
+                    # no dense partitioning fits — the tile list does
+                    representation = "tiled"
+                    padded_bytes = tiled_est["tiled_bytes"]
+                    admitted_p = cfg.num_partitions
+                    est_groups, est_waste = [], 0.0
+                else:
+                    raise PlanInfeasibleError(
+                        f"plan needs {padded_bytes} padded bytes, over the "
+                        f"memory_budget_bytes={budget} admission budget even "
+                        f"at the best probed partitioning ({admitted_p} "
+                        f"partitions; requested {cfg.num_partitions})",
+                        dispatch=cfg.cd_dispatch, backend=backend,
+                        padded_bytes=padded_bytes, budget=budget)
+            if representation == "dense" and admitted_p != cfg.num_partitions:
                 degraded_from = cfg.num_partitions
 
-        mesh_shards = int(mesh.size) if mesh is not None else 0
         cfg_items = tuple(sorted(
             (f.name, _freeze(getattr(cfg, f.name)))
             for f in dataclasses.fields(cfg)))
         signature = (rows_pad, cols_pad, self.side, backend, mesh_shards,
-                     admitted_p, cfg_items)
+                     admitted_p, representation, cfg_items)
         return ExecutionPlan(
             signature=signature,
             side=self.side, n_u=g.n_u, n_v=g.n_v, m=g.m,
@@ -341,9 +432,63 @@ class Planner:
             mesh_shards=mesh_shards,
             degree_sort=cfg.degree_sort, device_loop=cfg.device_loop,
             padded_bytes=padded_bytes,
+            representation=representation,
+            cost_model=cost_model,
             memory_budget_bytes=budget if budget is not None else None,
             degraded_from_partitions=degraded_from,
         )
+
+    # ------------------------------------------------------------------ #
+    def _estimate_tiled(self, g: BipartiteGraph, cfg: ReceiptConfig,
+                        backend: str) -> Dict[str, Any]:
+        """Host-side estimate of the tiled representation's footprint.
+
+        Mirrors what ``engine.tiled.receipt_tiled`` will actually build:
+        the DGM pre-compaction (degree-<2 V columns drop out) followed
+        by the degree-sort relabeling (which concentrates nonzeros into
+        leading tiles), then counts occupied ``block_rows x block_k``
+        tiles.  Pure numpy over the edge list — O(m log m), no device
+        work.  ``tiled_bytes`` budgets the tile payloads ~3x (the peel
+        loop's regather/peel-masked copies) plus the reverse map.
+        """
+        from ..core.engine.tiled import tiled_blocks
+
+        br, bc = tiled_blocks(cfg)
+        eu, ev = g.edges_u, g.edges_v
+        if len(ev):
+            dv = np.bincount(ev, minlength=g.n_v)
+            keep = dv[ev] >= 2
+            eu, ev = eu[keep], ev[keep]
+        n_cols = max(int(np.unique(ev).size), 1) if len(ev) else 1
+        if cfg.degree_sort and len(eu):
+            du2 = np.bincount(eu, minlength=g.n_u)
+            dv2 = np.bincount(ev, minlength=g.n_v)
+            inv_u = np.empty(g.n_u, np.int64)
+            inv_u[np.argsort(-du2, kind="stable")] = np.arange(g.n_u)
+            inv_v = np.empty(g.n_v, np.int64)
+            inv_v[np.argsort(-dv2, kind="stable")] = np.arange(g.n_v)
+            eu, ev = inv_u[eu], inv_v[ev]
+        rows_pad_t = bucket(max(g.n_u, 1), br)
+        cols_pad_t = bucket(n_cols, bc)
+        n_rt = rows_pad_t // br
+        n_ct = cols_pad_t // bc
+        if len(eu):
+            occupied = np.unique(eu.astype(np.int64) // br * n_ct
+                                 + ev.astype(np.int64) // bc)
+            empty_bands = n_rt - np.unique(occupied // n_ct).size
+            n_tiles = int(occupied.size) + int(empty_bands)
+        else:
+            n_tiles = n_rt                      # one filler slot per band
+        tiled_bytes = 4 * (3 * n_tiles * br * bc + n_rt * n_ct
+                           + 4 * rows_pad_t)
+        return {
+            "tiled_bytes": int(tiled_bytes),
+            "n_tiles": n_tiles,
+            "tile_occupancy": n_tiles / float(n_rt * n_ct),
+            "tile_blocks": (br, bc),
+            "tiled_rows_pad": rows_pad_t,
+            "tiled_cols_pad": cols_pad_t,
+        }
 
     # ------------------------------------------------------------------ #
     def _estimate_fd_groups(self, g: BipartiteGraph, cfg: ReceiptConfig,

@@ -32,6 +32,7 @@ from .peel_loop import (
     device_peel_loop,
     host_sweep,
 )
+from .tiled import receipt_tiled
 
 __all__ = [
     "ReceiptConfig",
@@ -39,6 +40,7 @@ __all__ = [
     "tip_decompose",
     "receipt_cd",
     "receipt_fd",
+    "receipt_tiled",
     "parb_tip_decompose",
     "cd_checkpoint_state",
     "find_hi_np",
@@ -102,10 +104,16 @@ def tip_decompose(
         perm_u = np.arange(g.n_u)
         g_work = g
 
-    subset_id, init_support, bounds, _ = receipt_cd(g_work, cfg, stats,
-                                                    plan=plan)
-    theta_work = receipt_fd(g_work, subset_id, init_support, bounds, cfg,
-                            stats, mesh=mesh, plan=plan)
+    if cfg.representation == "tiled":
+        # blocked-sparse whole-graph level peel: same theta (tip numbers
+        # are canonical across exact schedules), never materializes the
+        # dense biadjacency — the route above the dense memory ceiling
+        theta_work = receipt_tiled(g_work, cfg, stats, plan=plan)
+    else:
+        subset_id, init_support, bounds, _ = receipt_cd(g_work, cfg, stats,
+                                                        plan=plan)
+        theta_work = receipt_fd(g_work, subset_id, init_support, bounds, cfg,
+                                stats, mesh=mesh, plan=plan)
 
     theta = np.zeros(g.n_u, np.int64)
     theta[perm_u] = np.round(theta_work).astype(np.int64)

@@ -711,10 +711,13 @@ def _run_legacy_groups(groups, init_support, cfg, stats, theta):
         nm_dev = jnp.asarray(nmem)
         lo_dev = jnp.asarray(los, cfg.dtype)
         if cfg.fd_mode == "b2":
-            w = jnp.einsum("gmc,gnc->gmn", a_dev, a_dev)
-            b2 = w * (w - 1.0) * 0.5
-            eye = jnp.eye(mm, dtype=cfg.dtype)
-            b2 = b2 * (1.0 - eye)[None]
+            backend = kops.resolve_backend(cfg.backend)
+            bi, bj, bk = cfg.kernel_blocks
+            aligned = (mm % bi == 0 and mm % bj == 0 and cc % bk == 0)
+            b2 = kops.b2_stack(
+                a_dev.astype(jnp.float32),
+                backend=backend if aligned else "xla",
+                blocks=cfg.kernel_blocks).astype(cfg.dtype)
             th = _fd_peel_b2_vm(b2, sup_dev, nm_dev, lo_dev)
         else:
             th = _fd_peel_matvec_vm(a_dev, sup_dev, nm_dev, lo_dev)

@@ -133,6 +133,25 @@ class ReceiptConfig:
     fd_b2_cells: int = 1 << 24               # B2-stack budget: total cells
     #                                        # (G * M * M) materialized per
     #                                        # group stack
+    representation: str = "dense"            # biadjacency layout the engine
+    #   runs on: "dense" (the padded (rows, cols) matrix through CD + FD)
+    #   or "tiled" (nonzero-block slot list through the whole-graph
+    #   level-peel engine, core/engine/tiled.py — the only path when the
+    #   dense matrix cannot be materialized).  "auto" is an API-layer
+    #   value: the Planner's cost model resolves it before dispatch;
+    #   the engine floor treats it as "dense".
+    tiled_regather_every: int = 1            # sweeps between tile-list
+    #   regathers (the tiled DGM cadence; 1 = every sweep — the regather
+    #   is O(n_slots) tile passes, negligible next to the update kernel)
+    tiled_compact_every: int = 64            # device sweeps per tiled
+    #   segment: the host driver re-enters after this many sweeps and
+    #   considers a host recompaction (tile-list shapes are static
+    #   inside one dispatch, so per-sweep cost stays O(n_slots) until
+    #   the slot list is REBUILT from survivors)
+    tiled_compact_ratio: float = 0.5         # alive-row fraction at or
+    #   below which the tiled host driver rebuilds the tile list from
+    #   the surviving rows (the tiled analogue of dgm_row_threshold;
+    #   <= 0 disables host recompaction)
 
     def __post_init__(self):
         """Validate every knob AT CONSTRUCTION (PR 5 satellite): the
@@ -188,6 +207,23 @@ class ReceiptConfig:
         if self.fd_b2_cells < 1:
             raise ValueError(
                 f"fd_b2_cells must be >= 1 (got {self.fd_b2_cells})")
+        if self.representation not in ("dense", "tiled", "auto"):
+            raise ValueError(
+                f"unknown representation {self.representation!r}: expected "
+                "'dense', 'tiled' or 'auto'")
+        if self.tiled_regather_every < 1:
+            raise ValueError(
+                f"tiled_regather_every must be >= 1 "
+                f"(got {self.tiled_regather_every})")
+        if self.tiled_compact_every < 1:
+            raise ValueError(
+                f"tiled_compact_every must be >= 1 "
+                f"(got {self.tiled_compact_every})")
+        if self.tiled_compact_ratio > 1.0:
+            raise ValueError(
+                f"tiled_compact_ratio must be <= 1 (got "
+                f"{self.tiled_compact_ratio}): it is an alive-row "
+                "fraction (<= 0 disables host recompaction)")
 
 
 @dataclasses.dataclass
@@ -820,12 +856,18 @@ def batched_level_loop(a, row_ext, support, alive, dv, lo, *,
         kmax_a = None
 
     if update_mode == "b2":
-        # one wedge contraction for the whole run; sweeps reduce its rows
-        wmat = jnp.einsum(
-            "gmc,gnc->gmn", a.astype(f32), a.astype(f32)
-        )
-        b2 = wmat * (wmat - 1.0) * 0.5
-        b2 = b2 * (1.0 - jnp.eye(mm, dtype=f32))[None]
+        # one wedge contraction for the whole run; sweeps reduce its
+        # rows.  On the Pallas backends the contraction + C(w, 2) + eye
+        # mask fuse into the staircase-skipping b2_stack kernel; the xla
+        # route (and any block-misaligned stack) keeps the einsum —
+        # bit-identical either way (integer regime).
+        if (backend != "xla" and mm % blocks[0] == 0
+                and mm % blocks[1] == 0 and cc % blocks[2] == 0):
+            b2 = kops.b2_stack(a.astype(f32), backend=backend,
+                               blocks=blocks)
+        else:
+            b2 = kops.b2_stack(a.astype(f32), backend="xla",
+                               blocks=blocks)
     elif update_mode != "kernel":
         raise ValueError(f"unknown update_mode {update_mode!r}")
 
@@ -931,7 +973,7 @@ class DeviceGraph:
     """
 
     def __init__(self, g: BipartiteGraph, members: np.ndarray,
-                 cfg: ReceiptConfig):
+                 cfg: ReceiptConfig, plan=None):
         self.cfg = cfg
         bi, bj, bk = cfg.kernel_blocks
         # induce on the live rows, dropping V columns that cannot form a
@@ -945,6 +987,14 @@ class DeviceGraph:
         self.n_cols = max(int(sub.n_v), 1)
         self.rows_pad = bucket(self.n_rows, max(bi, bj))
         self.cols_pad = bucket(self.n_cols, bk)
+        if plan is not None:
+            # DGM re-induction shapes quantize through the plan's
+            # geometric shape floors, so subset re-induction lands on a
+            # dispatch size an earlier same-signature run already traced
+            # (the executable cache stays warm instead of retracing per
+            # residual-graph size)
+            self.rows_pad = plan.quantize_dim("dgm_rows", self.rows_pad)
+            self.cols_pad = plan.quantize_dim("dgm_cols", self.cols_pad)
 
         a = np.zeros((self.rows_pad, self.cols_pad), np.float32)
         a[eu, ev] = 1.0

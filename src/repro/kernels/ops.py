@@ -37,15 +37,22 @@ from .butterfly import (
     butterfly_update_pallas_batched,
 )
 from .butterfly_sparse import (
+    b2_stack_pallas_sparse,
     butterfly_update_pallas_sparse,
     butterfly_update_pallas_sparse_batched,
     row_extents_device,
+)
+from .butterfly_tiled import (
+    butterfly_update_pallas_tiled,
+    butterfly_update_tiled_xla,
 )
 
 __all__ = [
     "butterfly_support",
     "butterfly_update",
     "butterfly_update_batched",
+    "butterfly_update_tiled",
+    "b2_stack",
     "find_hi_device",
     "tighten_extents_device",
     "default_backend",
@@ -286,6 +293,71 @@ def butterfly_update_batched(
         a, b, s, ids_a, ids_b, blocks=blocks,
         interpret=(backend == "interpret"),
     )
+
+
+def butterfly_update_tiled(
+    tile_data: jnp.ndarray,
+    srow: jnp.ndarray,
+    scol: jnp.ndarray,
+    sptr: jnp.ndarray,
+    pos: jnp.ndarray,
+    slot_live: jnp.ndarray,
+    s: jnp.ndarray,
+    *,
+    backend: Optional[str] = None,
+) -> jnp.ndarray:
+    """Mask-form butterfly update over a nonzero-tile list
+    (``core.graph.TiledGraph`` arrays):
+
+        out[x] = sum_{y != x} s[y] * C((A A^T)[x, y], 2)
+
+    Backend routing mirrors the dense ops: pallas/pallas_sparse run the
+    compiled tiled kernel (the tiled form subsumes the staircase skip —
+    a trailing zero stripe simply has no slot), interpret variants run
+    the same kernel body under the interpreter, and xla runs the
+    streaming jnp oracle that never materializes the dense biadjacency.
+    """
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return butterfly_update_tiled_xla(
+            tile_data, srow, scol, sptr, pos, slot_live, s)
+    return butterfly_update_pallas_tiled(
+        tile_data, srow, scol, sptr, pos, slot_live, s,
+        interpret=backend in ("interpret", "interpret_sparse"))
+
+
+def _b2_stack_ref(a: jnp.ndarray) -> jnp.ndarray:
+    w = jnp.einsum("gmc,gnc->gmn", a, a)
+    b2 = w * (w - 1.0) * 0.5
+    eye = jnp.eye(a.shape[1], dtype=a.dtype)
+    return b2 * (1.0 - eye)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def b2_stack(
+    a: jnp.ndarray,
+    *,
+    backend: Optional[str] = None,
+    blocks: tuple = DEFAULT_BLOCKS,
+) -> jnp.ndarray:
+    """Pairwise-butterfly stack ``out[g, x, y] = C((A_g A_g^T)[x, y], 2)``
+    with the diagonal zeroed — the ``fd_update_mode="b2"`` precompute.
+
+    On the Pallas backends the einsum + C(w, 2) + eye-mask pipeline is
+    fused into one staircase-skipping kernel (extents derived on device
+    from the rows themselves, so the skip needs no host metadata); the
+    xla backend keeps the reference einsum.  Bit-identical across
+    backends in the f32 integer regime.
+    """
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _b2_stack_ref(a)
+    bi, bj, bk = blocks
+    ext = jax.vmap(lambda x: row_extents_device(x, bk))(a)
+    kmax = ext.reshape(a.shape[0], -1, bi).max(axis=2)
+    return b2_stack_pallas_sparse(
+        a, kmax, blocks=blocks,
+        interpret=backend in ("interpret", "interpret_sparse"))
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "blocks"))
