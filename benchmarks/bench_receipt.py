@@ -25,6 +25,13 @@ the ISSUE 4 on-device DGM — the graph dispatch's traversed-wedge count
 within 10% of the per-subset host-DGM driver's
 (``derived.cd_graph_wedge_ratio``).
 
+The ``wing`` section (PR 8, DESIGN.md §10) benches the EDGE-axis
+decomposition on the same engine: per seeded graph, the host
+``wing_bup_oracle`` wall vs both engine dispatch modes, blocking host
+round trips (graph dispatch: O(1) per graph, no overflow surcharge),
+the HUC recount fraction and exact psi checksums (gated bit-for-bit by
+``scripts/bench_gate.py``).
+
 Usage:  PYTHONPATH=src python benchmarks/bench_receipt.py [--quick] [--out F]
 """
 from __future__ import annotations
@@ -52,12 +59,12 @@ def _load_gate_constants():
     spec.loader.exec_module(mod)
     return (mod.OVF_RT_SURCHARGE, mod.WEDGE_RATIO_TOL,
             mod.MAP_DISPATCH_MIN_REDUCTION, mod.MAP_HIT_RATE_MIN,
-            mod.TILED_WALL_MAX_RATIO)
+            mod.TILED_WALL_MAX_RATIO, mod.WING_RT_BOUND)
 
 
 (OVF_RT_SURCHARGE, WEDGE_RATIO_TOL,
  MAP_DISPATCH_MIN_REDUCTION, MAP_HIT_RATE_MIN,
- TILED_WALL_MAX_RATIO) = _load_gate_constants()
+ TILED_WALL_MAX_RATIO, WING_RT_BOUND) = _load_gate_constants()
 
 from datasets import DATASETS
 from repro.core.graph import powerlaw_bipartite
@@ -361,6 +368,74 @@ def bench_representations(*, quick: bool, check: bool) -> dict:
     return rec
 
 
+WING_GRAPHS = [
+    # seeded graphs sized for the O(m * butterflies) host oracle, so the
+    # engine-vs-oracle wall comparison is measured, not extrapolated
+    ("wing_pl_small", lambda: powerlaw_bipartite(160, 96, 1_000,
+                                                 alpha_u=2.0, alpha_v=2.0,
+                                                 seed=21)),
+    ("wing_itu_mini", lambda: interaction_graph(192, 128, 1_400, seed=23)),
+]
+WING_QUICK = ("wing_pl_small",)
+
+
+def bench_wing(*, quick: bool, check: bool, partitions: int = 8) -> dict:
+    """Edge-axis (wing / bitruss) decomposition on the shared peel engine
+    (PR 8, DESIGN.md §10) vs the sequential host oracle.
+
+    Per seeded graph: the host oracle wall (``wing_bup_oracle``, one peel
+    round per support level) and both engine dispatch modes, with the
+    counters the gate pins — blocking host round trips (the graph
+    dispatch must stay O(1): the full-mask edge peel has no overflow
+    path), the recount fraction (which HUC arm the edge axis actually
+    takes — the paper's argument that recount matters MORE for edge
+    peeling, made measurable) and exact psi checksums (deterministic
+    graphs, so ``bench_gate.py`` gates them bit-for-bit)."""
+    from repro.core.engine import wing_decompose_engine
+    from repro.core.wing import wing_bup_oracle
+
+    records = []
+    for name, builder in WING_GRAPHS:
+        if quick and name not in WING_QUICK:
+            continue
+        g = builder()
+        t0 = time.perf_counter()
+        psi_ref, oracle_rounds = wing_bup_oracle(g)
+        oracle_wall = time.perf_counter() - t0
+        entry = {"name": name, "n_u": g.n_u, "n_v": g.n_v, "m": g.m,
+                 "oracle_wall_s": oracle_wall,
+                 "oracle_rounds": oracle_rounds,
+                 "max_psi": int(psi_ref.max(initial=0)),
+                 "psi_checksum": int(psi_ref.sum()),
+                 "engines": {}}
+        for disp in ("subset", "graph"):
+            cfg = ReceiptConfig(num_partitions=partitions, backend="xla",
+                                cd_dispatch=disp)
+            psi, stats, cold, warm, _ = _run_engine(
+                wing_decompose_engine, g, cfg)
+            if check:
+                assert (np.asarray(psi) == psi_ref).all(), (
+                    f"{name}/{disp}: psi mismatch vs wing BUP oracle")
+            sweeps = stats.rho_cd + stats.rho_fd
+            entry["engines"][disp] = {
+                "wall_cold_s": cold, "wall_warm_s": warm,
+                "host_round_trips": stats.host_round_trips,
+                "rho": sweeps,
+                "huc_recounts": stats.huc_recounts,
+                "recount_fraction": stats.huc_recounts / max(sweeps, 1),
+                "oracle_speedup_warm": oracle_wall / max(warm, 1e-9),
+            }
+            e = entry["engines"][disp]
+            print(f"  wing/{disp:6s} cold={cold:6.2f}s warm={warm:5.2f}s "
+                  f"RT={e['host_round_trips']:3d} rho={e['rho']:4d} "
+                  f"recount={e['recount_fraction']:.2f} "
+                  f"oracle x{e['oracle_speedup_warm']:.1f} "
+                  f"(oracle {oracle_wall:.2f}s, {oracle_rounds} rounds)",
+                  flush=True)
+        records.append(entry)
+    return {"graphs": records, "rt_bound": WING_RT_BOUND}
+
+
 def bench_executor_map(*, n_graphs: int = 12, check: bool = True) -> dict:
     """Multi-graph batched decomposition (PR 5): ``Executor.map`` over a
     fleet of small cohort graphs vs a sequential per-graph
@@ -475,6 +550,10 @@ def main(argv=None) -> int:
     representations = bench_representations(
         quick=args.quick, check=not args.no_check)
 
+    print("[bench_receipt] wing (edge-axis decomposition, DESIGN.md §10)",
+          flush=True)
+    wing = bench_wing(quick=args.quick, check=not args.no_check)
+
     exec_map = bench_executor_map(
         n_graphs=8 if args.quick else 12, check=not args.no_check)
 
@@ -484,6 +563,7 @@ def main(argv=None) -> int:
         "backend": "xla (CPU)",
         "graphs": results,
         "representations": representations,
+        "wing": wing,
         "executor_map": exec_map,
     }
     Path(args.out).write_text(json.dumps(payload, indent=2))
@@ -514,6 +594,16 @@ def main(argv=None) -> int:
                   f"FAILED (rt_ok={rt_ok}, wedge_ratio="
                   f"{r['derived']['cd_graph_wedge_ratio']:.3f})")
         ok = ok and rt_ok and wedge_ok
+    # edge axis (PR 8 acceptance): the graph-dispatch wing driver keeps
+    # O(1) blocking round trips per graph — no overflow surcharge, the
+    # full-mask edge peel has no overflow path (psi exactness is already
+    # asserted against the wing oracle inside bench_wing)
+    for r in wing["graphs"]:
+        w_rt = r["engines"]["graph"]["host_round_trips"]
+        if w_rt > WING_RT_BOUND:
+            print(f"[bench_receipt] {r['name']}: wing graph-dispatch gate "
+                  f"FAILED (host_round_trips={w_rt} > {WING_RT_BOUND})")
+        ok = ok and w_rt <= WING_RT_BOUND
     # tiled representation (ISSUE 7 acceptance): on every graph the cost
     # model routes tiled, the tiled engine must traverse no more wedges
     # than the dense pipeline and keep warm wall within the gate ratio

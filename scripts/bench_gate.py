@@ -18,6 +18,12 @@ regress without any test failing:
   drift beyond tolerance means the peel schedule itself changed.
 * rho invariants (``rho_cd`` per dispatch) — same determinism argument
   for the sweep counts.
+* the ``wing`` section (PR 8, DESIGN.md §10) — the edge-axis driver's
+  graph dispatch keeps O(1) blocking round trips per graph
+  (``WING_RT_BOUND``, no overflow surcharge: the full-mask edge peel
+  has no overflow path), and the seeded graphs' wing checksums
+  (``max_psi`` / ``psi_checksum``) are gated EXACTLY — psi is a
+  reproducible fact, not a performance number.
 
 Graphs are matched by name, so a ``--quick`` fresh run (smallest graph
 only) gates against the corresponding baseline entry; baseline-only
@@ -69,6 +75,12 @@ GUARD_OVERHEAD_ABS_SLACK_S = 0.005
 # wall is gated here (despite runner noise) because the ratio compares
 # two walls from the SAME process, like the guardrail gate above.
 TILED_WALL_MAX_RATIO = 1.2
+# Edge-axis (wing) acceptance (PR 8, DESIGN.md §10): the graph-dispatch
+# wing driver peels with a full-mask scatter — no peel-width overflow
+# path exists — so its blocking host round trips are O(1) per graph
+# with NO surcharge term: count + one dispatch/fetch pair + the FD
+# epilogue.  Same bound the differential suite pins (tests/test_wing.py).
+WING_RT_BOUND = 4
 
 
 def _graphs_by_name(payload: dict) -> dict:
@@ -185,6 +197,46 @@ def gate(fresh: dict, baseline: dict, rel_tol: float) -> list:
                 "representations: no tiled-routed graph won on wall — "
                 "the tiled kernels regressed or the bench lost its "
                 "sparse-regime graphs")
+
+    # --- wing: edge-axis decomposition on the shared engine (PR 8) ---- #
+    f_wing = fresh.get("wing")
+    if baseline.get("wing") is not None and f_wing is None:
+        errors.append("wing section missing from the fresh run "
+                      "(the edge-axis bench stopped running)")
+    elif f_wing is not None:
+        base_wing = {g["name"]: g
+                     for g in (baseline.get("wing") or {}).get("graphs", [])}
+        for r in f_wing.get("graphs", []):
+            name = r["name"]
+            rt = r.get("engines", {}).get("graph", {}).get("host_round_trips")
+            if rt is None:
+                errors.append(f"wing[{name}]: graph-dispatch "
+                              f"host_round_trips missing")
+            elif rt > WING_RT_BOUND:
+                errors.append(
+                    f"wing[{name}]: graph-dispatch host_round_trips {rt} > "
+                    f"{WING_RT_BOUND} — the full-mask edge peel lost its "
+                    f"O(1) round-trip claim")
+            b = base_wing.get(name)
+            if b is None:
+                continue
+            # the bench graphs are seeded, so wing numbers are EXACT
+            # reproducible facts — any drift means psi itself changed
+            for metric in ("max_psi", "psi_checksum"):
+                if r.get(metric) != b.get(metric):
+                    errors.append(
+                        f"wing[{name}]: {metric} changed: "
+                        f"fresh={r.get(metric)} baseline={b.get(metric)} — "
+                        f"wing numbers drifted on a deterministic graph")
+            for disp in ("subset", "graph"):
+                fe = r.get("engines", {}).get(disp, {})
+                be = b.get("engines", {}).get(disp, {})
+                for metric in ("rho", "huc_recounts"):
+                    fv, bv = fe.get(metric), be.get(metric)
+                    if fv is None or bv is None:
+                        continue
+                    _check_rel(errors, f"wing[{name}]", f"{disp}.{metric}",
+                               fv, bv, rel_tol)
 
     # --- Executor.map: batched multi-graph decomposition (PR 5) ------- #
     f_map = fresh.get("executor_map")

@@ -5,10 +5,14 @@
 # Usage: scripts/ci.sh [quick|full] [extra pytest args]
 #   quick  (default) skip tests marked @pytest.mark.slow (-m "not slow")
 #          -- the per-push job; keeps the suite well under the runner
-#          timeout.  Also runs the examples smoke (both examples
-#          headless on the repro.api surface, RECEIPT_SMOKE=1) and the
-#          quick engine bench gated against the checked-in
-#          BENCH_receipt.json derived metrics (scripts/bench_gate.py).
+#          timeout.  Runs the wing differential suite (tests/test_wing.py,
+#          slow combos INCLUDED -- the edge-axis engine is gated
+#          bit-for-bit against its host oracle on every push; the main
+#          quick sweep therefore --ignores that file), the examples
+#          smoke (both examples headless on the repro.api surface,
+#          RECEIPT_SMOKE=1) and the quick engine bench gated against the
+#          checked-in BENCH_receipt.json derived metrics
+#          (scripts/bench_gate.py).
 #   full   run everything, slow device-loop equivalence tests included
 #          -- the nightly job (and the tier-1 command:
 #          `PYTHONPATH=src python -m pytest -x -q` is equivalent)
@@ -71,8 +75,10 @@ python scripts/docs_lint.py
 if [ "$MODE" = "quick" ]; then
   echo "== collect-only gate (imports + test ids resolve) =="
   python -m pytest --collect-only -q > /dev/null
+  echo "== wing differential suite (edge axis vs host oracle, incl. slow) =="
+  python -m pytest tests/test_wing.py -x -q
   echo "== test suite (quick: -m 'not slow') =="
-  python -m pytest -x -q -m "not slow" "$@"
+  python -m pytest -x -q -m "not slow" --ignore=tests/test_wing.py "$@"
   echo "== examples smoke (headless, RECEIPT_SMOKE=1, new repro.api surface) =="
   RECEIPT_SMOKE=1 python examples/quickstart.py
   RECEIPT_SMOKE=1 python examples/recsys_tip_filtering.py

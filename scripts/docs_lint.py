@@ -105,6 +105,15 @@ SYMBOL_SECTIONS = {
         "repro.core.engine.tiled.receipt_tiled",
         "repro.api.plan.TILED_OCCUPANCY_CROSSOVER",
     ],
+    "## 10. Edge peeling": [
+        "repro.core.engine.peel_loop.DELTA_RULES",
+        "repro.core.engine.wing.receipt_wing_cd",
+        "repro.core.engine.wing.receipt_wing_fd",
+        "repro.kernels.ops.edge_support_all",
+        "repro.kernels.ops.edge_support_delta",
+        "repro.core.wing.wing_bup_oracle",
+        "repro.api.verify_wing_decomposition",
+    ],
 }
 
 

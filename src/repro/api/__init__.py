@@ -32,6 +32,11 @@ One-shot convenience::
     td = decompose(g, EngineConfig(num_partitions=32, backend="xla"))
     td.theta, td.max_theta(), td.subgraph_at(5)
 
+``EngineConfig(workload="wing")`` routes the same three stages onto the
+EDGE axis (wing / bitruss numbers, DESIGN.md §10) and returns a
+``WingDecomposition`` — same plans, same executable cache, same
+fallback chain.
+
 The legacy names (``repro.core.receipt.tip_decompose`` /
 ``receipt_cd`` / ``receipt_fd`` / ``ReceiptConfig``) remain as thin
 compatibility wrappers over this layer.
@@ -54,8 +59,10 @@ __all__ = [
     "Planner",
     "Executor",
     "TipDecomposition",
+    "WingDecomposition",
     "decompose",
     "verify_tip_decomposition",
+    "verify_wing_decomposition",
     "ReceiptError",
     "GraphValidationError",
     "PlanInfeasibleError",
@@ -75,8 +82,10 @@ _LAZY = {
     "Planner": "plan",
     "Executor": "executor",
     "TipDecomposition": "executor",
+    "WingDecomposition": "executor",
     "decompose": "executor",
     "verify_tip_decomposition": "executor",
+    "verify_wing_decomposition": "executor",
     "ReceiptError": "errors",
     "GraphValidationError": "errors",
     "PlanInfeasibleError": "errors",

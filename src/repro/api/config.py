@@ -47,6 +47,12 @@ class EngineConfig:
     """
 
     side: str = "U"
+    workload: str = "tip"
+    #   which decomposition runs (DESIGN.md §10): "tip" peels vertices
+    #   (theta per U/V vertex), "wing" peels EDGES (psi per edge) on the
+    #   same engine through DELTA_RULES["edge"].  API-layer only — the
+    #   Executor selects the engine driver; the engine's ReceiptConfig
+    #   is workload-agnostic.
     num_partitions: int = 8
     backend: Optional[str] = None
     kernel_blocks: Tuple[int, int, int] = (128, 128, 512)
@@ -72,6 +78,10 @@ class EngineConfig:
     #   blow the memory budget).  The engine default is "dense";
     #   the service layer defaults to routing.
     tiled_regather_every: int = 1
+    fd_prepeel_levels: int = 4
+    #   max support levels the FD host pre-peel hoists per task while
+    #   the device is busy (satellite of DESIGN.md §2.2); theta is
+    #   identical for every value >= 1 (regression-tested).
     # hardened-runtime knobs (DESIGN.md §7) — service-layer only, never
     # forwarded to the engine's ReceiptConfig:
     #   memory_budget_bytes  Planner admission control: plans whose
@@ -91,6 +101,16 @@ class EngineConfig:
             raise ValueError(
                 f"side must be 'U' or 'V' (got {self.side!r}): tip "
                 "decomposition peels one vertex set; 'V' transposes")
+        if self.workload not in ("tip", "wing"):
+            raise ValueError(
+                f"workload must be 'tip' or 'wing' (got "
+                f"{self.workload!r}): 'tip' peels vertices, 'wing' peels "
+                "edges on the same engine (DESIGN.md §10)")
+        if self.workload == "wing" and self.representation == "tiled":
+            raise ValueError(
+                "workload='wing' runs on the dense edge-axis geometry; "
+                "the tiled representation is a vertex-axis path "
+                "(use representation='dense' or 'auto')")
         if self.dtype not in _DTYPES:
             raise ValueError(
                 f"dtype must be one of {_DTYPES} (got {self.dtype!r}): "
@@ -135,7 +155,8 @@ class EngineConfig:
     # conversions
     # ------------------------------------------------------------------ #
     # service-layer-only fields the engine's ReceiptConfig never sees
-    _API_ONLY = ("side", "dtype", "memory_budget_bytes", "fault_spec")
+    _API_ONLY = ("side", "workload", "dtype", "memory_budget_bytes",
+                 "fault_spec")
 
     def to_receipt_config(self) -> ReceiptConfig:
         """The engine-layer view of this config (drops the service-layer
@@ -153,8 +174,10 @@ class EngineConfig:
         the compat wrappers therefore bypass this and hand the raw
         ``ReceiptConfig`` to the Planner/Executor directly.
         """
+        known = {f.name for f in dataclasses.fields(EngineConfig)}
         kw = {f.name: getattr(cfg, f.name)
-              for f in dataclasses.fields(cfg) if f.name != "dtype"}
+              for f in dataclasses.fields(cfg)
+              if f.name != "dtype" and f.name in known}
         return EngineConfig(side=side, dtype=jnp.dtype(cfg.dtype).name, **kw)
 
     # ------------------------------------------------------------------ #

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engine import tip_decompose as _engine_tip_decompose
+from ..core.engine import wing_decompose_engine as _engine_wing_decompose
 from ..core.engine.peel_loop import (
     ReceiptConfig,
     RunStats,
@@ -61,8 +62,9 @@ from .errors import (
 )
 from .plan import ExecutionPlan, Planner
 
-__all__ = ["Executor", "TipDecomposition", "decompose",
-           "verify_tip_decomposition"]
+__all__ = ["Executor", "TipDecomposition", "WingDecomposition",
+           "decompose", "verify_tip_decomposition",
+           "verify_wing_decomposition"]
 
 # device-program failures the fallback chain recovers from: the taxonomy's
 # KernelBackendError (incl. injected faults) plus whatever the XLA runtime
@@ -131,6 +133,58 @@ class TipDecomposition:
         return sub, members, v_ids
 
 
+@dataclasses.dataclass
+class WingDecomposition:
+    """Result of one wing (bitruss) decomposition: per-EDGE wing numbers
+    + run evidence + hierarchy queries (DESIGN.md §10).
+
+    ``edge_wing[e]`` is the wing number psi of edge ``e`` in the graph's
+    CANONICAL edge order (``graph.edges_u[e], graph.edges_v[e]``) —
+    regardless of ``side`` (wing numbers are side-symmetric; the
+    ``side="V"`` run transposes internally and maps psi back through the
+    edge-order permutation).  The k-wing hierarchy is nested, so
+    ``subgraph_at(k)`` induces the maximal subgraph whose EDGES all sit
+    in butterfly density >= k (the bitruss literature's k-wing / k-tip
+    edge analogue, paper §2).
+    """
+
+    graph: BipartiteGraph            # the ingested (un-transposed) graph
+    side: str
+    edge_wing: np.ndarray            # int64[m], canonical edge order
+    stats: RunStats
+    plan: Optional[ExecutionPlan] = None
+
+    @property
+    def m(self) -> int:
+        return int(self.edge_wing.size)
+
+    def edge_psi(self, e: int) -> int:
+        """Wing number of one edge (canonical edge order)."""
+        if not 0 <= e < self.edge_wing.size:
+            raise IndexError(
+                f"edge {e} out of range (m={self.edge_wing.size})")
+        return int(self.edge_wing[e])
+
+    def max_psi(self) -> int:
+        """The densest wing level present (0 for an edgeless graph)."""
+        return int(self.edge_wing.max()) if self.edge_wing.size else 0
+
+    def subgraph_at(self, psi_min: float):
+        """The psi_min-wing: the subgraph of edges with wing number >=
+        ``psi_min`` (vertex sets kept at original ids — edges, not
+        vertices, are the peeled axis).
+
+        Returns ``(subgraph, edge_ids)``: the induced ``BipartiteGraph``
+        and the surviving edges' canonical indices into
+        ``graph.edges_u``/``graph.edges_v``.
+        """
+        keep = np.where(self.edge_wing >= psi_min)[0]
+        sub = BipartiteGraph.from_edges(
+            self.graph.n_u, self.graph.n_v,
+            self.graph.edges_u[keep], self.graph.edges_v[keep])
+        return sub, keep
+
+
 # --------------------------------------------------------------------- #
 # executable cache
 # --------------------------------------------------------------------- #
@@ -194,6 +248,10 @@ class Executor:
         return self._planner.side
 
     @property
+    def workload(self) -> str:
+        return self._planner.workload
+
+    @property
     def cache_stats(self) -> Dict[str, int]:
         return dict(entries=len(self._entries), hits=self._hits,
                     misses=self._misses,
@@ -224,20 +282,41 @@ class Executor:
     # ------------------------------------------------------------------ #
     def decompose(self, graph: BipartiteGraph,
                   plan: Optional[ExecutionPlan] = None, *,
-                  verify: bool = False) -> TipDecomposition:
+                  verify: bool = False
+                  ) -> Union[TipDecomposition, "WingDecomposition"]:
         """Full RECEIPT decomposition of one graph through the cache.
 
+        ``workload="tip"`` returns a ``TipDecomposition`` (theta per
+        peeled-side vertex); ``workload="wing"`` returns a
+        ``WingDecomposition`` (psi per edge) — same cache, same fallback
+        chain, same plan feedback (DESIGN.md §10).
+
         ``verify=True`` re-derives the paper's invariants from the result
-        (residual butterfly supports at each subset boundary, theta
-        containment/monotonicity — ``verify_tip_decomposition``) and
+        (residual butterfly supports at each subset boundary,
+        theta/psi containment and bound monotonicity —
+        ``verify_tip_decomposition`` / ``verify_wing_decomposition``) and
         records the check count in ``RunStats``; a violation raises
         ``VerificationError``.
         """
+        if self.workload == "wing" and self.mesh is not None:
+            raise ValueError(
+                "workload='wing' runs single-device; the sharded FD "
+                "driver is a vertex-axis path (ROADMAP deferred item). "
+                "Build the executor without a mesh.")
         if plan is None:
             plan = self.plan(graph)
         entry = self._seed(plan)
         theta, stats = self._execute(graph, plan, entry)
         self._absorb(plan, entry)
+        if self.workload == "wing":
+            if verify:
+                stats.verify_checks = verify_wing_decomposition(
+                    graph, theta, bounds=stats.bounds,
+                    plan_signature=plan.signature)
+                stats.verified = True
+            return WingDecomposition(graph=graph, side=self.side,
+                                     edge_wing=theta, stats=stats,
+                                     plan=plan)
         if verify:
             stats.verify_checks = verify_tip_decomposition(
                 graph, self.side, theta, bounds=stats.bounds,
@@ -272,9 +351,8 @@ class Executor:
         self._plan_representation = plan.representation
         if not self.guardrails:
             with self._fault_scope():
-                theta, stats = _engine_tip_decompose(
-                    graph, self._run_cfg(plan.backend), side=self.side,
-                    mesh=self.mesh, plan=plan)
+                theta, stats = self._engine_run(
+                    graph, self._run_cfg(plan.backend), plan)
             stats.backend_used = plan.backend
             return theta, stats
         primary = plan.backend
@@ -285,9 +363,8 @@ class Executor:
         with self._fault_scope():
             for b in chain:
                 try:
-                    theta, stats = _engine_tip_decompose(
-                        graph, self._run_cfg(b), side=self.side,
-                        mesh=self.mesh, plan=plan)
+                    theta, stats = self._engine_run(
+                        graph, self._run_cfg(b), plan)
                 except _KERNEL_FAILURES as e:
                     failed.append(b)
                     last = e
@@ -310,6 +387,16 @@ class Executor:
             f"{' -> '.join(chain)} (last: {type(last).__name__}: {last})",
             plan_signature=plan.signature, dispatch=plan.cd_dispatch,
             backend=chain[-1])
+
+    def _engine_run(self, graph: BipartiteGraph, cfg: ReceiptConfig,
+                    plan: ExecutionPlan):
+        """One engine invocation of the plan's workload (the fallback
+        chain retries this per backend)."""
+        if self.workload == "wing":
+            return _engine_wing_decompose(graph, cfg, side=self.side,
+                                          plan=plan)
+        return _engine_tip_decompose(graph, cfg, side=self.side,
+                                     mesh=self.mesh, plan=plan)
 
     def _seed(self, plan: ExecutionPlan) -> _CacheEntry:
         entry = self._entries.get(plan.signature)
@@ -368,6 +455,12 @@ class Executor:
         the per-graph errors.
         """
         cfg = self.config
+        if self.workload != "tip":
+            raise ValueError(
+                "Executor.map batches VERTEX-axis (tip) decompositions; "
+                f"workload={self.workload!r} is not mappable — use "
+                "Executor.decompose per graph (the wing FD stack already "
+                "batches its subsets)")
         if cfg.fd_mode != "level":
             raise ValueError(
                 "Executor.map batches graphs through the level-peel "
@@ -780,19 +873,120 @@ def verify_tip_decomposition(graph: BipartiteGraph, side: str,
     return checks
 
 
+def _edge_supports_host(g: BipartiteGraph, keep: np.ndarray) -> np.ndarray:
+    """Butterfly supports of the ``keep`` edges in the subgraph they
+    induce, recomputed on the host with an INDEPENDENT route (float64
+    wedge matrix ``W = A @ A.T``; the support of edge (u, v) is
+    ``sum_{u'!=u} A[u', v] * (W[u, u'] - 1)``, i.e. ``(W @ A)[u, v] -
+    du[u] - dv[v] + 1``) — no code shared with the kernels it checks."""
+    eu, ev = g.edges_u[keep], g.edges_v[keep]
+    a = np.zeros((g.n_u, g.n_v), np.float64)
+    a[eu, ev] = 1.0
+    s = (a @ a.T) @ a
+    du = a.sum(axis=1)
+    dvv = a.sum(axis=0)
+    return s[eu, ev] - du[eu] - dvv[ev] + 1.0
+
+
+def verify_wing_decomposition(graph: BipartiteGraph, psi: np.ndarray, *,
+                              bounds: Optional[Sequence[float]] = None,
+                              max_boundaries: int = 8,
+                              plan_signature=None) -> int:
+    """Check a claimed wing decomposition against RECEIPT's invariants
+    (the edge-axis analogue of ``verify_tip_decomposition``); returns
+    the number of checks performed, raises ``VerificationError`` on the
+    first violation.
+
+    Checks (DESIGN.md §10):
+
+    1. shape/domain: ``psi`` covers the canonical edge list, no
+       negatives;
+    2. support bound: ``psi[e] <= B0[e]`` (an edge's wing number never
+       exceeds its initial butterfly support);
+    3. bound monotonicity: CD subset bounds non-decreasing and
+       ``psi.max() < bounds[-1]``;
+    4. psi containment at each boundary ``b``: the edge set
+       ``{e : psi[e] >= b}`` must be a b-wing — every kept edge's
+       support INDUCED ON THE SET is >= b.
+
+    ``psi`` is side-agnostic (wing numbers are side-symmetric), so no
+    ``side`` parameter: supports are recomputed on the graph's canonical
+    edge order directly.
+    """
+    g = graph
+    ps = np.asarray(psi)
+    checks = 0
+
+    def _fail(msg, **ctx):
+        raise VerificationError(msg, plan_signature=plan_signature, **ctx)
+
+    if ps.shape != (g.m,):
+        _fail(f"psi shape {ps.shape} != canonical edge list ({g.m},)")
+    checks += 1
+    if ps.size == 0:
+        return checks
+    if np.any(ps < 0):
+        _fail(f"negative wing numbers at "
+              f"{np.where(ps < 0)[0][:4].tolist()}")
+    checks += 1
+
+    sup0 = _edge_supports_host(g, np.arange(g.m))
+    bad = np.where(ps > sup0 + 0.5)[0]
+    if bad.size:
+        e = int(bad[0])
+        _fail(f"psi exceeds initial butterfly support: psi[{e}]="
+              f"{int(ps[e])} > B0[{e}]={sup0[e]:.0f} "
+              f"({bad.size} violation(s))")
+    checks += 1
+
+    if bounds:
+        bs = [float(b) for b in bounds]
+        if any(b2 < b1 for b1, b2 in zip(bs, bs[1:])):
+            _fail(f"CD subset bounds not monotone: {bs}")
+        checks += 1
+        if float(ps.max()) >= bs[-1]:
+            _fail(f"psi.max()={int(ps.max())} >= terminal bound "
+                  f"{bs[-1]} (bounds[-1] must exceed psi_max)")
+        checks += 1
+        levels = sorted({b for b in bs if 0.0 < b < np.inf})
+    else:
+        uniq = np.unique(ps[ps > 0]).astype(np.float64)
+        if uniq.size > max_boundaries:
+            pick = np.linspace(0, uniq.size - 1, max_boundaries)
+            uniq = uniq[np.round(pick).astype(int)]
+        levels = [float(b) for b in uniq]
+
+    for b in levels:
+        keep = np.where(ps >= b)[0]
+        if keep.size == 0:
+            continue
+        sup = _edge_supports_host(g, keep)
+        low = np.where(sup < b - 0.5)[0]
+        if low.size:
+            e = int(keep[low[0]])
+            _fail(f"psi containment violated at boundary {b:.0f}: edge "
+                  f"{e} ({int(g.edges_u[e])},{int(g.edges_v[e])}) "
+                  f"(psi={int(ps[e])}) has induced support "
+                  f"{sup[low[0]]:.0f} < {b:.0f}", boundary=b)
+        checks += 1
+    return checks
+
+
 # --------------------------------------------------------------------- #
 # one-shot convenience (the compat wrappers' entry point)
 # --------------------------------------------------------------------- #
 def decompose(graph: BipartiteGraph, config=None, *,
               side: Optional[str] = None, mesh=None,
               plan: Optional[ExecutionPlan] = None,
-              verify: bool = False) -> TipDecomposition:
+              verify: bool = False
+              ) -> Union[TipDecomposition, WingDecomposition]:
     """Plan + execute one decomposition on a fresh Executor.
 
     ``config`` may be an ``EngineConfig``, a legacy ``ReceiptConfig``
     (the compat wrappers' currency) or None.  A fresh Executor means no
     cross-call measured-sizing reuse — byte-for-byte the legacy engine
     behavior; hold an ``Executor`` to get the executable cache.
+    ``EngineConfig(workload="wing")`` returns a ``WingDecomposition``.
     """
     return Executor(config, side=side, mesh=mesh).decompose(
         graph, plan=plan, verify=verify)

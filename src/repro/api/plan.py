@@ -125,6 +125,13 @@ class ExecutionPlan:
     degree_sort: bool
     device_loop: bool
     padded_bytes: int                # device-memory estimate
+    workload: str = "tip"            # "tip" (vertex axis) | "wing"
+    #                                # (edge axis, DESIGN.md §10) — part
+    #                                # of the signature, so executables
+    #                                # never cross workloads
+    m_pad: int = 0                   # bucketed edge-slot count (the
+    #                                # support-vector width of wing
+    #                                # plans; 0 on the vertex axis)
     representation: str = "dense"    # resolved biadjacency layout:
     #                                # "dense" | "tiled" (never "auto" —
     #                                # the Planner's cost model resolves
@@ -250,11 +257,13 @@ class Planner:
             self.config = config
             self.rcfg = config.to_receipt_config()
             self.side = config.side
+            self.workload = config.workload
             self.memory_budget = config.memory_budget_bytes
         elif isinstance(config, ReceiptConfig):
             self.config = None          # legacy currency: no strict view
             self.rcfg = config
             self.side = side or "U"
+            self.workload = "tip"       # workload is a service-layer knob
             self.memory_budget = None   # admission control is a service-
             #                           # layer feature (EngineConfig knob)
         else:
@@ -277,6 +286,9 @@ class Planner:
         g = graph.transposed() if self.side == "V" else graph
         backend = kops.resolve_backend(cfg.backend)
         bi, bj, bk = cfg.kernel_blocks
+        mesh_shards = int(mesh.size) if mesh is not None else 0
+        if self.workload == "wing":
+            return self._plan_wing(g, cfg, backend, mesh_shards)
 
         # --- ingestion-derived shapes (the DeviceGraph bucket math) ---- #
         dv = g.degrees_v()
@@ -307,7 +319,6 @@ class Planner:
         # speed heuristic: a dense matrix that cannot fit the budget
         # routes tiled regardless of density.  The mesh FD driver is
         # dense-only, so a sharded executor always plans dense.
-        mesh_shards = int(mesh.size) if mesh is not None else 0
         req_rep = getattr(cfg, "representation", "dense")
         tiled_est = self._estimate_tiled(g, cfg, backend)
         dense_cells = rows_pad * cols_pad
@@ -415,9 +426,9 @@ class Planner:
             (f.name, _freeze(getattr(cfg, f.name)))
             for f in dataclasses.fields(cfg)))
         signature = (rows_pad, cols_pad, self.side, backend, mesh_shards,
-                     admitted_p, representation, cfg_items)
+                     admitted_p, representation, cfg_items, self.workload)
         return ExecutionPlan(
-            signature=signature,
+            signature=signature, workload=self.workload,
             side=self.side, n_u=g.n_u, n_v=g.n_v, m=g.m,
             backend=backend, kernel_route=kops.route_label(backend),
             kernel_blocks=tuple(cfg.kernel_blocks),
@@ -433,6 +444,95 @@ class Planner:
             degree_sort=cfg.degree_sort, device_loop=cfg.device_loop,
             padded_bytes=padded_bytes,
             representation=representation,
+            cost_model=cost_model,
+            memory_budget_bytes=budget if budget is not None else None,
+            degraded_from_partitions=degraded_from,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _plan_wing(self, g: BipartiteGraph, cfg: ReceiptConfig,
+                   backend: str, mesh_shards: int) -> ExecutionPlan:
+        """Edge-axis (wing / bitruss) plan (DESIGN.md §10).
+
+        Shapes mirror ``engine.wing.build_edge_state`` exactly: the
+        biadjacency keeps the FULL ``n_v`` column count (the edge axis
+        peels matrix entries, so wedge-incapable columns still anchor
+        live edges and cannot be compacted away as the vertex planner
+        does), and the support vector lives on ``m_pad`` edge slots.
+        The FD phase is ONE stack of P slices of the same biadjacency
+        shape (subset s's member holds every edge of subsets >= s), so
+        the group estimate is exact up to empty subsets.  Admission
+        control downshifts the partition count — each partition is one
+        ``rows_pad x cols_pad`` stack member — before rejecting.
+        """
+        bi, bj, bk = cfg.kernel_blocks
+        rows_pad = bucket(max(g.n_u, 1), max(bi, bj))
+        cols_pad = bucket(max(g.n_v, 1), bk)
+        m_pad = bucket(max(g.m, 1), bj)
+        if cfg.peel_width is not None:
+            width0 = min(bucket(cfg.peel_width, bj), m_pad)
+        else:
+            width0 = min(bucket(max(bj, m_pad // 8), bj), m_pad)
+
+        itemsize = 4                                    # f32 regime
+        cell_bytes = itemsize * rows_pad * cols_pad     # one stack member
+        # CD matrix + FD stack (P members) + ~6 m_pad-length edge vectors
+        # (support / alive / theta / eu / ev / peel mask)
+        fixed_bytes = cell_bytes + itemsize * 6 * m_pad
+        budget = self.memory_budget
+        admitted_p = max(cfg.num_partitions, 1)
+        degraded_from = None
+        padded_bytes = fixed_bytes + cell_bytes * admitted_p
+        if budget is not None and padded_bytes > budget:
+            if fixed_bytes + cell_bytes > budget:
+                raise PlanInfeasibleError(
+                    f"the wing device matrix alone needs "
+                    f"{fixed_bytes + cell_bytes} padded bytes "
+                    f"({rows_pad} x {cols_pad} biadjacency, {m_pad} edge "
+                    f"slots, one FD stack member), over the "
+                    f"memory_budget_bytes={budget} admission budget — no "
+                    "partition downshift can help; raise the budget or "
+                    "shrink the graph/blocks",
+                    dispatch=cfg.cd_dispatch, backend=backend,
+                    padded_bytes=fixed_bytes + cell_bytes, budget=budget)
+            p_fit = int((budget - fixed_bytes) // cell_bytes)
+            degraded_from = cfg.num_partitions
+            admitted_p = max(p_fit, 1)
+            padded_bytes = fixed_bytes + cell_bytes * admitted_p
+        est_groups = [dict(rows=rows_pad, cols=cols_pad, count=admitted_p)]
+        est_waste = (1.0 - g.m / float(admitted_p * rows_pad * cols_pad)
+                     if g.m else 0.0)
+        cost_model = {
+            "requested": getattr(cfg, "representation", "dense"),
+            "dense_bytes": padded_bytes,
+            "dense_fixed_bytes": fixed_bytes,
+            "dense_cells": rows_pad * cols_pad,
+            "edge_slots": m_pad,
+        }
+        cfg_items = tuple(sorted(
+            (f.name, _freeze(getattr(cfg, f.name)))
+            for f in dataclasses.fields(cfg)))
+        signature = (rows_pad, cols_pad, self.side, backend, mesh_shards,
+                     admitted_p, "dense", cfg_items, self.workload)
+        return ExecutionPlan(
+            signature=signature, workload="wing", m_pad=m_pad,
+            side=self.side, n_u=g.n_u, n_v=g.n_v, m=g.m,
+            backend=backend, kernel_route=kops.route_label(backend),
+            kernel_blocks=tuple(cfg.kernel_blocks),
+            cd_dispatch=cfg.cd_dispatch,
+            num_partitions=admitted_p,
+            rows_pad=rows_pad, cols_pad=cols_pad,
+            cd_peel_width0=width0,
+            cd_host_syncs_bound=(2 if cfg.cd_dispatch == "graph"
+                                 else admitted_p + 1),
+            fd_mode=cfg.fd_mode, fd_update_policy="kernel",
+            est_fd_groups=est_groups, est_fd_padding_waste=est_waste,
+            mesh_shards=mesh_shards,
+            degree_sort=False,          # edge axis never relabels (it
+            #                           # would permute canonical edge ids)
+            device_loop=cfg.device_loop,
+            padded_bytes=padded_bytes,
+            representation="dense",
             cost_model=cost_model,
             memory_budget_bytes=budget if budget is not None else None,
             degraded_from_partitions=degraded_from,

@@ -6,6 +6,9 @@ every schedule in the repo:
 * `cd.py`        — RECEIPT CD (Alg. 3), range-peel mode
 * `fd.py`        — RECEIPT FD (Alg. 4), batched level-peel mode
 * `baselines.py` — the ParButterfly min-peel baseline
+* `wing.py`      — wing / bitruss decomposition on the EDGE axis
+  (``DELTA_RULES["edge"]``, DESIGN.md §10): the same CD range-peel and
+  batched level-FD loops over per-edge butterfly supports
 
 ``tip_decompose`` below is the top-level driver (CD then FD, with the
 degree-sort relabeling and the side="V" transpose).  `core/receipt.py`
@@ -33,14 +36,24 @@ from .peel_loop import (
     host_sweep,
 )
 from .tiled import receipt_tiled
+from .wing import (
+    device_wing_graph_loop,
+    receipt_wing_cd,
+    receipt_wing_fd,
+    wing_decompose_engine,
+)
 
 __all__ = [
     "ReceiptConfig",
     "RunStats",
     "tip_decompose",
+    "wing_decompose_engine",
     "receipt_cd",
     "receipt_fd",
+    "receipt_wing_cd",
+    "receipt_wing_fd",
     "receipt_tiled",
+    "device_wing_graph_loop",
     "parb_tip_decompose",
     "cd_checkpoint_state",
     "find_hi_np",

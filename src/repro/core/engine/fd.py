@@ -11,10 +11,13 @@ group and dispatched through the grouped butterfly kernels.
 
 Runtime structure (``fd_mode="level"``, the default — DESIGN.md §2.2):
 
-* **host first-level pre-peel** (``pre_peel_tasks``): the first level of
-  every subset is known from the host support snapshot, so its theta is
-  assigned host-side and the device stacks hold SURVIVORS only (the
-  catch-all subset typically shrinks severalfold); the level's delta
+* **iterated host pre-peel** (``pre_peel_tasks``): up to
+  ``cfg.fd_prepeel_levels`` peel levels of every subset are resolved
+  from the host support snapshot while the device is busy — each level's
+  theta is assigned host-side and its delta folded in exactly (pairwise
+  shared-wedge subtraction; exact for simultaneous level peels), so the
+  device stacks hold the SURVIVORS of all hoisted levels (the catch-all
+  subset typically shrinks severalfold); the last hoisted level's delta
   reaches the survivors through one grouped butterfly kernel call;
 * **one device dispatch + one blocking ``device_get`` per shape group**
   (theta, per-subset sweep counts rho and dynamic wedge counters all ride
@@ -184,41 +187,92 @@ def _aligns(cfg: ReceiptConfig, backend: str):
 
 
 def pre_peel_tasks(tasks: List[Dict], init_support: np.ndarray,
-                   theta: np.ndarray, stats: RunStats) -> List[Dict]:
-    """Host-side FIRST-LEVEL pre-peel (the CD first-sweep-sizing insight
-    applied to FD): a subset's first peel level is fully determined by
-    the host support snapshot — cap = max(min support, lo), level =
-    everyone at or below cap — so its theta (= cap, exact by the
-    simultaneous-peel argument) is assigned here, its wedge cost is
-    accounted here, and the DEVICE stack is built from the survivors
-    only.  On catch-all subsets the first level is the bulk of the
-    subset, so survivor compaction shrinks the padded stack (and the
-    B2/kernel contraction that dominates FD) by a large factor.
+                   theta: np.ndarray, stats: RunStats,
+                   levels: int = 1) -> List[Dict]:
+    """Host-side pre-peel of up to ``levels`` support levels (the CD
+    first-sweep-sizing insight applied to FD): a subset's first peel
+    level is fully determined by the host support snapshot — cap =
+    max(min support, lo), level = everyone at or below cap — so its
+    theta (= cap, exact by the simultaneous-peel argument) is assigned
+    here, its wedge cost is accounted here, and the DEVICE stack is
+    built from the survivors only.  On catch-all subsets the first
+    level is the bulk of the subset, so survivor compaction shrinks the
+    padded stack (and the B2/kernel contraction that dominates FD) by a
+    large factor.
+
+    ``levels > 1`` (``ReceiptConfig.fd_prepeel_levels``; closes the PR 5
+    deferred item) keeps peeling on the host while the device is busy
+    with the previous shape group: levels 2, 3, ... are derived by the
+    exact host butterfly delta — for survivor u and level set L,
+    ``delta[u] = sum_{x in L} C(|N(u) & N(x)|, 2)`` (a butterfly holds
+    exactly two peeled-side vertices, so pairwise shared-butterfly
+    subtraction is exact for a simultaneous level peel) — then supports
+    floor at the level cap.  Theta is IDENTICAL for every ``levels >=
+    1`` (tip numbers are canonical across exact schedules;
+    regression-tested).  The LAST hoisted level is handed to the device
+    contract unchanged: ``l1``/``cap1``/``sup_surv`` describe that
+    level, whose delta the launcher applies through one grouped
+    butterfly kernel call — earlier levels' deltas are already folded
+    into ``sup_surv`` host-side.
 
     Mutates ``theta`` / ``stats`` (rho_fd += 1 and the level's dynamic
-    C_peel per non-empty task) and returns the survivor task list.
+    C_peel per hoisted level) and returns the survivor task list.
     """
+    levels = max(int(levels), 1)
     out = []
     for t in tasks:
         mems, sub, lo = t["members"], t["sub"], t["lo"]
-        sup = init_support[mems]
-        cap1 = max(float(sup.min()), lo) if len(sup) else lo
-        l1 = sup <= cap1
-        theta[mems[l1]] = cap1
-        # dynamic wedge cost of this sweep: colsum_L1 . max(dv - 1, 0)
-        dv_full = np.bincount(sub.edges_v, minlength=sub.n_v)
-        peel_e = l1[sub.edges_u]
-        colsum1 = np.bincount(sub.edges_v[peel_e], minlength=sub.n_v)
-        stats.wedges_fd += int(
-            (colsum1 * np.maximum(dv_full - 1, 0)).sum())
-        stats.rho_fd += 1
-        surv = np.where(~l1)[0]
-        if len(surv) == 0:
-            continue
-        out.append(dict(
-            t, surv=surv, l1=np.where(l1)[0], cap1=cap1,
-            sup_surv=sup[surv],
-        ))
+        sup = np.asarray(init_support[mems], np.float64).copy()
+        n = len(mems)
+        alive = np.ones(n, bool)
+        # column degrees of the still-alive rows (wedge accounting)
+        dv_cur = np.bincount(sub.edges_v, minlength=sub.n_v)
+        a_host = None                   # dense rows, built lazily (only
+        #                               # needed once a 2nd level peels)
+        done = False
+        for lvl in range(levels):
+            cap_l = (max(float(sup[alive].min()), lo) if alive.any()
+                     else lo)
+            l_mask = alive & (sup <= cap_l)
+            theta[mems[l_mask]] = cap_l
+            # dynamic wedge cost of this sweep: colsum_L . max(dv - 1, 0)
+            peel_e = l_mask[sub.edges_u]
+            colsum = np.bincount(sub.edges_v[peel_e], minlength=sub.n_v)
+            stats.wedges_fd += int(
+                (colsum * np.maximum(dv_cur - 1, 0)).sum())
+            stats.rho_fd += 1
+            surv_mask = alive & ~l_mask
+            if not surv_mask.any():
+                done = True             # subset fully drained on host
+                break
+            if lvl == levels - 1:
+                # last hoisted level: the device applies its delta (one
+                # grouped kernel call) — hand over the standard contract
+                out.append(dict(
+                    t, surv=np.where(surv_mask)[0],
+                    l1=np.where(l_mask)[0], cap1=cap_l,
+                    sup_surv=sup[surv_mask],
+                ))
+                done = True
+                break
+            # fold this level's delta host-side and keep hoisting
+            if a_host is None:
+                a_host = np.zeros((n, sub.n_v), np.float64)
+                a_host[sub.edges_u, sub.edges_v] = 1.0
+            w = a_host[surv_mask] @ a_host[l_mask].T
+            delta = (w * (w - 1.0) * 0.5).sum(axis=1)
+            sup[surv_mask] = np.maximum(sup[surv_mask] - delta, cap_l)
+            a_host[l_mask] = 0.0
+            dv_cur = dv_cur - colsum
+            alive = surv_mask
+        if not done and alive.any():
+            # `levels` exhausted with survivors and no handover recorded
+            # (cannot happen: the last iteration either drains or hands
+            # over) — defensive: hand over a zero-width last level
+            out.append(dict(
+                t, surv=np.where(alive)[0], l1=np.zeros(0, np.int64),
+                cap1=lo, sup_surv=sup[alive],
+            ))
     return out
 
 
@@ -442,7 +496,8 @@ def _run_level_groups(tasks, init_support, cfg, backend, stats, theta,
     row_align, col_align, _ = _aligns(cfg, backend)
     sparse = backend in kops.SPARSE_BACKENDS
 
-    tasks = pre_peel_tasks(tasks, init_support, theta, stats)
+    tasks = pre_peel_tasks(tasks, init_support, theta, stats,
+                           levels=cfg.fd_prepeel_levels)
     groups = pack_by_shape(
         tasks,
         size_of=lambda t: (len(t["surv"]), max(t["sub"].n_v, 1)),
@@ -580,7 +635,8 @@ def _run_level_groups_mesh(tasks, init_support, cfg, stats, theta, mesh,
     row_align, col_align, _ = _aligns(cfg, backend)
     n_shards = mesh.size
 
-    tasks = pre_peel_tasks(tasks, init_support, theta, stats)
+    tasks = pre_peel_tasks(tasks, init_support, theta, stats,
+                           levels=cfg.fd_prepeel_levels)
     groups = pack_by_shape(
         tasks,
         size_of=lambda t: (len(t["surv"]), max(t["sub"].n_v, 1)),

@@ -73,6 +73,7 @@ __all__ = [
     "ReceiptConfig",
     "RunStats",
     "bucket",
+    "DELTA_RULES",
     "DeviceGraph",
     "device_peel_loop",
     "device_cd_graph_loop",
@@ -152,6 +153,12 @@ class ReceiptConfig:
     #   below which the tiled host driver rebuilds the tile list from
     #   the surviving rows (the tiled analogue of dgm_row_threshold;
     #   <= 0 disables host recompaction)
+    fd_prepeel_levels: int = 4               # max support levels the FD
+    #   host pre-peel hoists per task (level 1, 2, ... on the host
+    #   support snapshot while the device is busy); 1 reproduces the
+    #   original single-level hoist.  Any value yields identical theta —
+    #   the hoisted levels are the same exact level-peel sweeps the
+    #   device loop would run (regression-tested).
 
     def __post_init__(self):
         """Validate every knob AT CONSTRUCTION (PR 5 satellite): the
@@ -224,6 +231,11 @@ class ReceiptConfig:
                 f"tiled_compact_ratio must be <= 1 (got "
                 f"{self.tiled_compact_ratio}): it is an alive-row "
                 "fraction (<= 0 disables host recompaction)")
+        if self.fd_prepeel_levels < 1:
+            raise ValueError(
+                f"fd_prepeel_levels must be >= 1 (got "
+                f"{self.fd_prepeel_levels}): the FD pre-peel always "
+                "hoists at least the first support level")
 
 
 @dataclasses.dataclass
@@ -399,7 +411,8 @@ def peel_cost(colsum, dv):
 # ---------------------------------------------------------------------- #
 def _sweep_once(a, ids, row_ext, kmax, c_rcnt, hi_cur, cap, support, alive,
                 dv, theta, peeled, rho, wedges, hucs, elided, covered, ovf,
-                *, backend, blocks, use_huc, peel_width, minmode):
+                *, backend, blocks, use_huc, peel_width, minmode,
+                axis="vertex"):
     """One peel sweep of the device-resident engines (DESIGN.md §2.0).
 
     The sweep body shared by ``device_peel_loop`` (per-subset CD range-peel
@@ -412,7 +425,24 @@ def _sweep_once(a, ids, row_ext, kmax, c_rcnt, hi_cur, cap, support, alive,
     covered, ovf); ``rho`` advances exactly when a sweep was applied
     (the overflow exit leaves every field untouched, so the host can
     replay the sweep at the precise bucket).
+
+    ``axis`` plugs in the delta rule (``DELTA_RULES``, DESIGN.md §10):
+    ``"vertex"`` is the body documented above; ``"edge"`` reinterprets
+    the support vector as PER-EDGE butterfly supports — ``a`` becomes
+    the geometry dict ``{"a", "eu", "ev"}`` (the carried residual
+    biadjacency plus the static edge-slot endpoints), the return tuple
+    is geometry-prefixed (peeling mutates the matrix), the HUC
+    alternative is the closed-form recount (always available — an
+    oversized peel set routes there instead of overflowing to the
+    host), and the peel path is the sequentially-composed masked-matvec
+    / rank-1 update (``kernels.ops.edge_support_delta``).
     """
+    if axis != "vertex":
+        return DELTA_RULES[axis].sweep(
+            a, ids, row_ext, kmax, c_rcnt, hi_cur, cap, support, alive,
+            dv, theta, peeled, rho, wedges, hucs, elided, covered, ovf,
+            backend=backend, blocks=blocks, use_huc=use_huc,
+            peel_width=peel_width, minmode=minmode)
     sparse = backend in kops.SPARSE_BACKENDS
     i32 = jnp.int32
     f32 = jnp.float32
@@ -495,17 +525,132 @@ def _sweep_once(a, ids, row_ext, kmax, c_rcnt, hi_cur, cap, support, alive,
     )
 
 
+def _sweep_once_edge(geom, ids, row_ext, kmax, c_rcnt, hi_cur, cap, support,
+                     alive, dv, theta, peeled, rho, wedges, hucs, elided,
+                     covered, ovf, *, backend, blocks, use_huc, peel_width,
+                     minmode):
+    """The edge-axis sweep body (wing / bitruss peeling, DESIGN.md §10).
+
+    State semantics: ``support``/``alive``/``theta``/``peeled`` are per
+    EDGE SLOT (padding slots dead, support +inf), ``dv`` stays the
+    residual V-degree vector (maintained by scattering the peeled edges'
+    column hits), and ``geom = {"a", "eu", "ev"}`` carries the residual
+    biadjacency — peeling REWRITES it, so the updated geometry leads the
+    return tuple.  ``ids``/``row_ext``/``kmax`` are accepted for body
+    parity with the vertex rule and ignored (the edge delta entry points
+    are pure-jnp contractions on every backend).
+
+    Support updates, the paper's double-delete conflict dissolved twice
+    over (both exact, pinned against each other by the differential
+    suite):
+
+    * **recount** — zero the peeled edges (a full-mask scatter: NO
+      gather buffer, so an oversized peel set routes here instead of
+      overflowing to the host — the edge axis has no overflow exit and
+      keeps the O(1) round-trip bound by construction) and re-derive
+      every survivor from the closed form ``kernels.ops.
+      edge_support_all``.  With ``use_huc=False`` this is the only path.
+    * **peel** — ``kernels.ops.edge_support_delta``: the masked-matvec /
+      rank-1 per-edge deltas composed SEQUENTIALLY over the gathered
+      peel set, so each edge updates against its predecessors' residual.
+
+    ``use_huc=True`` picks between them per sweep with the HUC cost
+    comparison: ``c_peel`` = edges peeled (each costs one matvec pair)
+    against the caller's recount estimate ``c_rcnt`` in the same units.
+
+    Returns ``(geom, support, alive, dv, theta, peeled, rho, wedges,
+    hucs, elided, covered, ovf)``; ``ovf`` is carried untouched (never
+    raised).
+    """
+    i32 = jnp.int32
+    f32 = jnp.float32
+    a, eu, ev = geom["a"], geom["eu"], geom["ev"]
+    peel = select_peel(support, alive, hi_cur)
+    n_peel = jnp.sum(peel)
+    is_elide = jnp.sum(alive) == n_peel
+
+    # the post-sweep geometry: a full-mask scatter zeroes every peeled
+    # edge (padding slots all alias cell (0, 0) with peel=False, so the
+    # min-clamp keeps them inert)
+    peel_mat = jnp.zeros_like(a).at[eu, ev].add(peel.astype(a.dtype))
+    a2 = a * (1.0 - jnp.minimum(peel_mat, 1.0))
+    geom2 = dict(geom, a=a2)
+    colsum = jnp.zeros_like(dv).at[ev].add(peel.astype(f32))
+    c_peel = n_peel.astype(f32)
+
+    def br_elide(support, alive, theta):
+        theta2 = record_theta(theta, peel, cap) if minmode else theta
+        return (geom2, support, alive & ~peel, dv - colsum, theta2,
+                peeled | peel, rho + 1, wedges, hucs, elided + 1,
+                covered + c_peel, ovf)
+
+    def do_sweep(support, alive, theta):
+        rows = jnp.nonzero(peel, size=peel_width, fill_value=0)[0]
+        rows = rows.astype(i32)
+        valid = jnp.arange(peel_width) < n_peel
+        if use_huc:
+            use_rec = (n_peel > peel_width) | (c_peel > c_rcnt)
+        else:
+            use_rec = jnp.bool_(True)
+
+        def br_recount(sup, alv):
+            alv2 = alv & ~peel
+            s2 = kops.edge_support_all(
+                a2, eu, ev, backend=backend, blocks=blocks)
+            return jnp.where(alv2, jnp.maximum(s2, cap), _INF), alv2
+
+        def br_peel(sup, alv):
+            delta = kops.edge_support_delta(
+                a, eu, ev, rows, valid, backend=backend, blocks=blocks)
+            s2, alv2 = apply_delta(sup, alv, peel, delta, cap)
+            return jnp.where(alv2, s2, _INF), alv2
+
+        support2, alive2 = jax.lax.cond(
+            use_rec, br_recount, br_peel, support, alive)
+        theta2 = record_theta(theta, peel, cap) if minmode else theta
+        return (geom2, support2, alive2, dv - colsum, theta2,
+                peeled | peel, rho + 1,
+                wedges + jnp.where(use_rec, c_rcnt, c_peel),
+                # hucs counts HUC *decisions*: with use_huc=False the
+                # always-recount path is policy, not a decision
+                hucs + (use_rec.astype(i32) if use_huc else i32(0)),
+                elided, covered + c_peel, ovf)
+
+    return jax.lax.cond(is_elide, br_elide, do_sweep, support, alive, theta)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaRule:
+    """One peel axis of the shared engine (the ``DELTA_RULES`` plug
+    point, DESIGN.md §10): which sweep body ``_sweep_once`` dispatches
+    to, and whether a sweep rewrites the carried geometry (edge peeling
+    deletes matrix entries; vertex peeling only masks rows, so the
+    biadjacency is loop-invariant and stays OUT of the carried state)."""
+
+    axis: str
+    mutable_geom: bool
+    sweep: Any
+
+
+DELTA_RULES = {
+    "vertex": DeltaRule(axis="vertex", mutable_geom=False,
+                        sweep=_sweep_once),
+    "edge": DeltaRule(axis="edge", mutable_geom=True,
+                      sweep=_sweep_once_edge),
+}
+
+
 # ---------------------------------------------------------------------- #
 # single-graph device-resident sweep loop (CD range-peel / ParB min-peel)
 # ---------------------------------------------------------------------- #
 @functools.partial(
     jax.jit,
     static_argnames=("backend", "blocks", "use_huc", "peel_width",
-                     "max_sweeps", "minmode"),
+                     "max_sweeps", "minmode", "axis"),
 )
 def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
                      hi, lo, c_rcnt, sweeps0=0, *, backend, blocks, use_huc,
-                     peel_width, max_sweeps, minmode):
+                     peel_width, max_sweeps, minmode, axis="vertex"):
     """Run an entire peel-sweep loop on device (``jax.lax.while_loop``).
 
     Two schedules share the body (``_sweep_once``, which the whole-graph
@@ -537,6 +682,16 @@ def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
 
     Counter exactness: wedge counters accumulate in f32 and are exact
     while every partial sum stays below 2^24 (DESIGN.md section 8).
+
+    ``axis="edge"`` (DESIGN.md §10) runs the SAME loop over the edge
+    delta rule: ``a`` is the geometry dict ``{"a", "eu", "ev"}`` and the
+    carried state is geometry-prefixed (peeling rewrites the residual
+    biadjacency), so the return tuple gains one leading element:
+    (geom, support, alive, dv, theta, peeled, rho, wedges, hucs, elided,
+    covered, sweeps, overflow).  The overflow flag can never be raised
+    on this axis (an oversized peel set routes to the closed-form
+    recount inside the sweep body), so the O(1) round-trip bound holds
+    by construction.
     """
     i32 = jnp.int32
     f32 = jnp.float32
@@ -548,6 +703,40 @@ def device_peel_loop(a, ids, row_ext, kmax, support, alive, dv, theta,
         if minmode:
             return level_threshold(support, alive, lo)
         return hi, lo
+
+    if axis == "edge":
+
+        def cond_fn_e(st):
+            support, alive = st[1], st[2]
+            sweeps, ovf = st[11], st[12]
+            hi_cur, _ = hi_cap(support, alive)
+            return (
+                jnp.any(select_peel(support, alive, hi_cur))
+                & (sweeps < max_sweeps)
+                & ~ovf
+            )
+
+        def body_fn_e(st):
+            (geom, support, alive, dv, theta, peeled, rho, wedges, hucs,
+             elided, covered, sweeps, ovf) = st
+            hi_cur, cap = hi_cap(support, alive)
+            (geom, support, alive, dv, theta, peeled, rho2, wedges, hucs,
+             elided, covered, ovf) = _sweep_once(
+                geom, ids, row_ext, kmax, c_rcnt, hi_cur, cap, support,
+                alive, dv, theta, peeled, rho, wedges, hucs, elided,
+                covered, ovf, backend=backend, blocks=blocks,
+                use_huc=(use_huc and not minmode),
+                peel_width=peel_width, minmode=minmode, axis="edge",
+            )
+            return (geom, support, alive, dv, theta, peeled, rho2, wedges,
+                    hucs, elided, covered, sweeps + (rho2 - rho), ovf)
+
+        state0_e = (
+            a, support, alive, dv, theta, jnp.zeros_like(alive),
+            i32(0), f32(0), i32(0), i32(0), f32(0),
+            jnp.asarray(sweeps0, i32), jnp.bool_(False),
+        )
+        return jax.lax.while_loop(cond_fn_e, body_fn_e, state0_e)
 
     def cond_fn(st):
         support, alive = st[0], st[1]
@@ -783,11 +972,11 @@ def cd_graph_state0(dg: "DeviceGraph", support, alive, p_total: int):
 @functools.partial(
     jax.jit,
     static_argnames=("backend", "blocks", "peel_width", "max_sweeps",
-                     "update_mode"),
+                     "update_mode", "axis"),
 )
-def batched_level_loop(a, row_ext, support, alive, dv, lo, *,
-                       backend, blocks, peel_width, max_sweeps,
-                       update_mode="kernel"):
+def batched_level_loop(a, row_ext, support, alive, dv, lo, eu=None, ev=None,
+                       *, backend, blocks, peel_width, max_sweeps,
+                       update_mode="kernel", axis="vertex"):
     """Peel a stack of G independent subsets by whole support levels.
 
     One ``lax.while_loop`` carries the whole stack; each sweep peels, in
@@ -841,9 +1030,67 @@ def batched_level_loop(a, row_ext, support, alive, dv, lo, *,
     above ``peel_width`` also tells the host the mask-form fallback
     fired).  Groups finish independently; a finished group is a no-op
     for the remaining sweeps (empty peel set).
+
+    ``axis="edge"`` (DESIGN.md §10, wing FD): ``support``/``alive``/
+    ``theta`` become per-EDGE-SLOT vectors of width E, ``eu``/``ev``
+    (G, E) int32 carry each slot's endpoints into the shared stacked
+    biadjacency, and every sweep is BATCHED-EXACT: peel the level with a
+    full-mask scatter, then re-derive every survivor from the
+    closed-form recount (``kernels.ops.edge_support_all``) — no gather
+    buffer, no update-mode cost model (``peel_width``/``update_mode``
+    are accepted and ignored), and the double-delete conflict never
+    arises because nothing is incrementally composed.  The residual
+    matrix is REWRITTEN by peeling, so the edge axis returns a 9-tuple
+    with the carried biadjacency in front: (a, support, alive, dv,
+    theta, rho, wedges, max_level, sweeps) — the driver re-enters on a
+    cap-exit by feeding it straight back.  ``wedges`` counts peeled
+    edges (each sweep's recount work proxy).
     """
     sparse = backend in kops.SPARSE_BACKENDS
     f32 = jnp.float32
+
+    if axis == "edge":
+        g_n = a.shape[0]
+        gidx = jnp.arange(g_n)[:, None]
+        lo = jnp.asarray(lo, f32)
+
+        def cond_fn_e(st):
+            alive, sweeps = st[2], st[8]
+            return jnp.any(alive) & (sweeps < max_sweeps)
+
+        def body_fn_e(st):
+            (a_cur, support, alive, dv, theta, rho, wedges, max_level,
+             sweeps) = st
+            hi, cap = level_threshold(support, alive, lo)   # (G,), (G,)
+            act = jnp.any(alive, axis=-1)                   # (G,)
+            peel = select_peel(support, alive, hi)          # (G, E)
+            n_peel = jnp.sum(peel, axis=-1)
+            peel_mat = jnp.zeros_like(a_cur).at[gidx, eu, ev].add(
+                peel.astype(a_cur.dtype))
+            a2 = a_cur * (1.0 - jnp.minimum(peel_mat, 1.0))
+            colsum = jnp.zeros_like(dv).at[gidx, ev].add(peel.astype(f32))
+            theta2 = record_theta(theta, peel, cap)
+            alive2 = alive & ~peel
+            s2 = kops.edge_support_all(
+                a2, eu, ev, backend=backend, blocks=blocks)
+            support2 = jnp.where(
+                alive2, jnp.maximum(s2, cap[:, None]), _INF)
+            return (
+                a2, support2, alive2, dv - colsum, theta2,
+                rho + act.astype(jnp.int32),
+                wedges + jnp.where(act, n_peel.astype(f32), 0.0),
+                jnp.maximum(max_level, n_peel.astype(jnp.int32)),
+                sweeps + 1,
+            )
+
+        theta0_e = jnp.zeros(support.shape, f32)
+        state0_e = (
+            a, support, alive, dv, theta0_e,
+            jnp.zeros(g_n, jnp.int32), jnp.zeros(g_n, f32),
+            jnp.zeros(g_n, jnp.int32), jnp.int32(0),
+        )
+        return jax.lax.while_loop(cond_fn_e, body_fn_e, state0_e)
+
     g_n, mm, cc = a.shape
     lo = jnp.asarray(lo, f32)
     ids = jnp.broadcast_to(

@@ -53,6 +53,8 @@ __all__ = [
     "butterfly_update_batched",
     "butterfly_update_tiled",
     "b2_stack",
+    "edge_support_all",
+    "edge_support_delta",
     "find_hi_device",
     "tighten_extents_device",
     "default_backend",
@@ -383,3 +385,118 @@ def butterfly_support(
         a, a, s, ids, ids, backend=backend, blocks=blocks,
         kmax_a=kmax, kmax_b=kmax,
     )
+
+
+# ---------------------------------------------------------------------- #
+# edge-axis entry points (wing / bitruss peeling, DESIGN.md section 10)
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def edge_support_all(
+    a: jnp.ndarray,
+    eu: jnp.ndarray,
+    ev: jnp.ndarray,
+    *,
+    backend: Optional[str] = None,
+    blocks: tuple = DEFAULT_BLOCKS,
+) -> jnp.ndarray:
+    """Per-edge butterfly supports of a residual graph, closed form:
+
+        b(u, v) = [A (A^T A)](u, v) - d_u(u) - d_v(v) + 1   (alive edges)
+
+    gathered at the edge slots ``(eu, ev)``; absent edges (peeled, or
+    padding slots) report 0.  ``a`` may carry arbitrary leading batch
+    dims — (R, C) for the single-graph CD recount, (G, R, C) for the
+    stacked wing-FD level loop — with ``eu``/``ev`` shaped to match
+    (``(E,)`` or ``(G, E)``).
+
+    This is the edge axis's ALWAYS-AVAILABLE recount path (the HUC
+    alternative the paper notes matters MORE for edge peeling): two
+    matmuls, batched-exact, no double-delete bookkeeping.  Every backend
+    shares the same jnp contraction — XLA already lowers the matmul pair
+    onto the MXU optimally, so unlike the wedge kernels there is no
+    custom Pallas body to route to; ``backend``/``blocks`` are accepted
+    for signature parity with the vertex-axis ops (and validated).
+    """
+    resolve_backend(backend)
+    at = jnp.swapaxes(a, -1, -2)
+    m3 = a @ (at @ a)
+    du = jnp.sum(a, axis=-1)
+    dvv = jnp.sum(a, axis=-2)
+    if a.ndim == 2:
+        b = m3[eu, ev] - du[eu] - dvv[ev] + 1.0
+        return b * a[eu, ev]
+    g = jnp.arange(a.shape[0])[:, None]
+    b = m3[g, eu, ev] - du[g, eu] - dvv[g, ev] + 1.0
+    return b * a[g, eu, ev]
+
+
+def _edge_peel_update(a, u, v):
+    """Support-delta matrix of peeling ONE edge (u, v) from ``a`` — the
+    masked-matvec / rank-1 decomposition of the butterflies through
+    (u, v) (same algebra as ``core/wing.py``'s sequential FD oracle):
+
+        (u, v')  loses one butterfly per wedge partner u'  -> (A^T c_v) * r_u
+        (u', v)  loses one per partner v'                  -> (A r_u) * c_v
+        (u', v') loses exactly one per butterfly           -> outer(c_v, r_u) * A
+
+    with the u'=u / v'=v self-wedge terms subtracted (those are wedges,
+    not butterflies) and the peeled cell itself zeroed.
+    """
+    row_u = a[u]
+    col_v = a[:, v]
+    d_uv = jnp.zeros_like(a)
+    d_uv = d_uv.at[u].add((jnp.swapaxes(a, -1, -2) @ col_v) * row_u)
+    d_uv = d_uv.at[:, v].add((a @ row_u) * col_v)
+    d_uv = d_uv + jnp.outer(col_v, row_u) * a
+    d_uv = d_uv.at[u, v].set(0.0)
+    d_uv = d_uv.at[u].add(-(row_u * row_u))
+    d_uv = d_uv.at[:, v].add(-(col_v * col_v))
+    d_uv = d_uv.at[u, :].add(-(col_v[u] * row_u * a[u]))
+    d_uv = d_uv.at[:, v].add(-(row_u[v] * col_v * a[:, v]))
+    d_uv = d_uv.at[u, v].set(0.0)
+    return d_uv
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def edge_support_delta(
+    a: jnp.ndarray,
+    eu: jnp.ndarray,
+    ev: jnp.ndarray,
+    rows: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    backend: Optional[str] = None,
+    blocks: tuple = DEFAULT_BLOCKS,
+) -> jnp.ndarray:
+    """Incremental edge-axis peel update: total support decrease of every
+    edge slot after removing the gathered edge set, SEQUENTIALLY exact.
+
+    ``rows`` (W,) int32 holds edge-slot indices into ``eu``/``ev``;
+    ``valid`` (W,) bool masks the real entries.  The batched edge-peel
+    double-delete conflict the paper flags ("only one of the peeled
+    edges should update the support") is dissolved by composition: a
+    ``fori_loop`` applies each edge's masked-matvec/rank-1 delta against
+    the MATRIX AS ALREADY PEELED by its predecessors, so the summed
+    delta equals before-minus-after of the closed-form recount exactly
+    — bit-identical to ``edge_support_all`` on the residual (the
+    equivalence the differential wing suite pins).  ``backend``/
+    ``blocks`` are accepted for signature parity (validated; the deltas
+    are pure-jnp on every backend).
+
+    Returns ``delta`` shaped like ``eu`` (per edge slot, >= 0).
+    """
+    resolve_backend(backend)
+
+    def body(i, carry):
+        a_cur, acc = carry
+        e = rows[i]
+        on = valid[i]
+        u, v = eu[e], ev[e]
+        d = _edge_peel_update(a_cur, u, v)
+        d = jnp.where(on, d, jnp.zeros_like(d))
+        a_next = jnp.where(on, a_cur.at[u, v].set(0.0), a_cur)
+        return a_next, acc + d
+
+    _, dmat = jax.lax.fori_loop(
+        0, rows.shape[0], body, (a, jnp.zeros_like(a)))
+    return dmat[eu, ev]

@@ -1,17 +1,63 @@
-"""Wing decomposition (edge peeling, paper section 7) vs the sequential
-edge-peel oracle."""
+"""Wing decomposition (edge peeling, paper section 7): the host
+reference path AND the shared-engine edge-axis path (DESIGN.md §10),
+differentially pinned to the sequential edge-peel oracle.
+
+``wing_bup_oracle`` is the ground truth the whole stack is tested
+against: the engine path (``wing_decompose_engine`` —
+``DELTA_RULES["edge"]`` on `engine/peel_loop.py`'s CD range-peel and
+batched level-FD loops) must be BIT-IDENTICAL to it on every test graph
+in every dispatch/backend/side combination, with the same O(1)
+host-round-trip bound as the vertex axis.
+"""
+import json
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
+from conftest import GRAPH_CASES
 
+from repro.api import EngineConfig, Executor, WingDecomposition
+from repro.core.engine import tip_decompose, wing_decompose_engine
+from repro.core.engine.peel_loop import DELTA_RULES, ReceiptConfig
 from repro.core.graph import BipartiteGraph, random_bipartite
+from repro.core.peeling import bup_oracle
 from repro.core.wing import (
     edge_butterfly_counts,
     wing_bup_oracle,
     wing_decompose,
 )
 
+SMALL_BLOCKS = (8, 8, 8)
+INTERP_BLOCKS = (8, 8, 16)
 
+
+def _cfg(backend="xla", **kw):
+    base = dict(
+        num_partitions=4,
+        kernel_blocks=INTERP_BLOCKS if backend.startswith("interpret")
+        else SMALL_BLOCKS,
+        backend=backend,
+    )
+    base.update(kw)
+    return ReceiptConfig(**base)
+
+
+# oracle cache: the oracle recounts after every single edge peel
+# (O(m) matmul rounds) — compute each case once for the whole module
+_ORACLE = {}
+
+
+def _oracle(case):
+    if case not in _ORACLE:
+        _ORACLE[case] = wing_bup_oracle(GRAPH_CASES[case]())[0]
+    return _ORACLE[case]
+
+
+# --------------------------------------------------------------------- #
+# ground truth sanity (host reference path, core/wing.py)
+# --------------------------------------------------------------------- #
 def test_k22_is_a_1_wing():
     g = BipartiteGraph.from_edges(2, 2, [0, 0, 1, 1], [0, 1, 0, 1])
     psi, _ = wing_bup_oracle(g)
@@ -57,6 +103,230 @@ def test_wing_sync_reduction():
     assert stats.rho_cd < rounds_seq
 
 
+# --------------------------------------------------------------------- #
+# the differential suite: shared-engine edge axis vs the oracle
+# (every GRAPH_CASE x dispatch x backend x side must be bit-identical)
+# --------------------------------------------------------------------- #
+_HEAVY = {"powerlaw", "vhub"}
+
+
+def _diff_params():
+    out = []
+    for case in sorted(GRAPH_CASES):
+        for dispatch in ("subset", "graph"):
+            for backend in ("xla", "interpret"):
+                for side in ("U", "V"):
+                    marks = ([pytest.mark.slow] if case in _HEAVY
+                             and (backend != "xla" or side != "U") else [])
+                    out.append(pytest.param(
+                        case, dispatch, backend, side,
+                        id=f"{case}-{dispatch}-{backend}-{side}",
+                        marks=marks))
+    return out
+
+
+@pytest.mark.parametrize("case,dispatch,backend,side", _diff_params())
+def test_engine_wing_matches_oracle(case, dispatch, backend, side):
+    g = GRAPH_CASES[case]()
+    psi_o = _oracle(case)
+    psi, stats = wing_decompose_engine(
+        g, _cfg(backend=backend, cd_dispatch=dispatch), side=side)
+    np.testing.assert_array_equal(psi, psi_o)
+    if g.m:
+        assert stats.num_subsets >= 1
+
+
+@pytest.mark.parametrize("case", sorted(set(GRAPH_CASES) - _HEAVY))
+def test_engine_wing_graph_dispatch_o1_round_trips(case):
+    """The graph dispatch's headline contract carries to the edge axis:
+    O(1) blocking host syncs per graph, independent of psi_max and P
+    (the edge sweep cannot overflow — oversized peel sets route to the
+    closed-form recount in-body, so no overflow replays exist)."""
+    g = GRAPH_CASES[case]()
+    psi, stats = wing_decompose_engine(
+        g, _cfg(cd_dispatch="graph", num_partitions=8))
+    np.testing.assert_array_equal(psi, _oracle(case))
+    assert stats.host_round_trips <= 4, stats.host_round_trips
+
+
+@pytest.mark.parametrize("p", [1, 2, 4, 16])
+def test_engine_wing_partition_sweep(p):
+    g = GRAPH_CASES["er_small"]()
+    psi, stats = wing_decompose_engine(g, _cfg(num_partitions=p))
+    np.testing.assert_array_equal(psi, _oracle("er_small"))
+    assert stats.num_subsets <= max(p, 1)
+
+
+def test_engine_wing_huc_off_still_exact():
+    """use_huc=False pins the edge sweep to always-recount (the
+    closed-form HUC path); psi must not change."""
+    g = GRAPH_CASES["er_dense"]()
+    psi, stats = wing_decompose_engine(g, _cfg(use_huc=False))
+    np.testing.assert_array_equal(psi, _oracle("er_dense"))
+    assert stats.huc_recounts == 0   # counter tracks HUC *decisions*
+
+
+def test_engine_wing_bounds_monotone_and_cover():
+    g = GRAPH_CASES["er_small"]()
+    psi, stats = wing_decompose_engine(g, _cfg(num_partitions=8))
+    b = stats.bounds
+    assert all(b[i] <= b[i + 1] for i in range(len(b) - 1))
+    assert b[0] == 0.0
+    assert psi.max() < b[-1]
+
+
+def test_delta_rules_registry():
+    """The axis abstraction is the tentpole: both delta rules are
+    registered and the edge rule owns mutable geometry."""
+    assert set(DELTA_RULES) == {"vertex", "edge"}
+    assert DELTA_RULES["edge"].mutable_geom
+    assert not DELTA_RULES["vertex"].mutable_geom
+
+
+# --------------------------------------------------------------------- #
+# API layer: workload="wing" through Planner/Executor (DESIGN.md §6+§10)
+# --------------------------------------------------------------------- #
+def _api_cfg(**kw):
+    base = dict(workload="wing", kernel_blocks=SMALL_BLOCKS,
+                backend="xla", num_partitions=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def test_executor_wing_decompose_and_verify():
+    g = GRAPH_CASES["er_small"]()
+    ex = Executor(_api_cfg())
+    wd = ex.decompose(g, verify=True)
+    assert isinstance(wd, WingDecomposition)
+    np.testing.assert_array_equal(wd.edge_wing, _oracle("er_small"))
+    assert wd.stats.verified and wd.stats.verify_checks >= 3
+    assert wd.plan.workload == "wing"
+    assert wd.plan.m_pad >= g.m
+    # k-wing hierarchy query
+    sub, keep = wd.subgraph_at(max(wd.max_psi(), 1))
+    assert sub.m == len(keep)
+    assert (wd.edge_wing[keep] >= max(wd.max_psi(), 1)).all()
+
+
+def test_executor_wing_cache_and_signature():
+    g = GRAPH_CASES["er_small"]()
+    ex = Executor(_api_cfg())
+    wd1 = ex.decompose(g)
+    wd2 = ex.decompose(g)
+    np.testing.assert_array_equal(wd1.edge_wing, wd2.edge_wing)
+    cs = ex.cache_stats
+    assert cs["hits"] == 1 and cs["misses"] == 1
+    # wing and tip plans never share executables: signatures differ
+    tip_sig = Executor(
+        EngineConfig(kernel_blocks=SMALL_BLOCKS, backend="xla",
+                     num_partitions=4)).plan(g).signature
+    assert wd1.plan.signature != tip_sig
+    assert wd1.plan.signature[-1] == "wing"
+
+
+def test_executor_wing_side_v_maps_back():
+    """psi is side-symmetric but the transposed run REORDERS edges
+    (from_edges canonicalizes by the peeled-side key); the result maps
+    back to the graph's canonical edge order."""
+    g = GRAPH_CASES["er_dense"]()
+    wd = Executor(_api_cfg(side="V")).decompose(g, verify=True)
+    np.testing.assert_array_equal(wd.edge_wing, _oracle("er_dense"))
+
+
+def test_executor_map_rejects_wing():
+    g = GRAPH_CASES["fig1"]()
+    with pytest.raises(ValueError, match="tip"):
+        Executor(_api_cfg()).map([g])
+
+
+def test_engine_config_rejects_wing_tiled():
+    with pytest.raises(ValueError, match="tiled"):
+        EngineConfig(workload="wing", representation="tiled")
+
+
+# --------------------------------------------------------------------- #
+# FD pre-peel hoisting: psi/theta invariant in fd_prepeel_levels
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("levels", [1, 2, 4, 8])
+def test_tip_theta_invariant_under_prepeel_hoisting(levels):
+    """Iterated host pre-peel (levels 2, 3, ... hoisted while the
+    device is busy) never changes theta — tip numbers are canonical
+    across exact schedules (closes the deferred pre-peel item)."""
+    g = GRAPH_CASES["er_small"]()
+    tb, _ = bup_oracle(g)
+    th, stats = tip_decompose(g, _cfg(fd_prepeel_levels=levels))
+    np.testing.assert_array_equal(th, tb)
+    if levels > 1:
+        assert stats.rho_fd >= 1
+
+
+def test_tip_prepeel_hoists_more_levels_host_side():
+    """More hoisted levels -> fewer device loop dispatches never hurts
+    exactness; spot-check that hoisting actually engages (rho_fd counts
+    host-hoisted sweeps too, so it is level-count invariant)."""
+    g = GRAPH_CASES["er_dense"]()
+    tb, _ = bup_oracle(g)
+    rhos = {}
+    for lv in (1, 4):
+        th, stats = tip_decompose(g, _cfg(fd_prepeel_levels=lv))
+        np.testing.assert_array_equal(th, tb)
+        rhos[lv] = stats.rho_fd
+    assert rhos[1] == rhos[4]   # same exact schedule, same sweep count
+
+
+# --------------------------------------------------------------------- #
+# property tests: adversarial degree sequences, tip AND wing parity
+# (hypothesis when installed; skipped cleanly otherwise)
+# --------------------------------------------------------------------- #
+def _skewed_graph(n_u, n_v, shape, seed):
+    """Adversarial degree-sequence generator: shapes chosen to defeat
+    degree-sort tile concentration and stress the level/range peels."""
+    rng = np.random.default_rng(seed)
+    if shape == "star":
+        # one dominant hub column + a thin fringe
+        eu = list(range(n_u)) + list(rng.integers(0, n_u, n_u))
+        ev = [0] * n_u + list(rng.integers(1, max(n_v, 2), n_u))
+    elif shape == "block":
+        # near-complete block embedded in a sparse halo
+        bu, bv = max(n_u // 2, 2), max(n_v // 2, 2)
+        mask = rng.random((bu, bv)) < 0.9
+        eu, ev = [list(x) for x in np.nonzero(mask)]
+        eu += list(rng.integers(0, n_u, n_u))
+        ev += list(rng.integers(0, n_v, n_u))
+    else:  # "skew": Zipf-ish row degrees, anti-sorted columns
+        deg = np.maximum((n_v / np.arange(1, n_u + 1)).astype(int), 1)
+        eu, ev = [], []
+        for u, d in enumerate(deg):
+            cols = rng.choice(n_v, size=min(d, n_v), replace=False)
+            eu += [u] * len(cols)
+            ev += list(cols)
+    return BipartiteGraph.from_edges(n_u, n_v, eu, ev)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_u=st.integers(4, 16),
+    n_v=st.integers(3, 12),
+    shape=st.sampled_from(["star", "block", "skew"]),
+    p=st.integers(1, 6),
+    dispatch=st.sampled_from(["subset", "graph"]),
+    seed=st.integers(0, 10_000),
+)
+def test_property_engine_parity_adversarial(n_u, n_v, shape, p, dispatch,
+                                            seed):
+    """Tip AND wing engine paths match their oracles on adversarial
+    degree sequences (stars, near-complete blocks, sort-defeating
+    skew) in both dispatch modes."""
+    g = _skewed_graph(n_u, n_v, shape, seed)
+    cfg = _cfg(num_partitions=p, cd_dispatch=dispatch)
+    tb, _ = bup_oracle(g)
+    th, _ = tip_decompose(g, cfg)
+    np.testing.assert_array_equal(th, tb)
+    po, _ = wing_bup_oracle(g)
+    pr, _ = wing_decompose_engine(g, cfg)
+    np.testing.assert_array_equal(pr, po)
+
+
 @settings(max_examples=12, deadline=None)
 @given(
     n_u=st.integers(3, 12),
@@ -75,3 +345,49 @@ def test_property_wing_equals_oracle(n_u, n_v, density, p, seed):
     po, _ = wing_bup_oracle(g)
     pr, _ = wing_decompose(g, num_partitions=p)
     np.testing.assert_array_equal(po, pr)
+    pe, _ = wing_decompose_engine(g, _cfg(num_partitions=p))
+    np.testing.assert_array_equal(po, pe)
+
+
+# --------------------------------------------------------------------- #
+# subprocess equivalence: both dispatches + both sides in a fresh
+# interpreter (mirrors test_tiled.py's dense/tiled equivalence idiom)
+# --------------------------------------------------------------------- #
+_EQUIV_SCRIPT = r"""
+import sys, json
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core.graph import powerlaw_bipartite
+from repro.core.wing import wing_bup_oracle
+from repro.core.receipt import ReceiptConfig
+from repro.core.engine import wing_decompose_engine
+
+g = powerlaw_bipartite(96, 64, 700, seed=2)
+oracle = wing_bup_oracle(g)[0]
+cfg = dict(num_partitions=3, kernel_blocks=(8, 8, 8), backend="xla")
+subset, _ = wing_decompose_engine(
+    g, ReceiptConfig(cd_dispatch="subset", **cfg))
+graph, st = wing_decompose_engine(
+    g, ReceiptConfig(cd_dispatch="graph", **cfg))
+side_v, _ = wing_decompose_engine(
+    g, ReceiptConfig(cd_dispatch="subset", **cfg), side="V")
+print(json.dumps({
+    "subset_ok": bool((subset == oracle).all()),
+    "graph_ok": bool((graph == oracle).all()),
+    "side_v_ok": bool((side_v == oracle).all()),
+    "max_psi": int(oracle.max()),
+    "graph_round_trips": int(st.host_round_trips),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_subprocess_wing_equivalence():
+    res = subprocess.run(
+        [sys.executable, "-c", _EQUIV_SCRIPT],
+        capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["subset_ok"] and out["graph_ok"] and out["side_v_ok"]
+    assert out["max_psi"] > 0
+    assert out["graph_round_trips"] <= 4
