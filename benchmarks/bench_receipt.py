@@ -32,6 +32,12 @@ round trips (graph dispatch: O(1) per graph, no overflow surcharge),
 the HUC recount fraction and exact psi checksums (gated bit-for-bit by
 ``scripts/bench_gate.py``).
 
+The ``service`` section (PR 9, DESIGN.md §11) benches the serving
+layer: incremental refresh vs warm full recompute on a <=5%-dirty
+mutation ladder (the refresh must take the delta re-peel, stay
+bit-exact and win on wall), plus warm-query p50/p99 latency with a
+zero-dispatch cache-hit requirement.
+
 Usage:  PYTHONPATH=src python benchmarks/bench_receipt.py [--quick] [--out F]
 """
 from __future__ import annotations
@@ -59,12 +65,16 @@ def _load_gate_constants():
     spec.loader.exec_module(mod)
     return (mod.OVF_RT_SURCHARGE, mod.WEDGE_RATIO_TOL,
             mod.MAP_DISPATCH_MIN_REDUCTION, mod.MAP_HIT_RATE_MIN,
-            mod.TILED_WALL_MAX_RATIO, mod.WING_RT_BOUND)
+            mod.TILED_WALL_MAX_RATIO, mod.WING_RT_BOUND,
+            mod.SERVICE_REFRESH_WALL_MAX_RATIO,
+            mod.SERVICE_WARM_QUERY_MAX_DISPATCHES)
 
 
 (OVF_RT_SURCHARGE, WEDGE_RATIO_TOL,
  MAP_DISPATCH_MIN_REDUCTION, MAP_HIT_RATE_MIN,
- TILED_WALL_MAX_RATIO, WING_RT_BOUND) = _load_gate_constants()
+ TILED_WALL_MAX_RATIO, WING_RT_BOUND,
+ SERVICE_REFRESH_WALL_MAX_RATIO,
+ SERVICE_WARM_QUERY_MAX_DISPATCHES) = _load_gate_constants()
 
 from datasets import DATASETS
 from repro.core.graph import powerlaw_bipartite
@@ -527,6 +537,135 @@ def bench_executor_map(*, n_graphs: int = 12, check: bool = True) -> dict:
     return rec
 
 
+def _service_mutations(g, count, rng):
+    """``count`` inserts absent from ``g`` + ``count`` present deletes,
+    both biased to LOW-degree endpoints (the regime where the adaptive
+    stop ladder stays low and partial re-peels actually happen — the
+    serving layer's target traffic: cold users/items churn, the dense
+    core is stable)."""
+    du = np.bincount(g.edges_u, minlength=g.n_u)
+    dv = np.bincount(g.edges_v, minlength=g.n_v)
+    u_pool = np.argsort(du)[: max(8, g.n_u // 4)]
+    v_pool = np.argsort(dv)[: max(8, g.n_v // 4)]
+    have = set((g.edges_u.astype(np.int64) * g.n_v
+                + g.edges_v).tolist())
+    ins = []
+    while len(ins) < count:
+        u = int(rng.choice(u_pool))
+        v = int(rng.choice(v_pool))
+        k = u * g.n_v + v
+        if k not in have:
+            have.add(k)
+            ins.append((u, v))
+    score = du[g.edges_u] + dv[g.edges_v]
+    drop = np.argsort(score)[:count]
+    return np.array(ins, np.int64), drop
+
+
+def bench_service(*, quick: bool, check: bool, partitions: int = 8) -> dict:
+    """Serving layer (PR 9, DESIGN.md §11): incremental refresh vs full
+    recompute on a dirty-fraction ladder, plus warm-query latency.
+
+    Per rung: re-ingest the seed graph, run the full decompose (primes
+    the CD-bound stop ladder), one warm-up mutation round (compiles the
+    prefix-peel loops at these shapes), then a MEASURED round — wall of
+    ``flush()`` draining the coalesced refresh vs a warm from-scratch
+    ``Executor.decompose`` of the same mutated graph in the same
+    process.  The refresh must take the delta path, stay bit-exact and
+    beat the full wall (gated here and by scripts/bench_gate.py).  The
+    warm-query loop then times repeat reads of the fresh dataset: p50 /
+    p99 latency and the number of flush-dispatching misses (must be
+    <= SERVICE_WARM_QUERY_MAX_DISPATCHES — fresh reads are pure cache
+    hits, zero device work)."""
+    from repro.api import EngineConfig
+    from repro.service import DecompositionService, ServiceConfig
+
+    n_u, n_v, m = (128, 96, 1100) if quick else (256, 160, 2600)
+    fracs = (0.02,) if quick else (0.01, 0.02, 0.05)
+    g0 = interaction_graph(n_u, n_v, m, seed=31)
+    cfg = EngineConfig(num_partitions=partitions, backend="xla")
+    # threshold above the ladder's top rung so every rung exercises the
+    # delta path (the threshold fallback has its own test coverage)
+    svc = DecompositionService(cfg, ServiceConfig(
+        refresh_dirty_threshold=0.12))
+    ex = svc._executor("tip")
+    rng = np.random.default_rng(5)
+    name = "bench"
+
+    ladder = []
+    for frac in fracs:
+        k = max(1, int(round(frac * g0.m / 2)))
+        svc.ingest(name, g0, workload="tip", replace=True)
+        svc.flush(name)                 # full run: primes the CD bounds
+        for measured in (False, True):  # warm-up round, then measured
+            g = svc._datasets[name].graph
+            ins, drop = _service_mutations(g, k, rng)
+            svc.insert_edges(name, ins[:, 0], ins[:, 1])
+            svc.delete_edges(name, g.edges_u[drop], g.edges_v[drop])
+            t0 = time.perf_counter()
+            svc.flush(name)
+            refresh_wall = time.perf_counter() - t0
+        ds = svc._datasets[name]
+        stats = ds.result.stats
+        full_wall = float("inf")
+        for _ in range(2):              # warm from-scratch comparator
+            t0 = time.perf_counter()
+            ref = ex.decompose(ds.graph)
+            full_wall = min(full_wall, time.perf_counter() - t0)
+        exact = bool((np.asarray(ds.result.numbers)
+                      == np.asarray(ref.numbers)).all())
+        if check:
+            assert exact, (f"service refresh diverged from from-scratch "
+                           f"decompose at dirty={frac}")
+        stop = stats.refresh_stop
+        rung = {
+            "dirty_frac": frac,
+            "dirty_edges": stats.refresh_dirty_edges,
+            "mode": stats.refresh_mode,
+            "stop": None if stop == float("inf") else stop,
+            "subsets_repeeled": stats.refresh_subsets_repeeled,
+            "subsets_total": stats.refresh_subsets_total,
+            "refresh_dispatches": (stats.device_loop_calls
+                                   + stats.host_round_trips),
+            "refresh_wall_s": refresh_wall,
+            "full_wall_s": full_wall,
+            "refresh_speedup": full_wall / max(refresh_wall, 1e-9),
+            "exact": exact,
+        }
+        ladder.append(rung)
+        print(f"  dirty={frac:4.0%} ({rung['dirty_edges']:3d} edges) "
+              f"mode={rung['mode']:5s} subsets="
+              f"{rung['subsets_repeeled']}/{rung['subsets_total']} "
+              f"refresh={refresh_wall:.3f}s full={full_wall:.3f}s "
+              f"({rung['refresh_speedup']:.1f}x) exact={exact}",
+              flush=True)
+
+    # warm-query loop on the (fresh) dataset: every read is a cache hit
+    before = svc.report()["datasets"][name]
+    n_queries = 200
+    lat = []
+    for _ in range(n_queries):
+        t0 = time.perf_counter()
+        svc.query(name)
+        lat.append(time.perf_counter() - t0)
+    after = svc.report()["datasets"][name]
+    hits = after["query_hits"] - before["query_hits"]
+    warm_query = {
+        "queries": n_queries,
+        "hits": hits,
+        # a non-hit read drains the queue: at most one dispatch batch
+        "dispatching_misses": n_queries - hits,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+    }
+    print(f"[bench_receipt] service: warm query p50="
+          f"{warm_query['p50_ms']:.3f}ms p99={warm_query['p99_ms']:.3f}ms "
+          f"hits={hits}/{n_queries}", flush=True)
+    return {"workload": "tip", "n_u": n_u, "n_v": n_v, "m": g0.m,
+            "num_partitions": partitions, "ladder": ladder,
+            "warm_query": warm_query}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_receipt.json")
@@ -557,6 +696,10 @@ def main(argv=None) -> int:
     exec_map = bench_executor_map(
         n_graphs=8 if args.quick else 12, check=not args.no_check)
 
+    print("[bench_receipt] service (incremental refresh, DESIGN.md §11)",
+          flush=True)
+    service = bench_service(quick=args.quick, check=not args.no_check)
+
     payload = {
         "benchmark": "receipt_peel_engine",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -565,6 +708,7 @@ def main(argv=None) -> int:
         "representations": representations,
         "wing": wing,
         "executor_map": exec_map,
+        "service": service,
     }
     Path(args.out).write_text(json.dumps(payload, indent=2))
     print(f"[bench_receipt] wrote {args.out}")
@@ -617,6 +761,25 @@ def main(argv=None) -> int:
                   f"gate FAILED (wedge_ratio={r['wedge_ratio']:.3f}, "
                   f"wall_ratio={r['wall_ratio_warm']:.2f})")
         ok = ok and t_ok
+    # serving layer (PR 9 acceptance): every ladder rung stays on the
+    # delta path, exact, and beats the same-process full-recompute wall;
+    # the warm-query loop serves from the cached decomposition
+    for r in service["ladder"]:
+        s_ok = (r["mode"] == "delta" and r["exact"]
+                and r["refresh_wall_s"]
+                <= r["full_wall_s"] * SERVICE_REFRESH_WALL_MAX_RATIO)
+        if not s_ok:
+            print(f"[bench_receipt] service dirty={r['dirty_frac']}: "
+                  f"gate FAILED (mode={r['mode']}, exact={r['exact']}, "
+                  f"refresh={r['refresh_wall_s']:.3f}s vs "
+                  f"full={r['full_wall_s']:.3f}s)")
+        ok = ok and s_ok
+    if (service["warm_query"]["dispatching_misses"]
+            > SERVICE_WARM_QUERY_MAX_DISPATCHES):
+        print(f"[bench_receipt] service: warm-query gate FAILED "
+              f"({service['warm_query']['dispatching_misses']} "
+              f"dispatching misses)")
+        ok = False
     if not args.quick:
         # wall-clock criteria run on the FULL bench only: --quick is the
         # per-push CI smoke (scripts/ci.sh quick fails on this exit

@@ -82,6 +82,9 @@ if [ "$MODE" = "quick" ]; then
   echo "== examples smoke (headless, RECEIPT_SMOKE=1, new repro.api surface) =="
   RECEIPT_SMOKE=1 python examples/quickstart.py
   RECEIPT_SMOKE=1 python examples/recsys_tip_filtering.py
+  echo "== service smoke (ingest -> query -> refresh -> query, exactness) =="
+  python -m repro.launch.serve --selftest --workload tip
+  python -m repro.launch.serve --selftest --workload wing
   echo "== engine bench (quick) + regression gate vs BENCH_receipt.json =="
   python benchmarks/bench_receipt.py --quick --out /tmp/bench_quick.json
   python scripts/bench_gate.py --fresh /tmp/bench_quick.json

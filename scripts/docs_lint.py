@@ -114,6 +114,17 @@ SYMBOL_SECTIONS = {
         "repro.core.wing.wing_bup_oracle",
         "repro.api.verify_wing_decomposition",
     ],
+    "## 11. Serving layer": [
+        "repro.service.DecompositionService",
+        "repro.service.RequestQueue",
+        "repro.service.refresh_dataset",
+        "repro.core.engine.refresh.repeel_tip_prefix",
+        "repro.core.engine.refresh.repeel_wing_prefix",
+        "repro.kernels.ops.vertex_support_edge_delta",
+        "repro.api.Decomposition",
+        "repro.api.errors.StaleReadError",
+        "repro.api.errors.ServiceUnavailableError",
+    ],
 }
 
 

@@ -58,6 +58,7 @@ __all__ = [
     "ExecutionPlan",
     "Planner",
     "Executor",
+    "Decomposition",
     "TipDecomposition",
     "WingDecomposition",
     "decompose",
@@ -70,6 +71,9 @@ __all__ = [
     "PeelOverflowError",
     "VerificationError",
     "FleetPartialFailure",
+    "DatasetNotFoundError",
+    "StaleReadError",
+    "ServiceUnavailableError",
     "FaultInjector",
     "FaultSpec",
     "errors",
@@ -81,6 +85,7 @@ _LAZY = {
     "ExecutionPlan": "plan",
     "Planner": "plan",
     "Executor": "executor",
+    "Decomposition": "executor",
     "TipDecomposition": "executor",
     "WingDecomposition": "executor",
     "decompose": "executor",
@@ -93,6 +98,9 @@ _LAZY = {
     "PeelOverflowError": "errors",
     "VerificationError": "errors",
     "FleetPartialFailure": "errors",
+    "DatasetNotFoundError": "errors",
+    "StaleReadError": "errors",
+    "ServiceUnavailableError": "errors",
     "FaultInjector": "faults",
     "FaultSpec": "faults",
 }

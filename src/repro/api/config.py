@@ -181,6 +181,49 @@ class EngineConfig:
         return EngineConfig(side=side, dtype=jnp.dtype(cfg.dtype).name, **kw)
 
     # ------------------------------------------------------------------ #
+    # rendering
+    # ------------------------------------------------------------------ #
+    def describe(self) -> str:
+        """Human-readable rendering of the RESOLVED knob set.
+
+        Unlike ``to_dict`` (which round-trips exactly what was given),
+        this renders what the engine will actually run: the backend
+        after auto-resolution, non-default knobs flagged, and the
+        service-layer fields grouped separately — the service's config
+        endpoint and ``--describe`` CLI both print this.
+        """
+        from ..kernels import ops as kops
+
+        resolved = kops.resolve_backend(self.backend)
+        lines = [f"EngineConfig ({self.workload} workload, side={self.side})"]
+        defaults = {f.name: f.default for f in dataclasses.fields(self)}
+        backend_note = (f"{self.backend!r} -> {resolved}"
+                        if self.backend != resolved else repr(resolved))
+        lines.append(f"  backend:          {backend_note}")
+        shown = {"side", "workload", "backend"}
+        for name in ("num_partitions", "kernel_blocks", "representation",
+                     "cd_dispatch", "fd_mode", "fd_update_mode",
+                     "degree_sort", "use_huc", "use_dgm", "device_loop",
+                     "dtype"):
+            val = getattr(self, name)
+            flag = "" if val == defaults.get(name) else "   [non-default]"
+            lines.append(f"  {name + ':':<17} {val!r}{flag}")
+        shown.update(("num_partitions", "kernel_blocks", "representation",
+                      "cd_dispatch", "fd_mode", "fd_update_mode",
+                      "degree_sort", "use_huc", "use_dgm", "device_loop",
+                      "dtype"))
+        extras = [f.name for f in dataclasses.fields(self)
+                  if f.name not in shown
+                  and getattr(self, f.name) != defaults.get(f.name)]
+        for name in extras:
+            lines.append(f"  {name + ':':<17} {getattr(self, name)!r}"
+                         "   [non-default]")
+        if self.memory_budget_bytes is None and "memory_budget_bytes" \
+                not in extras:
+            lines.append("  memory budget:    unlimited")
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------------ #
     # strict serialization round trip
     # ------------------------------------------------------------------ #
     def to_dict(self) -> Dict[str, Any]:

@@ -26,6 +26,16 @@ The taxonomy (one class per failure domain, ingestion -> results):
 * ``FleetPartialFailure``    — ``Executor.map(strict=True)`` aggregate:
   per-graph errors for the failed fleet members, healthy count attached.
 
+The serving layer (``repro.service``, DESIGN.md §11) extends the
+taxonomy with three request-path classes:
+
+* ``DatasetNotFoundError``   — query/mutation named a dataset the
+  service does not hold (also a ``KeyError`` for dict-idiom handlers).
+* ``StaleReadError``         — a ``staleness="strict"`` query hit a
+  dataset whose graph version is ahead of its decomposition result.
+* ``ServiceUnavailableError``— admission control rejected the request
+  (queue at capacity, or the service cannot produce a result at all).
+
 This module is deliberately LEAF-LEVEL: stdlib only, no jax, no numpy,
 no repro imports — ``core/graph.py`` (numpy-only by contract) and the
 kernel layer both import it without pulling the engine in.
@@ -42,11 +52,15 @@ __all__ = [
     "PeelOverflowError",
     "VerificationError",
     "FleetPartialFailure",
+    "DatasetNotFoundError",
+    "StaleReadError",
+    "ServiceUnavailableError",
 ]
 
 # context keys rendered in a stable order (everything else alphabetical)
 _CTX_ORDER = ("plan_signature", "dispatch", "backend", "subset", "chunk",
-              "graph_index", "site", "injected")
+              "graph_index", "site", "injected", "dataset", "version",
+              "result_version")
 
 
 class ReceiptError(Exception):
@@ -138,3 +152,28 @@ class FleetPartialFailure(ReceiptError):
         super().__init__(
             f"{message}: {len(self.errors)} of {len(self.errors) + n_ok} "
             f"graph(s) failed ({detail})", **context)
+
+
+class DatasetNotFoundError(ReceiptError, KeyError):
+    """A service request named a dataset that was never ingested (or was
+    dropped).  Also a ``KeyError`` so mapping-idiom handlers work.
+
+    Note ``str(exc)`` goes through ``ReceiptError`` (the message, not
+    KeyError's repr-of-args quoting).
+    """
+
+    def __str__(self) -> str:  # KeyError.__str__ would repr() the args
+        return self._render()
+
+
+class StaleReadError(ReceiptError):
+    """A ``staleness="strict"`` query hit a dataset whose graph version
+    is ahead of the version its cached decomposition was computed at.
+    Context carries ``dataset``, ``version`` (graph) and
+    ``result_version`` so callers can decide to retry after a flush."""
+
+
+class ServiceUnavailableError(ReceiptError, RuntimeError):
+    """The service cannot accept or fulfil the request right now —
+    request queue at capacity (admission control), or no execution path
+    can produce a result for the dataset."""

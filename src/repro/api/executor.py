@@ -57,13 +57,14 @@ from .errors import (
     FleetPartialFailure,
     GraphValidationError,
     KernelBackendError,
+    PlanInfeasibleError,
     ReceiptError,
     VerificationError,
 )
 from .plan import ExecutionPlan, Planner
 
-__all__ = ["Executor", "TipDecomposition", "WingDecomposition",
-           "decompose", "verify_tip_decomposition",
+__all__ = ["Executor", "Decomposition", "TipDecomposition",
+           "WingDecomposition", "decompose", "verify_tip_decomposition",
            "verify_wing_decomposition"]
 
 # device-program failures the fallback chain recovers from: the taxonomy's
@@ -82,10 +83,59 @@ _QUARANTINE_AFTER = 2
 
 
 # --------------------------------------------------------------------- #
-# result object
+# result objects
 # --------------------------------------------------------------------- #
+class Decomposition:
+    """Shared protocol of the two decomposition results (DESIGN.md §11).
+
+    The serving layer handles tip and wing datasets through ONE
+    interface: ``numbers`` (the per-element level array — theta per
+    peeled-side vertex, psi per edge), ``max_level()``, ``subgraph_at(k)``
+    and ``to_dict()``.  The workload-specific spellings
+    (``theta``/``max_theta`` on tip, ``edge_wing``/``max_psi`` on wing)
+    remain as thin deprecated aliases; new code should use the protocol
+    names.
+
+    Subclasses set ``workload`` and ``axis`` and provide ``numbers`` and
+    ``subgraph_at`` (the return shapes differ per axis — vertex
+    subgraphs carry member/column id maps, edge subgraphs carry the
+    surviving edge indices).
+    """
+
+    workload: str = ""
+    axis: str = ""                   # "vertex" | "edge"
+
+    @property
+    def numbers(self) -> np.ndarray:
+        """Per-element decomposition levels (int64, canonical order)."""
+        raise NotImplementedError
+
+    def max_level(self) -> int:
+        """The densest level present (0 for an empty peel axis)."""
+        nums = self.numbers
+        return int(nums.max()) if nums.size else 0
+
+    def subgraph_at(self, k: float):
+        raise NotImplementedError
+
+    def to_dict(self) -> Dict:
+        """JSON-able summary: workload, sizes, levels — the service's
+        query-response payload shape."""
+        g = self.graph                               # type: ignore[attr-defined]
+        return {
+            "workload": self.workload,
+            "axis": self.axis,
+            "side": self.side,                       # type: ignore[attr-defined]
+            "n_u": int(g.n_u),
+            "n_v": int(g.n_v),
+            "m": int(g.m),
+            "numbers": [int(x) for x in np.asarray(self.numbers)],
+            "max_level": self.max_level(),
+        }
+
+
 @dataclasses.dataclass
-class TipDecomposition:
+class TipDecomposition(Decomposition):
     """Result of one tip decomposition: tip numbers + run evidence +
     hierarchy queries.
 
@@ -101,12 +151,24 @@ class TipDecomposition:
     stats: RunStats
     plan: Optional[ExecutionPlan] = None
 
+    workload = "tip"
+    axis = "vertex"
+
+    @property
+    def numbers(self) -> np.ndarray:
+        """Protocol view of ``theta`` (``Decomposition.numbers``)."""
+        return self.theta
+
     @property
     def n(self) -> int:
         return int(self.theta.size)
 
     def vertex_tip(self, v: int) -> int:
-        """Tip number of one peeled-side vertex."""
+        """Tip number of one peeled-side vertex.
+
+        Deprecated alias — prefer ``numbers[v]`` via the shared
+        ``Decomposition`` protocol.
+        """
         if not 0 <= v < self.theta.size:
             raise IndexError(
                 f"vertex {v} out of range for side {self.side!r} "
@@ -114,8 +176,8 @@ class TipDecomposition:
         return int(self.theta[v])
 
     def max_theta(self) -> int:
-        """The densest tip level present (0 for an empty side)."""
-        return int(self.theta.max()) if self.theta.size else 0
+        """Deprecated alias of ``max_level()``."""
+        return self.max_level()
 
     def subgraph_at(self, theta_min: float):
         """The theta_min-tip: the subgraph induced on peeled-side
@@ -134,7 +196,7 @@ class TipDecomposition:
 
 
 @dataclasses.dataclass
-class WingDecomposition:
+class WingDecomposition(Decomposition):
     """Result of one wing (bitruss) decomposition: per-EDGE wing numbers
     + run evidence + hierarchy queries (DESIGN.md §10).
 
@@ -154,20 +216,32 @@ class WingDecomposition:
     stats: RunStats
     plan: Optional[ExecutionPlan] = None
 
+    workload = "wing"
+    axis = "edge"
+
+    @property
+    def numbers(self) -> np.ndarray:
+        """Protocol view of ``edge_wing`` (``Decomposition.numbers``)."""
+        return self.edge_wing
+
     @property
     def m(self) -> int:
         return int(self.edge_wing.size)
 
     def edge_psi(self, e: int) -> int:
-        """Wing number of one edge (canonical edge order)."""
+        """Wing number of one edge (canonical edge order).
+
+        Deprecated alias — prefer ``numbers[e]`` via the shared
+        ``Decomposition`` protocol.
+        """
         if not 0 <= e < self.edge_wing.size:
             raise IndexError(
                 f"edge {e} out of range (m={self.edge_wing.size})")
         return int(self.edge_wing[e])
 
     def max_psi(self) -> int:
-        """The densest wing level present (0 for an edgeless graph)."""
-        return int(self.edge_wing.max()) if self.edge_wing.size else 0
+        """Deprecated alias of ``max_level()``."""
+        return self.max_level()
 
     def subgraph_at(self, psi_min: float):
         """The psi_min-wing: the subgraph of edges with wing number >=
@@ -325,6 +399,66 @@ class Executor:
         return TipDecomposition(graph=graph, side=self.side, theta=theta,
                                 stats=stats, plan=plan)
 
+    # ------------------------------------------------------------------ #
+    # incremental re-peel (serving layer, DESIGN.md §11)
+    # ------------------------------------------------------------------ #
+    def repeel(self, graph: BipartiteGraph, *, sup0: np.ndarray,
+               numbers_old: np.ndarray, stops: Sequence[float],
+               watch: np.ndarray,
+               plan: Optional[ExecutionPlan] = None) -> Tuple[np.ndarray,
+                                                              RunStats]:
+        """Exact incremental refresh: prefix re-peel of the POST-mutation
+        ``graph`` from delta-maintained supports, stopping at the first
+        CD bound that clears the mutation ceiling
+        (``core.engine.refresh`` module docstring).
+
+        ``sup0``/``numbers_old`` are the maintained whole-graph supports
+        and the pre-mutation levels on the PEELED axis in canonical
+        order (per-vertex for tip — ``side="V"`` transposes internally,
+        exactly like ``decompose`` — per-edge for wing); ``stops`` is
+        the ascending stop-level ladder (first rung already above the
+        deletion ceiling); ``watch`` the inserted elements whose new
+        levels certify the insertion ceiling.
+
+        Runs SINGLE-backend (the plan's choice, no fallback walk): the
+        service layer's degradation story for a failed refresh is a full
+        ``decompose`` recompute, not a slower exact replay of the same
+        delta.  Plans routed to the tiled representation are rejected —
+        the refresh loops are dense-geometry.
+
+        Returns ``(numbers_new int64, stats)`` with the refresh evidence
+        fields (``stats.refresh_stop`` etc.) populated by the engine;
+        bit-identical to ``decompose(graph).numbers``.
+        """
+        from ..core.engine import repeel_tip_prefix, repeel_wing_prefix
+
+        if plan is None:
+            plan = self.plan(graph)
+        if plan.representation == "tiled":
+            raise PlanInfeasibleError(
+                "incremental re-peel runs on the dense geometry; this "
+                "plan routed to the tiled representation — refresh by "
+                "full recompute instead", plan_signature=plan.signature,
+                dispatch="repeel")
+        entry = self._seed(plan)
+        rcfg = self._run_cfg(plan.backend)
+        if self.workload == "tip" and self.side == "V":
+            graph = graph.transposed()
+        stats = RunStats()
+        stats.refresh_mode = "delta"
+        with self._fault_scope():
+            if self.workload == "wing":
+                numbers, _stop = repeel_wing_prefix(
+                    graph, sup0, numbers_old, stops, watch, rcfg, stats,
+                    plan=plan)
+            else:
+                numbers, _stop = repeel_tip_prefix(
+                    graph, sup0, numbers_old, stops, watch, rcfg, stats,
+                    plan=plan)
+        stats.backend_used = plan.backend
+        self._absorb(plan, entry)
+        return numbers, stats
+
     def _run_cfg(self, backend: str) -> ReceiptConfig:
         """Engine config for one (possibly degraded) execution attempt."""
         rcfg = self.config
@@ -456,11 +590,14 @@ class Executor:
         """
         cfg = self.config
         if self.workload != "tip":
-            raise ValueError(
+            # structured (PR 6 taxonomy): the plan — not the input — is
+            # infeasible; PlanInfeasibleError IS a ValueError, so
+            # pre-taxonomy `except ValueError` handlers keep working
+            raise PlanInfeasibleError(
                 "Executor.map batches VERTEX-axis (tip) decompositions; "
                 f"workload={self.workload!r} is not mappable — use "
                 "Executor.decompose per graph (the wing FD stack already "
-                "batches its subsets)")
+                "batches its subsets)", dispatch="map")
         if cfg.fd_mode != "level":
             raise ValueError(
                 "Executor.map batches graphs through the level-peel "

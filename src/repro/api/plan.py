@@ -273,6 +273,21 @@ class Planner:
         if self.side not in ("U", "V"):
             raise ValueError(f"side must be 'U' or 'V', got {self.side!r}")
 
+    def describe(self) -> str:
+        """Resolved-configuration rendering for the service's config
+        endpoint: the ``EngineConfig.describe()`` knob set plus the
+        planner-level state (admission budget, legacy-config mode)."""
+        if self.config is not None:
+            body = self.config.describe()
+        else:
+            body = (f"ReceiptConfig (legacy engine currency, "
+                    f"{self.workload} workload, side={self.side}; no "
+                    "admission control)")
+        budget = self.memory_budget
+        tail = ("  admission budget: "
+                + (f"{budget / 2**20:.1f} MiB" if budget else "unlimited"))
+        return body + "\n" + tail
+
     # ------------------------------------------------------------------ #
     def plan(self, graph: BipartiteGraph, *, mesh=None) -> ExecutionPlan:
         if not isinstance(graph, BipartiteGraph):

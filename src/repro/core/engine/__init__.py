@@ -35,6 +35,7 @@ from .peel_loop import (
     device_peel_loop,
     host_sweep,
 )
+from .refresh import repeel_tip_prefix, repeel_wing_prefix
 from .tiled import receipt_tiled
 from .wing import (
     device_wing_graph_loop,
@@ -53,6 +54,8 @@ __all__ = [
     "receipt_wing_cd",
     "receipt_wing_fd",
     "receipt_tiled",
+    "repeel_tip_prefix",
+    "repeel_wing_prefix",
     "device_wing_graph_loop",
     "parb_tip_decompose",
     "cd_checkpoint_state",

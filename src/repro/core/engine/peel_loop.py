@@ -301,6 +301,17 @@ class RunStats:
     #                               # chunk as a straggler (EWMA threshold)
     verified: bool = False          # decompose(verify=True) ran + passed
     verify_checks: int = 0          # invariant checks the verifier executed
+    # serving-layer incremental refresh evidence (DESIGN.md §11): how a
+    # dataset's numbers were brought up to date after edge mutations
+    refresh_mode: str = ""          # "" (not a refresh) | "delta" | "full"
+    refresh_t_hi: float = 0.0       # change-ceiling bound of the mutation
+    #                               # batch (max mutated-endpoint support
+    #                               # in the union graph)
+    refresh_stop: float = 0.0       # the CD bound the prefix re-peel
+    #                               # stopped at (inf = whole range)
+    refresh_subsets_repeeled: int = 0   # old CD subsets below the stop
+    refresh_subsets_total: int = 0      # old CD subset count
+    refresh_dirty_edges: int = 0    # inserted + deleted edges absorbed
 
     @property
     def wedges_total(self) -> int:

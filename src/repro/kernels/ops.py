@@ -55,6 +55,7 @@ __all__ = [
     "b2_stack",
     "edge_support_all",
     "edge_support_delta",
+    "vertex_support_edge_delta",
     "find_hi_device",
     "tighten_extents_device",
     "default_backend",
@@ -500,3 +501,59 @@ def edge_support_delta(
     _, dmat = jax.lax.fori_loop(
         0, rows.shape[0], body, (a, jnp.zeros_like(a)))
     return dmat[eu, ev]
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "blocks"))
+def vertex_support_edge_delta(
+    a: jnp.ndarray,
+    mu: jnp.ndarray,
+    mv: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    backend: Optional[str] = None,
+    blocks: tuple = DEFAULT_BLOCKS,
+) -> jnp.ndarray:
+    """Incremental VERTEX-axis edge-mutation update: total butterfly-
+    support decrease of every U row after removing the edge set
+    ``(mu[i], mv[i])`` from ``a``, SEQUENTIALLY exact (the tip-number
+    analogue of ``edge_support_delta`` — the maintenance op of the
+    serving layer's incremental refresh, DESIGN.md §11).
+
+    Removing one present edge (u, v) changes only the wedge counts
+    ``W[u, w]`` (``W = A Aᵀ``), each by ``a[w, v]``, so the closed-form
+    per-row delta is one masked matvec:
+
+        delta(w != u) = a[w, v] * (W[u, w] - 1)
+        delta(u)      = sum_{w != u} delta(w)    (= the edge's support)
+
+    A ``fori_loop`` composes the per-edge deltas against the matrix AS
+    ALREADY PEELED by the predecessors, so the summed delta equals
+    before-minus-after of the counting kernel exactly (f32 integer
+    regime, DESIGN.md §8) — run it on the union graph with ``rows`` =
+    the inserted set to get per-vertex GAINS, with ``rows`` = the
+    deleted set to get per-vertex LOSSES.  ``valid`` (same shape as
+    ``mu``) masks padding entries, so mutation batches bucket to stable
+    shapes.  Slots naming an absent cell contribute zero (the delta is
+    gated on ``a[u, v]``).  ``backend``/``blocks`` are accepted for
+    signature parity (validated; the deltas are pure-jnp everywhere).
+
+    Returns ``delta`` (n_u,) float, >= 0.
+    """
+    resolve_backend(backend)
+
+    def body(i, carry):
+        a_cur, acc = carry
+        on = valid[i]
+        u, v = mu[i], mv[i]
+        wvec = a_cur @ a_cur[u]                   # W[u, :] (edge present)
+        c = a_cur[:, v] * (wvec - 1.0)
+        c = c.at[u].set(0.0)
+        c = c.at[u].set(jnp.sum(c))
+        c = c * a_cur[u, v]                       # absent cell -> no-op
+        c = jnp.where(on, c, jnp.zeros_like(c))
+        a_next = jnp.where(on, a_cur.at[u, v].set(0.0), a_cur)
+        return a_next, acc + c
+
+    _, delta = jax.lax.fori_loop(
+        0, mu.shape[0], body, (a, jnp.zeros(a.shape[0], a.dtype)))
+    return delta

@@ -1,77 +1,152 @@
-"""Serving driver: ``python -m repro.launch.serve --arch <id>``.
+"""Decomposition service driver: ``python -m repro.launch.serve``.
 
-Batched request loop over the decode step (the serve_step the decode_32k
-/ long_500k dry-run cells lower at production scale): continuous batching
-of synthetic requests with per-slot prompt/generation state, one jitted
-decode dispatch per token across the whole batch.
+The CLI front of ``repro.service`` (DESIGN.md §11): ingest a dataset,
+decompose it, answer queries, stream edge mutations through the
+incremental-refresh path.  Two modes:
+
+* ``--selftest`` — the CI smoke: ingest → query → mutate → refresh →
+  query on a small synthetic graph, asserting the refreshed numbers are
+  bit-identical to a from-scratch decomposition (exit code 0/1).
+* default demo — ingest ``--n-u x --n-v x --edges`` synthetic datasets,
+  run a mutation/query traffic loop and print the serving report.
+
+The LM decode loop that used to live here moved to
+``launch/serve_lm.py`` (``BatchedServer`` is re-exported below for
+compatibility).
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_bundle
-from ..models import transformer as tf_lib
+
+def _lazy_batched_server(name):
+    if name == "BatchedServer":                     # compat shim
+        from .serve_lm import BatchedServer
+
+        return BatchedServer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-class BatchedServer:
-    """Continuous-batching decode server over a fixed slot count."""
+__getattr__ = _lazy_batched_server
 
-    def __init__(self, bundle, batch_slots: int = 4, max_len: int = 64):
-        self.cfg = bundle.cfg
-        self.params = bundle.init_params(jax.random.PRNGKey(0))
-        self.slots = batch_slots
-        self.max_len = max_len
-        self.cache = tf_lib.init_cache(self.cfg, batch_slots, max_len)
-        self._decode = jax.jit(
-            lambda p, c, t: tf_lib.lm_decode_step(p, c, t, self.cfg)
-        )
 
-    def run(self, prompts: np.ndarray, gen_len: int) -> np.ndarray:
-        """prompts: (slots, prompt_len) int32.  Returns (slots, gen_len)."""
-        n, plen = prompts.shape
-        assert n == self.slots
-        logits = None
-        for t in range(plen):
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(prompts[:, t])
-            )
-        outs = []
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        for _ in range(gen_len):
-            outs.append(np.asarray(tok))
-            logits, self.cache = self._decode(self.params, self.cache, tok)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        return np.stack(outs, axis=1)
+def _fresh_edges(g, count, rng):
+    """``count`` edges absent from ``g`` (uniform endpoints)."""
+    have = set((g.edges_u.astype(np.int64) * g.n_v + g.edges_v).tolist())
+    out = []
+    while len(out) < count:
+        u = int(rng.integers(g.n_u))
+        v = int(rng.integers(g.n_v))
+        k = u * g.n_v + v
+        if k not in have:
+            have.add(k)
+            out.append((u, v))
+    return np.array(out, np.int64)
+
+
+def selftest(workload: str = "tip", verbose: bool = True) -> int:
+    """Ingest → query → refresh → query smoke with an exactness check."""
+    from ..api import EngineConfig, Executor
+    from ..data.synthetic import interaction_graph
+    from ..service import DecompositionService, ServiceConfig
+
+    rng = np.random.default_rng(0)
+    cfg = EngineConfig(num_partitions=6, backend="xla")
+    svc = DecompositionService(cfg, ServiceConfig(
+        refresh_dirty_threshold=0.10))
+    g = interaction_graph(72, 48, 560, seed=11)
+    svc.ingest("smoke", g, workload=workload)
+    lvl0 = svc.max_level("smoke")
+    ins = _fresh_edges(g, 4, rng)
+    svc.insert_edges("smoke", ins[:, 0], ins[:, 1])
+    drop = rng.choice(g.m, 4, replace=False)
+    svc.delete_edges("smoke", g.edges_u[drop], g.edges_v[drop])
+    dec = svc.query("smoke")                       # drains the refresh
+    stats = dec.stats
+    import dataclasses
+
+    ref = Executor(dataclasses.replace(cfg, workload=workload)).decompose(
+        svc._datasets["smoke"].graph)
+    exact = bool((np.asarray(dec.numbers) == np.asarray(ref.numbers)).all())
+    if verbose:
+        print(f"[serve] selftest {workload}: max_level {lvl0} -> "
+              f"{dec.max_level()}, refresh={stats.refresh_mode} "
+              f"stop={stats.refresh_stop:g} subsets="
+              f"{stats.refresh_subsets_repeeled}/"
+              f"{stats.refresh_subsets_total} exact={exact}")
+    if not exact:
+        print("[serve] SELFTEST FAILED: refreshed numbers differ from "
+              "from-scratch decomposition")
+        return 1
+    return 0
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="minitron-8b")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--gen-len", type=int, default=16)
+    ap = argparse.ArgumentParser(
+        description="decomposition service driver (repro.service)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="ingest->query->refresh->query smoke; exit 0/1")
+    ap.add_argument("--workload", default="tip", choices=("tip", "wing"))
+    ap.add_argument("--n-u", type=int, default=128)
+    ap.add_argument("--n-v", type=int, default=96)
+    ap.add_argument("--edges", type=int, default=1500)
+    ap.add_argument("--datasets", type=int, default=2)
+    ap.add_argument("--mutations", type=int, default=3,
+                    help="mutation/query rounds per dataset")
+    ap.add_argument("--batch", type=int, default=6,
+                    help="edges inserted+deleted per mutation round")
+    ap.add_argument("--partitions", type=int, default=8)
+    ap.add_argument("--describe", action="store_true",
+                    help="print the resolved config and exit")
     args = ap.parse_args(argv)
 
-    bundle = get_bundle(args.arch, reduced=True)
-    server = BatchedServer(bundle, batch_slots=args.slots,
-                           max_len=args.prompt_len + args.gen_len + 4)
+    if args.selftest:
+        return selftest(args.workload)
+
+    from ..api import EngineConfig
+    from ..data.synthetic import interaction_graph
+    from ..service import DecompositionService
+
+    cfg = EngineConfig(num_partitions=args.partitions, backend="xla")
+    svc = DecompositionService(cfg)
+    if args.describe:
+        print(svc.describe())
+        return 0
     rng = np.random.default_rng(0)
-    prompts = rng.integers(
-        0, bundle.cfg.vocab, (args.slots, args.prompt_len), dtype=np.int32
-    )
+    names = []
+    for i in range(args.datasets):
+        g = interaction_graph(args.n_u, args.n_v, args.edges, seed=i)
+        name = f"ds{i}"
+        svc.ingest(name, g, workload=args.workload)
+        names.append(name)
     t0 = time.perf_counter()
-    out = server.run(prompts, args.gen_len)
-    dt = time.perf_counter() - t0
-    print(f"[serve] {args.slots} slots x ({args.prompt_len}+{args.gen_len}) "
-          f"tokens in {dt:.1f}s "
-          f"({args.slots*(args.prompt_len+args.gen_len)/dt:.0f} tok/s)")
-    print(f"[serve] sample output: {out[0][:12]}")
+    svc.flush()                                     # admission batching
+    t_ingest = time.perf_counter() - t0
+    print(f"[serve] ingested {len(names)} dataset(s) in {t_ingest:.2f}s "
+          f"(flush: {svc.last_flush_report})")
+    for rnd in range(args.mutations):
+        for name in names:
+            g = svc._datasets[name].graph
+            half = max(args.batch // 2, 1)
+            ins = _fresh_edges(g, half, rng)
+            svc.insert_edges(name, ins[:, 0], ins[:, 1])
+            drop = rng.choice(g.m, half, replace=False)
+            svc.delete_edges(name, g.edges_u[drop], g.edges_v[drop])
+            t1 = time.perf_counter()
+            dec = svc.query(name)
+            dt = time.perf_counter() - t1
+            s = dec.stats
+            print(f"[serve] round {rnd} {name}: refresh={s.refresh_mode} "
+                  f"subsets={s.refresh_subsets_repeeled}/"
+                  f"{s.refresh_subsets_total} max_level="
+                  f"{dec.max_level()} ({dt:.2f}s)")
+    rep = svc.report()
+    print(f"[serve] queue: {rep['queue']}")
+    for name in names:
+        print(f"[serve] {name}: {rep['datasets'][name]}")
     return 0
 
 

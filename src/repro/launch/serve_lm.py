@@ -1,0 +1,83 @@
+"""LM decode serving driver: ``python -m repro.launch.serve_lm``.
+
+Batched request loop over the decode step (the serve_step the decode_32k
+/ long_500k dry-run cells lower at production scale): continuous batching
+of synthetic requests with per-slot prompt/generation state, one jitted
+decode dispatch per token across the whole batch.
+
+(Moved from ``launch/serve.py``, which now drives the DECOMPOSITION
+service — the repo's actual serving workload, DESIGN.md §11;
+``serve.py`` re-exports ``BatchedServer`` for compatibility.)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_bundle
+from ..models import transformer as tf_lib
+
+
+class BatchedServer:
+    """Continuous-batching decode server over a fixed slot count."""
+
+    def __init__(self, bundle, batch_slots: int = 4, max_len: int = 64):
+        self.cfg = bundle.cfg
+        self.params = bundle.init_params(jax.random.PRNGKey(0))
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.cache = tf_lib.init_cache(self.cfg, batch_slots, max_len)
+        self._decode = jax.jit(
+            lambda p, c, t: tf_lib.lm_decode_step(p, c, t, self.cfg)
+        )
+
+    def run(self, prompts: np.ndarray, gen_len: int) -> np.ndarray:
+        """prompts: (slots, prompt_len) int32.  Returns (slots, gen_len)."""
+        n, plen = prompts.shape
+        assert n == self.slots
+        logits = None
+        for t in range(plen):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(prompts[:, t])
+            )
+        outs = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for _ in range(gen_len):
+            outs.append(np.asarray(tok))
+            logits, self.cache = self._decode(self.params, self.cache, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return np.stack(outs, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-8b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    bundle = get_bundle(args.arch, reduced=True)
+    server = BatchedServer(bundle, batch_slots=args.slots,
+                           max_len=args.prompt_len + args.gen_len + 4)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, bundle.cfg.vocab, (args.slots, args.prompt_len), dtype=np.int32
+    )
+    t0 = time.perf_counter()
+    out = server.run(prompts, args.gen_len)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.slots} slots x ({args.prompt_len}+{args.gen_len}) "
+          f"tokens in {dt:.1f}s "
+          f"({args.slots*(args.prompt_len+args.gen_len)/dt:.0f} tok/s)")
+    print(f"[serve] sample output: {out[0][:12]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

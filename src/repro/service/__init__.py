@@ -1,0 +1,36 @@
+"""`repro.service` — decomposition-as-a-service over `repro.api`
+(DESIGN.md §11).
+
+The serving layer turns the plan/compile/execute stack into a
+long-lived, queryable system:
+
+* **ingestion** (``DecompositionService.ingest``) — graphs and edge
+  streams become named, versioned datasets (validated through
+  ``BipartiteGraph.from_edges`` / ``from_dense``);
+* **request queue with admission batching** (``queue.RequestQueue``) —
+  pending decompose requests coalesce per dataset and compatible tip
+  fulls drain into ONE ``Executor.map`` fleet (LPT chunking + the
+  cross-graph executable cache keep the warm path at one dispatch);
+* **query serving** — ``tip_number`` / ``psi`` / ``subgraph_at`` /
+  ``max_level`` answered from the cached ``Decomposition`` under a
+  per-dataset version pair (graph version vs result version) and a
+  configurable staleness policy;
+* **incremental refresh** (``refresh.refresh_dataset``) — edge
+  insert/delete updates butterfly supports through the delta kernels
+  and re-peels only the CD subsets the mutation ceiling reaches
+  (``core.engine.refresh``), falling back to full recompute past the
+  dirty-fraction threshold.
+"""
+from .core import DecompositionService
+from .queue import RequestQueue, WorkItem
+from .refresh import refresh_dataset
+from .state import DatasetState, ServiceConfig
+
+__all__ = [
+    "DecompositionService",
+    "ServiceConfig",
+    "DatasetState",
+    "RequestQueue",
+    "WorkItem",
+    "refresh_dataset",
+]

@@ -1,0 +1,321 @@
+"""``DecompositionService`` — the request/response front of the serving
+layer (DESIGN.md §11).
+
+Request lifecycle: **ingest/mutate** (validate, version-bump, enqueue)
+→ **flush** (drain the coalesced queue; compatible pending tip fulls
+batch through ONE ``Executor.map`` fleet, refreshes run the incremental
+path) → **query** (answer from the cached ``Decomposition``, applying
+the staleness policy when the graph version is ahead of the result).
+
+One coarse re-entrant lock serializes state transitions — correctness
+first; the heavy work (device dispatches) dominates wall time anyway,
+and the executor cache underneath keeps the warm path at one dispatch.
+Executors are shared per workload across datasets, so fleets of
+same-shaped graphs hit one executable cache (the PR 5 signature reuse).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..api.config import EngineConfig
+from ..api.errors import (
+    DatasetNotFoundError,
+    GraphValidationError,
+    ReceiptError,
+    ServiceUnavailableError,
+    StaleReadError,
+)
+from ..api.executor import Executor
+from ..core.graph import BipartiteGraph
+from .queue import RequestQueue, WorkItem
+from .refresh import refresh_dataset
+from .state import DatasetState, ServiceConfig
+
+__all__ = ["DecompositionService"]
+
+
+class DecompositionService:
+    """Named, versioned decomposition datasets behind a query API.
+
+    ``config`` is the base ``EngineConfig`` every dataset runs under
+    (its ``workload`` field is overridden per dataset); ``service``
+    carries the request-path knobs (``ServiceConfig``).
+    """
+
+    def __init__(self, config: Optional[EngineConfig] = None,
+                 service: Optional[ServiceConfig] = None):
+        self.engine_config = config or EngineConfig()
+        self.service_config = service or ServiceConfig()
+        self._datasets: Dict[str, DatasetState] = {}
+        self._executors: Dict[str, Executor] = {}
+        self._queue = RequestQueue(self.service_config.max_pending)
+        self._lock = threading.RLock()
+        self.last_flush_report: Optional[Dict] = None
+
+    # ------------------------------------------------------------------ #
+    # plumbing
+    # ------------------------------------------------------------------ #
+    def _executor(self, workload: str) -> Executor:
+        ex = self._executors.get(workload)
+        if ex is None:
+            import dataclasses
+
+            cfg = dataclasses.replace(self.engine_config,
+                                      workload=workload)
+            ex = Executor(cfg)
+            self._executors[workload] = ex
+        return ex
+
+    def _get(self, name: str) -> DatasetState:
+        ds = self._datasets.get(name)
+        if ds is None:
+            raise DatasetNotFoundError(
+                f"dataset {name!r} was never ingested", dataset=name)
+        return ds
+
+    # ------------------------------------------------------------------ #
+    # ingestion
+    # ------------------------------------------------------------------ #
+    def ingest(self, name: str, graph=None, *, edges=None,
+               n_u: Optional[int] = None, n_v: Optional[int] = None,
+               workload: str = "tip", replace: bool = False) -> int:
+        """Register (or replace) a named dataset and enqueue its
+        decomposition.  Accepts a ``BipartiteGraph``, a dense 0/1
+        biadjacency matrix (validated via ``from_dense``), or
+        ``edges=(eu, ev)`` with ``n_u``/``n_v`` (via ``from_edges``).
+        Returns the dataset's graph version (1 for a new dataset).
+        """
+        if workload not in ("tip", "wing"):
+            raise ValueError(
+                f"workload must be 'tip' or 'wing' (got {workload!r})")
+        if graph is None:
+            if edges is None or n_u is None or n_v is None:
+                raise GraphValidationError(
+                    "ingest needs a graph, a dense matrix, or "
+                    "edges=(eu, ev) with n_u/n_v", dataset=name)
+            eu, ev = edges
+            g = BipartiteGraph.from_edges(n_u, n_v, eu, ev)
+        elif isinstance(graph, BipartiteGraph):
+            g = graph
+        else:
+            g = BipartiteGraph.from_dense(np.asarray(graph))
+        with self._lock:
+            if name in self._datasets and not replace:
+                raise GraphValidationError(
+                    f"dataset {name!r} already exists (pass replace=True "
+                    "to overwrite)", dataset=name)
+            old = self._datasets.get(name)
+            version = (old.version + 1) if old is not None else 1
+            ds = DatasetState(name=name, workload=workload, graph=g,
+                              version=version)
+            self._datasets[name] = ds
+            self._queue.submit(WorkItem(name, "full", ds.version))
+            return ds.version
+
+    def drop(self, name: str) -> None:
+        with self._lock:
+            self._get(name)
+            self._queue.drain(name)
+            del self._datasets[name]
+
+    def datasets(self) -> List[str]:
+        with self._lock:
+            return sorted(self._datasets)
+
+    # ------------------------------------------------------------------ #
+    # mutations (edge streams)
+    # ------------------------------------------------------------------ #
+    def insert_edges(self, name: str, eu, ev) -> int:
+        """Insert an edge batch; returns the new graph version and
+        enqueues an incremental refresh."""
+        with self._lock:
+            ds = self._get(name)
+            v = ds.insert_edges(eu, ev)
+            self._queue.submit(WorkItem(name, "refresh", v))
+            return v
+
+    def delete_edges(self, name: str, eu, ev) -> int:
+        """Delete an edge batch; returns the new graph version and
+        enqueues an incremental refresh."""
+        with self._lock:
+            ds = self._get(name)
+            v = ds.delete_edges(eu, ev)
+            self._queue.submit(WorkItem(name, "refresh", v))
+            return v
+
+    # ------------------------------------------------------------------ #
+    # the worker: drain the queue
+    # ------------------------------------------------------------------ #
+    def flush(self, name: Optional[str] = None) -> Dict:
+        """Drain pending work — all datasets, or one.
+
+        Admission batching: pending FULL tip decomposes (>=
+        ``map_min_fleet`` of them) run as ONE ``Executor.map`` fleet
+        (LPT-chunked, shared executable cache); everything else runs
+        through the per-dataset path (``refresh_dataset``, which picks
+        delta vs full).  Returns a report dict (also kept as
+        ``last_flush_report``).
+        """
+        with self._lock:
+            items = self._queue.drain(name)
+            report = {"items": len(items), "mapped": 0, "fleets": 0,
+                      "refreshed": 0, "full": 0, "errors": 0}
+            fleet = [it for it in items
+                     if it.kind == "full"
+                     and self._datasets[it.dataset].workload == "tip"]
+            rest = [it for it in items if it not in fleet]
+            if len(fleet) < self.service_config.map_min_fleet:
+                rest = items
+                fleet = []
+            if fleet:
+                ex = self._executor("tip")
+                graphs = [self._datasets[it.dataset].graph
+                          for it in fleet]
+                results = ex.map(graphs, strict=False)
+                report["fleets"] = 1
+                for it, res in zip(fleet, results):
+                    ds = self._datasets[it.dataset]
+                    if isinstance(res, ReceiptError):
+                        ds.last_error = res
+                        report["errors"] += 1
+                        continue
+                    # map results carry no CD bounds: the first refresh
+                    # peels the one-rung [inf] ladder, and a later full
+                    # single run re-primes the ladder
+                    bounds = (list(res.stats.bounds)
+                              if getattr(res.stats, "bounds", None)
+                              else None)
+                    ds.commit(res, bounds=bounds, supports=None)
+                    report["mapped"] += 1
+            for it in rest:
+                ds = self._datasets.get(it.dataset)
+                if ds is None:                       # dropped meanwhile
+                    continue
+                try:
+                    stats = refresh_dataset(
+                        ds, self._executor(ds.workload),
+                        self.service_config,
+                        force_full=(it.kind == "full"))
+                except ReceiptError as exc:
+                    ds.last_error = exc
+                    report["errors"] += 1
+                    continue
+                if stats is None:
+                    continue
+                if stats.refresh_mode == "delta":
+                    report["refreshed"] += 1
+                else:
+                    report["full"] += 1
+            self.last_flush_report = report
+            return report
+
+    # ------------------------------------------------------------------ #
+    # query serving
+    # ------------------------------------------------------------------ #
+    def _serve(self, name: str):
+        """Resolve a dataset to a servable ``Decomposition`` under the
+        staleness policy; counts hits (fresh-at-entry, no work ran)."""
+        with self._lock:
+            ds = self._get(name)
+            ds.queries += 1
+            if ds.fresh:
+                ds.query_hits += 1
+                return ds.result
+            policy = self.service_config.staleness
+            if policy == "strict":
+                raise StaleReadError(
+                    f"dataset {name!r} is stale under staleness="
+                    "'strict' — flush() first", dataset=name,
+                    version=ds.version,
+                    result_version=ds.result_version)
+            if policy == "stale_ok" and ds.result is not None:
+                ds.stale_reads += 1
+                return ds.result
+            self.flush(name)
+            if ds.result is None:
+                raise ServiceUnavailableError(
+                    f"dataset {name!r} has no decomposition result"
+                    + (f" (last error: {type(ds.last_error).__name__}: "
+                       f"{ds.last_error})" if ds.last_error else ""),
+                    dataset=name, version=ds.version)
+            return ds.result
+
+    def query(self, name: str):
+        """The dataset's current ``Decomposition`` (protocol object)."""
+        return self._serve(name)
+
+    def tip_number(self, name: str, u: int) -> int:
+        """Tip number of one peeled-side vertex (tip datasets)."""
+        dec = self._serve(name)
+        if dec.workload != "tip":
+            raise ServiceUnavailableError(
+                f"tip_number queries a tip dataset; {name!r} is "
+                f"{dec.workload!r}", dataset=name)
+        return int(dec.numbers[u])
+
+    def psi(self, name: str, e: int) -> int:
+        """Wing number of one edge, canonical edge order (wing
+        datasets)."""
+        dec = self._serve(name)
+        if dec.workload != "wing":
+            raise ServiceUnavailableError(
+                f"psi queries a wing dataset; {name!r} is "
+                f"{dec.workload!r}", dataset=name)
+        return int(dec.numbers[e])
+
+    def max_theta(self, name: str) -> int:
+        """Deprecated alias of ``max_level``."""
+        return self.max_level(name)
+
+    def max_level(self, name: str) -> int:
+        return self._serve(name).max_level()
+
+    def subgraph_at(self, name: str, k: float):
+        """The k-dense hierarchy cut of the dataset (tip: k-tip with
+        member/column ids; wing: k-wing with surviving edge ids)."""
+        return self._serve(name).subgraph_at(k)
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
+    def describe(self) -> str:
+        """Config endpoint: resolved engine knobs + service knobs +
+        dataset inventory."""
+        scfg = self.service_config
+        lines = [self.engine_config.describe(), "ServiceConfig"]
+        lines.append(f"  staleness:        {scfg.staleness!r}")
+        lines.append(f"  dirty threshold:  "
+                     f"{scfg.refresh_dirty_threshold:g}")
+        lines.append(f"  max pending:      {scfg.max_pending}")
+        lines.append(f"  map min fleet:    {scfg.map_min_fleet}")
+        with self._lock:
+            lines.append(f"datasets ({len(self._datasets)})")
+            for nm in sorted(self._datasets):
+                s = self._datasets[nm].summary()
+                lines.append(
+                    f"  {nm}: {s['workload']} "
+                    f"{s['n_u']}x{s['n_v']} m={s['m']} "
+                    f"v{s['version']}"
+                    + ("" if s["fresh"] else
+                       f" (result v{s['result_version']})"))
+        return "\n".join(lines)
+
+    def report(self) -> Dict:
+        """Counters: per-dataset serving stats + queue accounting +
+        per-workload executor cache stats."""
+        with self._lock:
+            return {
+                "datasets": {nm: ds.summary()
+                             for nm, ds in self._datasets.items()},
+                "queue": {
+                    "pending": len(self._queue),
+                    "submitted": self._queue.submitted,
+                    "coalesced": self._queue.coalesced,
+                    "rejected": self._queue.rejected,
+                },
+                "executors": {wl: ex.cache_stats
+                              for wl, ex in self._executors.items()},
+            }
