@@ -38,6 +38,13 @@ mutation ladder (the refresh must take the delta re-peel, stay
 bit-exact and win on wall), plus warm-query p50/p99 latency with a
 zero-dispatch cache-hit requirement.
 
+The ``service_async`` section (PR 10, DESIGN.md §12) benches the
+background scheduler: stale-read p50 with the flush worker on vs the
+same-process inline drain wall (reads must not pay the refresh wall),
+bit-exactness of the asynchronously refreshed result, and the
+CacheGovernor eviction smoke (evict under a tiny budget, recompute
+exactly).
+
 Usage:  PYTHONPATH=src python benchmarks/bench_receipt.py [--quick] [--out F]
 """
 from __future__ import annotations
@@ -67,14 +74,16 @@ def _load_gate_constants():
             mod.MAP_DISPATCH_MIN_REDUCTION, mod.MAP_HIT_RATE_MIN,
             mod.TILED_WALL_MAX_RATIO, mod.WING_RT_BOUND,
             mod.SERVICE_REFRESH_WALL_MAX_RATIO,
-            mod.SERVICE_WARM_QUERY_MAX_DISPATCHES)
+            mod.SERVICE_WARM_QUERY_MAX_DISPATCHES,
+            mod.SERVICE_ASYNC_STALE_MAX_RATIO)
 
 
 (OVF_RT_SURCHARGE, WEDGE_RATIO_TOL,
  MAP_DISPATCH_MIN_REDUCTION, MAP_HIT_RATE_MIN,
  TILED_WALL_MAX_RATIO, WING_RT_BOUND,
  SERVICE_REFRESH_WALL_MAX_RATIO,
- SERVICE_WARM_QUERY_MAX_DISPATCHES) = _load_gate_constants()
+ SERVICE_WARM_QUERY_MAX_DISPATCHES,
+ SERVICE_ASYNC_STALE_MAX_RATIO) = _load_gate_constants()
 
 from datasets import DATASETS
 from repro.core.graph import powerlaw_bipartite
@@ -666,6 +675,127 @@ def bench_service(*, quick: bool, check: bool, partitions: int = 8) -> dict:
             "warm_query": warm_query}
 
 
+def bench_service_async(*, quick: bool, check: bool,
+                        partitions: int = 8) -> dict:
+    """Background scheduler (PR 10, DESIGN.md §12): stale-read latency
+    with the flush worker on vs the same-process inline drain wall,
+    async refresh exactness, and the CacheGovernor eviction smoke.
+
+    The comparator is PR 9's inline mode measured first in the same
+    process (ingest → full → warm-up round → measured mutation round
+    whose ``flush()`` wall is the drain the worker absorbs).  The async
+    service then runs the same traffic with the worker on: each
+    measured read lands right after a mutation batch and must return
+    non-blocking — a counted stale read or a cache hit, never an
+    inline drain on the query thread — while the worker refreshes in
+    the background; after ``wait_until_idle`` the read must observe the
+    new version, bit-exact against a from-scratch decompose."""
+    from repro.api import EngineConfig, Executor
+    from repro.service import DecompositionService, ServiceConfig
+
+    n_u, n_v, m = (128, 96, 1100) if quick else (256, 160, 2600)
+    rounds = 4 if quick else 8
+    g0 = interaction_graph(n_u, n_v, m, seed=37)
+    cfg = EngineConfig(num_partitions=partitions, backend="xla")
+    name = "bench"
+    k = max(1, int(round(0.02 * m / 2)))
+
+    # inline comparator (PR 9 semantics): the drain wall a stale read
+    # used to pay, measured warm in this process
+    inline = DecompositionService(cfg, ServiceConfig(
+        refresh_dirty_threshold=0.12))
+    inline.ingest(name, g0, workload="tip")
+    inline.flush(name)
+    rng = np.random.default_rng(6)
+    inline_wall = float("inf")
+    for _ in range(2):                  # warm-up round, then measured
+        g = inline._datasets[name].graph
+        ins, drop = _service_mutations(g, k, rng)
+        inline.insert_edges(name, ins[:, 0], ins[:, 1])
+        inline.delete_edges(name, g.edges_u[drop], g.edges_v[drop])
+        t0 = time.perf_counter()
+        inline.flush(name)
+        inline_wall = time.perf_counter() - t0
+
+    # async service: same traffic, worker on
+    svc = DecompositionService(cfg, ServiceConfig(
+        refresh_dirty_threshold=0.12, background=True,
+        worker_poll_s=0.005))
+    svc.ingest(name, g0, workload="tip")
+    svc.query(name, wait=True, timeout=600)
+    before = svc.report()["datasets"][name]
+    rng = np.random.default_rng(6)      # same mutation stream
+    lat = []
+    for _ in range(rounds):
+        g = svc._datasets[name].graph
+        ins, drop = _service_mutations(g, k, rng)
+        svc.insert_edges(name, ins[:, 0], ins[:, 1])
+        svc.delete_edges(name, g.edges_u[drop], g.edges_v[drop])
+        t0 = time.perf_counter()
+        svc.query(name, with_info=True)     # must not pay the drain
+        lat.append(time.perf_counter() - t0)
+        assert svc.wait_until_idle(timeout=600), \
+            "background worker failed to drain between rounds"
+    after = svc.report()["datasets"][name]
+    stale = after["stale_reads"] - before["stale_reads"]
+    hits = after["query_hits"] - before["query_hits"]
+    dec, info = svc.query(name, with_info=True)
+    ref = Executor(cfg).decompose(svc._datasets[name].graph)
+    async_exact = bool((np.asarray(dec.numbers)
+                        == np.asarray(ref.numbers)).all())
+    if check:
+        assert async_exact, ("background-refreshed numbers diverged "
+                             "from from-scratch decompose")
+    worker = svc.report()["worker"]
+    svc.close()
+    stale_read = {
+        "rounds": rounds,
+        "stale_reads": stale,
+        "hits": hits,
+        # reads that were neither a hit nor a counted stale read paid
+        # a drain/wait on the query thread — the wall the worker must
+        # absorb (gated to zero by scripts/bench_gate.py)
+        "blocking_reads": rounds - stale - hits,
+        "p50_s": float(np.percentile(lat, 50)),
+        "p99_s": float(np.percentile(lat, 99)),
+    }
+
+    # eviction smoke: tiny budget forces LRU eviction; the evicted
+    # dataset must recompute bit-exactly on demand
+    ev = DecompositionService(cfg, ServiceConfig(cache_budget_bytes=64))
+    g1 = interaction_graph(64, 48, 480, seed=38)
+    ev.ingest("a", g1)
+    ev.ingest("b", interaction_graph(56, 44, 420, seed=39))
+    ev.query("a")
+    ev.query("b")                       # evicts a (budget < any result)
+    evictions = ev.cache_report()["evicted_total"]
+    dec_a = ev.query("a")               # recompute on demand
+    ref_a = Executor(cfg).decompose(ev._datasets["a"].graph)
+    ev_exact = bool((np.asarray(dec_a.numbers)
+                     == np.asarray(ref_a.numbers)).all())
+    if check:
+        assert evictions >= 1, "eviction smoke evicted nothing"
+        assert ev_exact, "post-eviction recompute diverged"
+
+    print(f"[bench_receipt] service_async: stale read p50="
+          f"{stale_read['p50_s'] * 1e3:.3f}ms vs inline drain "
+          f"{inline_wall * 1e3:.1f}ms ({stale}/{rounds} stale, "
+          f"{hits} hits, {stale_read['blocking_reads']} blocking), "
+          f"worker cycles={worker['cycles']}, evictions={evictions} "
+          f"exact={async_exact and ev_exact}", flush=True)
+    return {
+        "workload": "tip", "n_u": n_u, "n_v": n_v, "m": g0.m,
+        "num_partitions": partitions,
+        "inline_drain_wall_s": inline_wall,
+        "stale_read": stale_read,
+        "async_exact": async_exact,
+        "fresh_after_idle": bool(info["fresh"]),
+        "worker": {"cycles": worker["cycles"],
+                   "crashes": worker["crashes"]},
+        "eviction": {"evictions": evictions, "exact": ev_exact},
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_receipt.json")
@@ -700,6 +830,11 @@ def main(argv=None) -> int:
           flush=True)
     service = bench_service(quick=args.quick, check=not args.no_check)
 
+    print("[bench_receipt] service_async (background scheduler, "
+          "DESIGN.md §12)", flush=True)
+    service_async = bench_service_async(
+        quick=args.quick, check=not args.no_check)
+
     payload = {
         "benchmark": "receipt_peel_engine",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -709,6 +844,7 @@ def main(argv=None) -> int:
         "wing": wing,
         "executor_map": exec_map,
         "service": service,
+        "service_async": service_async,
     }
     Path(args.out).write_text(json.dumps(payload, indent=2))
     print(f"[bench_receipt] wrote {args.out}")
@@ -780,6 +916,25 @@ def main(argv=None) -> int:
               f"({service['warm_query']['dispatching_misses']} "
               f"dispatching misses)")
         ok = False
+    # background scheduler (PR 10 acceptance): every measured read
+    # serves non-blocking, stale-read p50 stays far under the inline
+    # drain wall, the async refresh is exact, eviction recomputes
+    sa_sr = service_async["stale_read"]
+    sa_ok = (sa_sr["blocking_reads"] == 0
+             and sa_sr["p50_s"] <= service_async["inline_drain_wall_s"]
+             * SERVICE_ASYNC_STALE_MAX_RATIO
+             and service_async["async_exact"]
+             and service_async["fresh_after_idle"]
+             and service_async["eviction"]["evictions"] >= 1
+             and service_async["eviction"]["exact"])
+    if not sa_ok:
+        print(f"[bench_receipt] service_async: gate FAILED "
+              f"(blocking={sa_sr['blocking_reads']}, "
+              f"p50={sa_sr['p50_s'] * 1e3:.3f}ms vs inline "
+              f"{service_async['inline_drain_wall_s'] * 1e3:.1f}ms, "
+              f"exact={service_async['async_exact']}, "
+              f"eviction={service_async['eviction']})")
+    ok = ok and sa_ok
     if not args.quick:
         # wall-clock criteria run on the FULL bench only: --quick is the
         # per-push CI smoke (scripts/ci.sh quick fails on this exit

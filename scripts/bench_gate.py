@@ -30,6 +30,12 @@ regress without any test failing:
   full-recompute wall measured in the same process; the warm
   repeat-query loop must serve from the cached decomposition
   (``SERVICE_WARM_QUERY_MAX_DISPATCHES``).
+* the ``service_async`` section (PR 10, DESIGN.md §12) — with the
+  background flush worker on, every measured read serves non-blocking
+  and stale-read p50 stays under ``SERVICE_ASYNC_STALE_MAX_RATIO`` of
+  the same-process inline drain wall; the asynchronously refreshed
+  result is bit-exact, and the eviction smoke must see at least one
+  CacheGovernor eviction followed by an exact recompute.
 
 Graphs are matched by name, so a ``--quick`` fresh run (smallest graph
 only) gates against the corresponding baseline entry; baseline-only
@@ -97,6 +103,16 @@ WING_RT_BOUND = 4
 # result serves every fresh read: zero device work).
 SERVICE_REFRESH_WALL_MAX_RATIO = 1.0
 SERVICE_WARM_QUERY_MAX_DISPATCHES = 1
+# Async serving acceptance (PR 10, DESIGN.md §12): with the background
+# flush worker on, a mutated dataset's read must return WITHOUT paying
+# the refresh wall — its p50 latency is bounded by half the
+# same-process INLINE drain wall (in practice it is orders of magnitude
+# smaller; 0.5 keeps the gate noise-proof), every measured read must be
+# served non-blocking (a cache hit or a counted stale read — zero
+# query-thread device work), the asynchronously refreshed result must
+# be bit-exact against a from-scratch decompose, and the eviction smoke
+# must recompute exactly after at least one CacheGovernor eviction.
+SERVICE_ASYNC_STALE_MAX_RATIO = 0.5
 
 
 def _graphs_by_name(payload: dict) -> dict:
@@ -322,6 +338,49 @@ def gate(fresh: dict, baseline: dict, rel_tol: float) -> list:
                 f"flush-dispatching misses > "
                 f"{SERVICE_WARM_QUERY_MAX_DISPATCHES} — fresh reads must "
                 "serve from the cached decomposition")
+
+    # --- service_async: background scheduler + cache governor (PR 10) - #
+    f_async = fresh.get("service_async")
+    if baseline.get("service_async") is not None and f_async is None:
+        errors.append("service_async section missing from the fresh run "
+                      "(the scheduler bench stopped running)")
+    elif f_async is not None:
+        sr = f_async.get("stale_read", {})
+        if sr.get("blocking_reads", 1) != 0:
+            errors.append(
+                f"service_async: {sr.get('blocking_reads')} of "
+                f"{sr.get('rounds')} reads blocked on the query thread — "
+                "with the worker on, every read must serve non-blocking "
+                "(cache hit or counted stale read, zero query-thread "
+                "device work)")
+        p50 = sr.get("p50_s")
+        wall = f_async.get("inline_drain_wall_s")
+        if p50 is None or wall is None:
+            errors.append("service_async: stale-read p50 / inline drain "
+                          "wall missing")
+        elif p50 > wall * SERVICE_ASYNC_STALE_MAX_RATIO:
+            errors.append(
+                f"service_async: stale-read p50 {p50 * 1e3:.3f}ms > "
+                f"{SERVICE_ASYNC_STALE_MAX_RATIO:g}x the same-process "
+                f"inline drain wall {wall * 1e3:.1f}ms — stale reads "
+                "are paying the refresh wall again")
+        if not f_async.get("async_exact", False):
+            errors.append(
+                "service_async: background-refreshed numbers diverged "
+                "from a from-scratch decomposition")
+        if not f_async.get("fresh_after_idle", False):
+            errors.append(
+                "service_async: a read after wait_until_idle did not "
+                "observe the refreshed version")
+        ev = f_async.get("eviction", {})
+        if ev.get("evictions", 0) < 1:
+            errors.append(
+                "service_async: the eviction smoke evicted nothing — "
+                "the CacheGovernor budget path stopped running")
+        if not ev.get("exact", False):
+            errors.append(
+                "service_async: post-eviction recompute diverged — "
+                "eviction must cost latency, never correctness")
     return errors
 
 

@@ -85,6 +85,11 @@ if [ "$MODE" = "quick" ]; then
   echo "== service smoke (ingest -> query -> refresh -> query, exactness) =="
   python -m repro.launch.serve --selftest --workload tip
   python -m repro.launch.serve --selftest --workload wing
+  echo "== service soak (background worker, mixed traffic, exactness) =="
+  python -m repro.launch.serve --soak --background --datasets 2 --mutations 2
+  echo "== service soak under injected worker death (refresh_worker site) =="
+  RECEIPT_FAULT="refresh_worker@2" \
+    python -m repro.launch.serve --soak --background --datasets 2 --mutations 2
   echo "== engine bench (quick) + regression gate vs BENCH_receipt.json =="
   python benchmarks/bench_receipt.py --quick --out /tmp/bench_quick.json
   python scripts/bench_gate.py --fresh /tmp/bench_quick.json

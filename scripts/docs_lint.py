@@ -125,6 +125,15 @@ SYMBOL_SECTIONS = {
         "repro.api.errors.StaleReadError",
         "repro.api.errors.ServiceUnavailableError",
     ],
+    "## 12. Serving scheduler": [
+        "repro.service.scheduler.FlushScheduler",
+        "repro.service.scheduler.FlushWorker",
+        "repro.service.scheduler.CacheGovernor",
+        "repro.service.classify_refresh",
+        "repro.core.engine.refresh.synthesize_bounds",
+        "repro.api.errors.ServiceWorkerError",
+        "repro.train.fault_tolerance.RestartManager",
+    ],
 }
 
 

@@ -74,6 +74,7 @@ __all__ = [
     "DatasetNotFoundError",
     "StaleReadError",
     "ServiceUnavailableError",
+    "ServiceWorkerError",
     "FaultInjector",
     "FaultSpec",
     "errors",
@@ -101,6 +102,7 @@ _LAZY = {
     "DatasetNotFoundError": "errors",
     "StaleReadError": "errors",
     "ServiceUnavailableError": "errors",
+    "ServiceWorkerError": "errors",
     "FaultInjector": "faults",
     "FaultSpec": "faults",
 }

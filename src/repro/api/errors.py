@@ -35,6 +35,10 @@ taxonomy with three request-path classes:
   dataset whose graph version is ahead of its decomposition result.
 * ``ServiceUnavailableError``— admission control rejected the request
   (queue at capacity, or the service cannot produce a result at all).
+* ``ServiceWorkerError``     — the background flush worker crashed (or a
+  ``refresh_worker`` fault was injected into it); carries the worker's
+  cycle count and restart budget so operators can see where in the
+  restart-with-backoff sequence the crash landed.
 
 This module is deliberately LEAF-LEVEL: stdlib only, no jax, no numpy,
 no repro imports — ``core/graph.py`` (numpy-only by contract) and the
@@ -55,12 +59,13 @@ __all__ = [
     "DatasetNotFoundError",
     "StaleReadError",
     "ServiceUnavailableError",
+    "ServiceWorkerError",
 ]
 
 # context keys rendered in a stable order (everything else alphabetical)
 _CTX_ORDER = ("plan_signature", "dispatch", "backend", "subset", "chunk",
               "graph_index", "site", "injected", "dataset", "version",
-              "result_version")
+              "result_version", "cycle", "restarts")
 
 
 class ReceiptError(Exception):
@@ -177,3 +182,13 @@ class ServiceUnavailableError(ReceiptError, RuntimeError):
     """The service cannot accept or fulfil the request right now —
     request queue at capacity (admission control), or no execution path
     can produce a result for the dataset."""
+
+
+class ServiceWorkerError(ReceiptError, RuntimeError):
+    """The background flush worker crashed — a real exception escaped a
+    drain cycle, or a ``refresh_worker`` fault was injected into one.
+
+    The scheduler restarts the worker with exponential backoff, bounded
+    by a ``RestartManager``-style failure log; past the restart budget
+    the worker stays down and the service degrades to inline (PR 9)
+    draining.  Context carries ``site``, ``cycle`` and ``restarts``."""

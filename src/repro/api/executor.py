@@ -889,6 +889,8 @@ class Executor:
             self._stragglers.record(chunk_id,
                                     time.perf_counter() - t_chunk)
 
+        from ..core.engine.refresh import synthesize_bounds
+
         for k, t in enumerate(chunk):
             theta = np.zeros(t["n_u"], np.int64)
             theta[t["perm_u"]] = np.round(th_acc[k, : t["n_u"]]).astype(
@@ -899,6 +901,11 @@ class Executor:
             stats.wedges_pvbcnt = t["graph"].counting_wedge_bound()
             stats.backend_used = backend
             stats.chunk_sig = chunk_id     # straggler flagging key (map)
+            # the whole-graph level schedule never built CD's theta-range
+            # partition, but the exact theta in hand quantizes into an
+            # equi-mass stop ladder — so a mapped result's first refresh
+            # re-peels a bounded prefix instead of one [inf] rung
+            stats.bounds = synthesize_bounds(theta, cfg.num_partitions)
             results[t["idx"]] = TipDecomposition(
                 graph=t["graph"], side=self.side, theta=theta, stats=stats)
 

@@ -11,6 +11,10 @@ points at exactly the host-level boundaries where real failures surface:
                         the buffer to one row, forcing the overflow replay
     ``dgm_boundary``    DGM compaction at a subset boundary
     ``map_chunk``       the blocking per-chunk fetch in ``Executor.map``
+    ``refresh_worker``  the serving layer's background flush worker, at
+                        the top of each drain cycle (service/scheduler.py)
+                        — fires as ``ServiceWorkerError`` into the
+                        worker's restart-with-backoff path
 
 Arming is declarative and deterministic.  A spec string is a
 comma-separated list of rules::
@@ -53,7 +57,8 @@ __all__ = [
     "reset",
 ]
 
-KNOWN_SITES = ("kernel_launch", "peel_buffer", "dgm_boundary", "map_chunk")
+KNOWN_SITES = ("kernel_launch", "peel_buffer", "dgm_boundary", "map_chunk",
+               "refresh_worker")
 
 ENV_VAR = "RECEIPT_FAULT"
 

@@ -35,7 +35,8 @@ from .peel_loop import (
     device_peel_loop,
     host_sweep,
 )
-from .refresh import repeel_tip_prefix, repeel_wing_prefix
+from .refresh import (repeel_tip_prefix, repeel_wing_prefix,
+                      synthesize_bounds)
 from .tiled import receipt_tiled
 from .wing import (
     device_wing_graph_loop,
@@ -55,6 +56,7 @@ __all__ = [
     "receipt_wing_fd",
     "receipt_tiled",
     "repeel_tip_prefix",
+    "synthesize_bounds",
     "repeel_wing_prefix",
     "device_wing_graph_loop",
     "parb_tip_decompose",

@@ -69,11 +69,39 @@ from .peel_loop import (
 )
 from .wing import build_edge_state
 
-__all__ = ["repeel_tip_prefix", "repeel_wing_prefix"]
+__all__ = ["repeel_tip_prefix", "repeel_wing_prefix", "synthesize_bounds"]
 
 # f32-finite stand-in for an unbounded stop (supports are integers far
 # below this; padded-row supports are +inf and stay unpeelable)
 _STOP_MAX = float(np.float32(3.0e38))
+
+
+def synthesize_bounds(numbers, num_partitions: int):
+    """Coarse ascending CD-style bound ladder from COMPUTED peel numbers.
+
+    ``Executor.map`` runs the whole-graph level schedule (``lo = 0``) and
+    never builds Alg. 3's theta-range partition, so mapped results used
+    to carry no bounds and their first refresh had to peel one ``[inf]``
+    rung.  The exact numbers in hand are strictly better information
+    than CD's bounds ever were: quantize them into ``num_partitions``
+    equi-mass rungs and the result is a valid stop ladder — each rung
+    ``b`` certifies the same clean-prefix property as a CD bound (every
+    element with ``numbers >= b`` keeps its stored value when the
+    certified refresh ceiling lands below ``b``).
+
+    Invariants honored (the ones ``verify_*_decomposition`` checks and
+    ``_drain`` escalation relies on): strictly increasing, integral
+    rungs, ``bounds[0] == 0`` and ``bounds[-1] > numbers.max()``.
+    """
+    th = np.asarray(numbers, np.float64).reshape(-1)
+    t_max = float(th.max()) if th.size else 0.0
+    interior = np.empty(0, np.float64)
+    if th.size and int(num_partitions) > 1:
+        qs = np.linspace(0.0, 1.0, int(num_partitions) + 1)[1:-1]
+        interior = np.round(np.quantile(th, qs))
+    rungs = np.unique(np.concatenate(
+        [[0.0], interior, [t_max + 1.0]]))
+    return [float(b) for b in rungs]
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "blocks",

@@ -7,6 +7,13 @@ incremental-refresh path.  Two modes:
 * ``--selftest`` — the CI smoke: ingest → query → mutate → refresh →
   query on a small synthetic graph, asserting the refreshed numbers are
   bit-identical to a from-scratch decomposition (exit code 0/1).
+* ``--soak`` — the scheduler soak (DESIGN.md §12): mixed
+  ingest/mutate/query traffic over several datasets, optionally with
+  the ``--background`` flush worker on, draining shutdown, and a final
+  per-dataset exactness check against from-scratch decompositions.
+  When a ``RECEIPT_FAULT`` env spec arms the ``refresh_worker`` site
+  the soak additionally asserts the injected worker death was observed
+  (crash counted, restart logged) AND results stayed exact (exit 0/1).
 * default demo — ingest ``--n-u x --n-v x --edges`` synthetic datasets,
   run a mutation/query traffic loop and print the serving report.
 
@@ -84,11 +91,101 @@ def selftest(workload: str = "tip", verbose: bool = True) -> int:
     return 0
 
 
+def soak(workload: str = "tip", *, datasets: int = 3, rounds: int = 3,
+         batch: int = 6, background: bool = True,
+         cache_budget: int = None, verbose: bool = True) -> int:
+    """Mixed-traffic soak of the serving scheduler (exit code 0/1).
+
+    Drives ingest + mutate + query rounds over ``datasets`` datasets —
+    with the background worker on when ``background`` — then stops the
+    worker with a draining shutdown and checks every dataset's final
+    numbers bit-exactly against a from-scratch decomposition.  With a
+    ``RECEIPT_FAULT`` spec arming ``refresh_worker``, the soak also
+    requires the injected worker death to have been observed (crashes
+    counted in the RestartManager failure log) while staying exact —
+    the crash-isolation story, end to end.
+    """
+    import dataclasses
+    import os
+
+    from ..api import EngineConfig, Executor
+    from ..data.synthetic import interaction_graph
+    from ..service import DecompositionService, ServiceConfig
+
+    rng = np.random.default_rng(7)
+    cfg = EngineConfig(num_partitions=6, backend="xla")
+    scfg = ServiceConfig(background=background, worker_poll_s=0.01,
+                         refresh_dirty_threshold=0.25,
+                         cache_budget_bytes=cache_budget)
+    svc = DecompositionService(cfg, scfg)
+    names = []
+    for i in range(datasets):
+        g = interaction_graph(64, 48, 480 + 40 * i, seed=20 + i)
+        name = f"soak{i}"
+        svc.ingest(name, g, workload=workload)
+        names.append(name)
+    stale_served = 0
+    for _ in range(rounds):
+        for name in names:
+            g = svc._datasets[name].graph
+            half = max(batch // 2, 1)
+            ins = _fresh_edges(g, half, rng)
+            svc.insert_edges(name, ins[:, 0], ins[:, 1])
+            drop = rng.choice(g.m, half, replace=False)
+            svc.delete_edges(name, g.edges_u[drop], g.edges_v[drop])
+            _, info = svc.query(name, with_info=True)
+            if not info["fresh"]:
+                stale_served += 1
+    drained = svc.stop_worker(drain=True, timeout=120.0)
+    svc.flush()                     # any abandoned remainder runs inline
+    failures = 0
+    for name in names:
+        ds = svc._datasets[name]
+        ref = Executor(dataclasses.replace(
+            cfg, workload=workload)).decompose(ds.graph)
+        dec = svc.query(name)
+        if not np.array_equal(np.asarray(dec.numbers),
+                              np.asarray(ref.numbers)):
+            failures += 1
+            print(f"[serve] SOAK FAILED: {name} differs from "
+                  "from-scratch decomposition")
+    w = svc.report()["worker"] or {}
+    cache = svc.cache_report()
+    if verbose:
+        print(f"[serve] soak {workload}: {len(names)} datasets x "
+              f"{rounds} rounds, stale_served={stale_served}, "
+              f"worker={{cycles: {w.get('cycles')}, crashes: "
+              f"{w.get('crashes')}, restarts: {w.get('restarts')}, "
+              f"dead: {w.get('dead')}}}, evicted="
+              f"{cache['evicted_total']}, exact={failures == 0}")
+    fault = os.environ.get("RECEIPT_FAULT", "")
+    if background and "refresh_worker" in fault:
+        if w.get("crashes", 0) < 1:
+            print("[serve] SOAK FAILED: RECEIPT_FAULT armed "
+                  "refresh_worker but no worker crash was observed")
+            return 1
+        if not w.get("failure_log"):
+            print("[serve] SOAK FAILED: worker crashed but the "
+                  "RestartManager failure log is empty")
+            return 1
+    if background and not drained:
+        print("[serve] SOAK FAILED: draining shutdown timed out")
+        return 1
+    return 0 if failures == 0 else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="decomposition service driver (repro.service)")
     ap.add_argument("--selftest", action="store_true",
                     help="ingest->query->refresh->query smoke; exit 0/1")
+    ap.add_argument("--soak", action="store_true",
+                    help="mixed-traffic scheduler soak with a final "
+                         "exactness check; exit 0/1")
+    ap.add_argument("--background", action="store_true",
+                    help="run with the background flush worker on")
+    ap.add_argument("--cache-budget-bytes", type=int, default=None,
+                    help="CacheGovernor byte budget (default unbounded)")
     ap.add_argument("--workload", default="tip", choices=("tip", "wing"))
     ap.add_argument("--n-u", type=int, default=128)
     ap.add_argument("--n-v", type=int, default=96)
@@ -105,13 +202,20 @@ def main(argv=None):
 
     if args.selftest:
         return selftest(args.workload)
+    if args.soak:
+        return soak(args.workload, datasets=args.datasets,
+                    rounds=args.mutations, batch=args.batch,
+                    background=args.background,
+                    cache_budget=args.cache_budget_bytes)
 
     from ..api import EngineConfig
     from ..data.synthetic import interaction_graph
-    from ..service import DecompositionService
+    from ..service import DecompositionService, ServiceConfig
 
     cfg = EngineConfig(num_partitions=args.partitions, backend="xla")
-    svc = DecompositionService(cfg)
+    svc = DecompositionService(cfg, ServiceConfig(
+        background=args.background,
+        cache_budget_bytes=args.cache_budget_bytes))
     if args.describe:
         print(svc.describe())
         return 0
@@ -143,6 +247,7 @@ def main(argv=None):
                   f"subsets={s.refresh_subsets_repeeled}/"
                   f"{s.refresh_subsets_total} max_level="
                   f"{dec.max_level()} ({dt:.2f}s)")
+    svc.close()                          # draining worker shutdown if on
     rep = svc.report()
     print(f"[serve] queue: {rep['queue']}")
     for name in names:

@@ -1,5 +1,5 @@
 """`repro.service` — decomposition-as-a-service over `repro.api`
-(DESIGN.md §11).
+(DESIGN.md §11–§12).
 
 The serving layer turns the plan/compile/execute stack into a
 long-lived, queryable system:
@@ -8,9 +8,10 @@ long-lived, queryable system:
   streams become named, versioned datasets (validated through
   ``BipartiteGraph.from_edges`` / ``from_dense``);
 * **request queue with admission batching** (``queue.RequestQueue``) —
-  pending decompose requests coalesce per dataset and compatible tip
-  fulls drain into ONE ``Executor.map`` fleet (LPT chunking + the
-  cross-graph executable cache keep the warm path at one dispatch);
+  pending decompose requests coalesce per dataset; the drain cycle
+  (``scheduler.FlushScheduler``) batches full-routed tip work into ONE
+  ``Executor.map`` fleet and packs delta refreshes into LPT repeel
+  fleets under a cell budget;
 * **query serving** — ``tip_number`` / ``psi`` / ``subgraph_at`` /
   ``max_level`` answered from the cached ``Decomposition`` under a
   per-dataset version pair (graph version vs result version) and a
@@ -19,11 +20,19 @@ long-lived, queryable system:
   insert/delete updates butterfly supports through the delta kernels
   and re-peels only the CD subsets the mutation ceiling reaches
   (``core.engine.refresh``), falling back to full recompute past the
-  dirty-fraction threshold.
+  dirty-fraction threshold;
+* **background scheduling + memory governance**
+  (``scheduler.FlushWorker`` / ``scheduler.CacheGovernor``) — an
+  optional flush worker drains the queue off the query path (stale
+  reads return the last consistent version instantly, with explicit
+  staleness metadata; ``wait=True`` opts into blocking), and cached
+  results live under a byte budget with LRU-with-pin eviction
+  (evicted datasets recompute on demand — degraded, never wrong).
 """
 from .core import DecompositionService
 from .queue import RequestQueue, WorkItem
-from .refresh import refresh_dataset
+from .refresh import classify_refresh, refresh_dataset
+from .scheduler import CacheGovernor, FlushScheduler, FlushWorker
 from .state import DatasetState, ServiceConfig
 
 __all__ = [
@@ -33,4 +42,8 @@ __all__ = [
     "RequestQueue",
     "WorkItem",
     "refresh_dataset",
+    "classify_refresh",
+    "FlushScheduler",
+    "FlushWorker",
+    "CacheGovernor",
 ]

@@ -96,3 +96,20 @@ class RequestQueue:
         items = list(self._items.values())
         self._items.clear()
         return items
+
+    def restore(self, items: List[WorkItem]) -> None:
+        """Put drained-but-unfinished items BACK at the head of the
+        queue, original order first (the scheduler's crash path: a
+        worker cycle that dies mid-drain must not lose work).  Bypasses
+        admission control — the items already held capacity — and
+        coalesces with anything submitted since the drain."""
+        tail = list(self._items.values())
+        self._items.clear()
+        for item in items + tail:
+            held = self._items.get(item.dataset)
+            if held is None:
+                self._items[item.dataset] = item
+                continue
+            if item.kind == "full":
+                held.kind = "full"
+            held.version = max(held.version, item.version)

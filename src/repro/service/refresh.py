@@ -38,7 +38,7 @@ from ..core.graph import BipartiteGraph
 from ..kernels import ops as kops
 from .state import DatasetState, ServiceConfig, edge_keys
 
-__all__ = ["refresh_dataset"]
+__all__ = ["refresh_dataset", "classify_refresh"]
 
 
 def _tip_supports_host(g: BipartiteGraph) -> np.ndarray:
@@ -189,35 +189,64 @@ def _wing_delta(ds: DatasetState, executor, kI: np.ndarray, kD: np.ndarray):
     return stats
 
 
-def refresh_dataset(ds: DatasetState, executor,
-                    scfg: ServiceConfig, *, force_full: bool = False):
-    """Bring ``ds.result`` up to ``ds.version``; returns the run's
-    ``RunStats`` (or None when the dataset was already fresh).
+def classify_refresh(ds: DatasetState, scfg: ServiceConfig, *,
+                     force_full: bool = False) -> str:
+    """Route one stale dataset WITHOUT doing device work: ``"noop"``
+    (already fresh, or a net no-op mutation sequence), ``"full"``
+    (from-scratch decompose — forced, no prior result, or past the
+    dirty threshold) or ``"delta"`` (the incremental path).
 
-    Routing: delta refresh when a prior result + base graph exist, the
-    net dirty fraction is within ``scfg.refresh_dirty_threshold`` and
-    both endpoint graphs are non-degenerate; full recompute otherwise
-    (and on ANY ``ReceiptError`` from the delta path — e.g. a plan that
-    routed to the tiled representation, which the dense refresh loops
-    reject as ``PlanInfeasibleError``).
+    The scheduler uses this to batch: every ``"full"``-routed tip
+    dataset in a drain cycle — forced fulls AND refreshes that would
+    fall back anyway — joins one ``Executor.map`` fleet, and the
+    ``"delta"`` routes pack into LPT-ordered repeel fleets.
     """
     if ds.fresh and not force_full:
-        return None
+        return "noop"
     if force_full or ds.result is None or ds.base_graph is None:
-        return _full(ds, executor, fallback=False)
+        return "full"
     k_base = edge_keys(ds.base_graph)
     k_cur = edge_keys(ds.graph)
     kI = np.setdiff1d(k_cur, k_base)
     kD = np.setdiff1d(k_base, k_cur)
     if not kI.size and not kD.size:
-        # net no-op mutation sequence: the stored result IS current
-        ds.result_version = ds.version
-        ds.base_graph = ds.graph
-        return None
+        return "noop"
     dirty = (kI.size + kD.size) / max(ds.base_graph.m, 1)
     if (dirty > scfg.refresh_dirty_threshold
             or ds.base_graph.m == 0 or ds.graph.m == 0):
-        return _full(ds, executor, fallback=True)
+        return "full"
+    return "delta"
+
+
+def refresh_dataset(ds: DatasetState, executor,
+                    scfg: ServiceConfig, *, force_full: bool = False):
+    """Bring ``ds.result`` up to ``ds.version``; returns the run's
+    ``RunStats`` (or None when the dataset was already fresh).
+
+    Routing (``classify_refresh``): delta refresh when a prior result +
+    base graph exist, the net dirty fraction is within
+    ``scfg.refresh_dirty_threshold`` and both endpoint graphs are
+    non-degenerate; full recompute otherwise (and on ANY
+    ``ReceiptError`` from the delta path — e.g. a plan that routed to
+    the tiled representation, which the dense refresh loops reject as
+    ``PlanInfeasibleError``).
+    """
+    route = classify_refresh(ds, scfg, force_full=force_full)
+    if route == "noop":
+        if not ds.fresh and ds.result is not None:
+            # net no-op mutation sequence: the stored result IS current
+            ds.result_version = ds.version
+            ds.base_graph = ds.graph
+        return None
+    if route == "full":
+        # fallback=True marks the runs the DELTA path declined (dirty
+        # fraction, degenerate endpoints) — a forced full or a first
+        # decompose is not a fallback
+        fallback = not (force_full or ds.result is None
+                        or ds.base_graph is None)
+        return _full(ds, executor, fallback=fallback)
+    kI = np.setdiff1d(edge_keys(ds.graph), edge_keys(ds.base_graph))
+    kD = np.setdiff1d(edge_keys(ds.base_graph), edge_keys(ds.graph))
     try:
         if ds.workload == "wing":
             return _wing_delta(ds, executor, kI, kD)

@@ -48,12 +48,32 @@ class ServiceConfig:
     * ``map_min_fleet`` — minimum number of compatible pending full
       tip decomposes before a flush batches them through
       ``Executor.map`` instead of per-graph ``decompose``.
+    * ``background`` — start the scheduler's flush worker at service
+      construction; queries then serve the last consistent version and
+      never pay refresh wall (DESIGN.md §12).
+    * ``cache_budget_bytes`` — the serving-side ``MemoryBudget``: total
+      bytes of cached results/supports/ladders the ``CacheGovernor``
+      may hold before LRU-with-pin eviction kicks in (``None`` =
+      unbounded).
+    * ``repeel_fleet_cells`` — cell budget one cross-dataset repeel
+      fleet is packed under (mirrors ``Executor.map_stack_cells``).
+    * ``worker_poll_s`` / ``worker_backoff_s`` / ``worker_max_restarts``
+      — flush-worker heartbeat, crash-restart backoff base, and the
+      restart budget (bounded by the ``RestartManager`` failure log).
+    * ``wait_timeout_s`` — bound on ``query(..., wait=True)`` blocking.
     """
 
     refresh_dirty_threshold: float = 0.05
     max_pending: int = 1024
     staleness: str = "refresh"
     map_min_fleet: int = 2
+    background: bool = False
+    cache_budget_bytes: Optional[int] = None
+    repeel_fleet_cells: int = 1 << 26
+    worker_poll_s: float = 0.05
+    worker_backoff_s: float = 0.02
+    worker_max_restarts: int = 3
+    wait_timeout_s: float = 120.0
 
     def __post_init__(self):
         if not 0.0 <= float(self.refresh_dirty_threshold) <= 1.0:
@@ -72,6 +92,29 @@ class ServiceConfig:
             raise ValueError(
                 f"map_min_fleet must be >= 2 (got {self.map_min_fleet}); "
                 "a fleet of one is a plain decompose")
+        if self.cache_budget_bytes is not None \
+                and int(self.cache_budget_bytes) < 1:
+            raise ValueError(
+                f"cache_budget_bytes must be >= 1 or None (got "
+                f"{self.cache_budget_bytes}); 0 would evict every commit")
+        if int(self.repeel_fleet_cells) < 1:
+            raise ValueError(
+                f"repeel_fleet_cells must be >= 1 (got "
+                f"{self.repeel_fleet_cells})")
+        if not float(self.worker_poll_s) > 0.0:
+            raise ValueError(
+                f"worker_poll_s must be > 0 (got {self.worker_poll_s})")
+        if float(self.worker_backoff_s) < 0.0:
+            raise ValueError(
+                f"worker_backoff_s must be >= 0 (got "
+                f"{self.worker_backoff_s})")
+        if int(self.worker_max_restarts) < 0:
+            raise ValueError(
+                f"worker_max_restarts must be >= 0 (got "
+                f"{self.worker_max_restarts})")
+        if not float(self.wait_timeout_s) > 0.0:
+            raise ValueError(
+                f"wait_timeout_s must be > 0 (got {self.wait_timeout_s})")
 
 
 @dataclasses.dataclass
@@ -85,10 +128,12 @@ class DatasetState:
     fresh.  ``supports`` caches the peeled-axis whole-graph butterfly
     supports of ``base_graph`` for the tip delta path (primed lazily on
     the first delta refresh, then maintained incrementally); ``bounds``
-    are the CD subset bounds of the last single-graph full run — the
-    refresh stop ladder.  Results produced by an ``Executor.map`` fleet
-    carry no CD bounds, so their first refresh peels the whole ladder
-    (one ``[inf]`` rung: still exact, still skips counting + CD).
+    are the CD subset bounds of the last full run — the refresh stop
+    ladder.  Single-graph runs store the real CD ladder; ``Executor.map``
+    fleet results store the equi-mass ladder synthesized from the exact
+    theta (``core.engine.refresh.synthesize_bounds``), so a mapped
+    result's first refresh can still stop early instead of peeling one
+    ``[inf]`` rung.
     """
 
     name: str
@@ -107,6 +152,12 @@ class DatasetState:
     stale_reads: int = 0
     refreshes: int = 0
     full_recomputes: int = 0
+    # cache-governor bookkeeping (DESIGN.md §12): LRU clock value of the
+    # last touch, in-flight-refresh pin count (pinned datasets are never
+    # evicted), evictions suffered
+    last_access: int = 0
+    pins: int = 0
+    evictions: int = 0
 
     # ------------------------------------------------------------------ #
     # mutations (diff-driven: build + validate the new graph, bump)
@@ -175,12 +226,56 @@ class DatasetState:
     def commit(self, result, *, bounds=None, supports=None) -> None:
         """Install a decomposition computed at the CURRENT graph
         version (full run or refresh)."""
+        self.commit_at(result, version=self.version, graph=self.graph,
+                       bounds=bounds, supports=supports)
+
+    def commit_at(self, result, *, version: int, graph: BipartiteGraph,
+                  bounds=None, supports=None) -> bool:
+        """Install a decomposition computed at a SNAPSHOT of this
+        dataset (the background scheduler computes off-lock against a
+        copy; the live graph may have moved on).  The result/base pair
+        stays internally consistent — ``result`` was computed on
+        ``graph`` at ``version`` — so a reader never sees a torn pair.
+        Returns False (and installs nothing) when a newer result is
+        already in place."""
+        if self.result is not None and version < self.result_version:
+            return False
         self.result = result
-        self.result_version = self.version
-        self.base_graph = self.graph
+        self.result_version = int(version)
+        self.base_graph = graph
         self.bounds = bounds
         self.supports = supports
         self.last_error = None
+        return True
+
+    def evict_cache(self) -> None:
+        """Drop every cached derived artifact (result, supports, CD
+        ladder, base graph) — the dataset degrades to recompute-on-
+        demand; the CURRENT graph and its version are never evicted, so
+        a later query recomputes the exact same answers."""
+        self.result = None
+        self.result_version = 0
+        self.base_graph = None
+        self.supports = None
+        self.bounds = None
+        self.evictions += 1
+
+    def cached_bytes(self) -> int:
+        """Evictable bytes this dataset holds: the cached numbers
+        vector, the maintained supports, the stop ladder, and the base
+        graph's edge arrays when it differs from the live graph (fresh
+        datasets alias the two)."""
+        n = 0
+        if self.result is not None:
+            n += np.asarray(self.result.numbers).nbytes
+        if self.supports is not None:
+            n += np.asarray(self.supports).nbytes
+        if self.bounds is not None:
+            n += 8 * len(self.bounds)
+        if self.base_graph is not None and self.base_graph is not self.graph:
+            n += self.base_graph.edges_u.nbytes + \
+                self.base_graph.edges_v.nbytes
+        return int(n)
 
     @property
     def fresh(self) -> bool:
@@ -199,4 +294,6 @@ class DatasetState:
             "stale_reads": self.stale_reads,
             "refreshes": self.refreshes,
             "full_recomputes": self.full_recomputes,
+            "cached_bytes": self.cached_bytes(),
+            "evictions": self.evictions,
         }

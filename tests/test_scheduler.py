@@ -1,0 +1,487 @@
+"""Serving-scheduler tests (DESIGN.md §12): the background flush
+worker (async refresh exactness, stale reads without refresh wall,
+``wait=True`` blocking, cooperative shutdown), crash isolation through
+the ``refresh_worker`` fault site + RestartManager-bounded restarts,
+the ``CacheGovernor`` (LRU-with-pin eviction, recompute-on-demand after
+eviction), the map-fleet bound-ladder synthesis (satellite of the
+``[inf]``-rung refresh penalty), queue restore, and route
+classification."""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import EngineConfig, Executor, ServiceWorkerError
+from repro.core.engine.refresh import synthesize_bounds
+from repro.data.synthetic import interaction_graph
+from repro.service import (
+    CacheGovernor,
+    DecompositionService,
+    RequestQueue,
+    ServiceConfig,
+    WorkItem,
+    classify_refresh,
+)
+from repro.service.state import DatasetState
+
+SMALL_BLOCKS = (8, 8, 8)
+
+
+def _cfg(**kw):
+    base = dict(num_partitions=6, kernel_blocks=SMALL_BLOCKS,
+                backend="xla", degree_sort=False)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _svc(service=None, **kw):
+    return DecompositionService(_cfg(**kw), service)
+
+
+def _bg(service_kw=None, **kw):
+    skw = dict(background=True, worker_poll_s=0.01)
+    skw.update(service_kw or {})
+    return _svc(ServiceConfig(**skw), **kw)
+
+
+def _keys(g):
+    return g.edges_u.astype(np.int64) * g.n_v + g.edges_v.astype(np.int64)
+
+
+def _fresh_edges(g, count, rng):
+    have = set(_keys(g).tolist())
+    out = []
+    while len(out) < count:
+        u = int(rng.integers(g.n_u))
+        v = int(rng.integers(g.n_v))
+        if u * g.n_v + v not in have:
+            have.add(u * g.n_v + v)
+            out.append((u, v))
+    return np.array(out, np.int64).reshape(-1, 2)
+
+
+def _mutate(svc, name, rng, n=3):
+    g = svc._datasets[name].graph
+    ins = _fresh_edges(g, n, rng)
+    svc.insert_edges(name, ins[:, 0], ins[:, 1])
+    drop = rng.choice(g.m, n, replace=False)
+    svc.delete_edges(name, g.edges_u[drop], g.edges_v[drop])
+
+
+def _reference(svc, name, workload="tip"):
+    return Executor(_cfg(workload=workload)).decompose(
+        svc._datasets[name].graph)
+
+
+# --------------------------------------------------------------------- #
+# background worker: async refresh, staleness contract
+# --------------------------------------------------------------------- #
+def test_background_refresh_matches_synchronous_drain():
+    g = interaction_graph(60, 40, 400, seed=3)
+    rng = np.random.default_rng(3)
+    svc = _bg()
+    try:
+        svc.ingest("d", g)
+        assert svc.query("d", wait=True, timeout=60) is not None
+        _mutate(svc, "d", rng)
+        assert svc.wait_until_idle(timeout=60)
+        dec = svc.query("d")
+        np.testing.assert_array_equal(
+            dec.numbers, _reference(svc, "d").numbers)
+        assert svc._datasets["d"].fresh
+    finally:
+        svc.close()
+
+
+def test_stale_read_serves_last_version_without_refresh_wall():
+    g = interaction_graph(60, 40, 400, seed=4)
+    rng = np.random.default_rng(4)
+    svc = _bg()
+    try:
+        svc.ingest("d", g)
+        first = svc.query("d", wait=True, timeout=60)
+        v1 = svc._datasets["d"].result_version
+        _mutate(svc, "d", rng)
+        dec, info = svc.query("d", with_info=True)
+        # served instantly from the last consistent version, with
+        # explicit staleness metadata — or the worker already won the
+        # race and the read is fresh
+        if not info["fresh"]:
+            assert info["result_version"] == v1
+            assert info["stale_by"] >= 1
+            np.testing.assert_array_equal(dec.numbers, first.numbers)
+            assert svc._datasets["d"].stale_reads >= 1
+        assert svc.wait_until_idle(timeout=60)
+        _, info2 = svc.query("d", with_info=True)
+        assert info2["fresh"] and info2["stale_by"] == 0
+    finally:
+        svc.close()
+
+
+def test_wait_true_blocks_until_fresh():
+    g = interaction_graph(50, 36, 320, seed=5)
+    rng = np.random.default_rng(5)
+    svc = _bg()
+    try:
+        svc.ingest("d", g)
+        svc.query("d", wait=True, timeout=60)
+        _mutate(svc, "d", rng)
+        dec, info = svc.query("d", wait=True, timeout=60,
+                              with_info=True)
+        assert info["fresh"]
+        np.testing.assert_array_equal(
+            dec.numbers, _reference(svc, "d").numbers)
+    finally:
+        svc.close()
+
+
+def test_no_torn_reads_under_concurrent_mutations():
+    """Readers racing the worker always see a CONSISTENT
+    (result, version, base graph) triple: the served numbers must be
+    the exact decomposition of SOME graph version the dataset passed
+    through."""
+    g = interaction_graph(40, 30, 240, seed=6)
+    rng = np.random.default_rng(6)
+    svc = _bg()
+    try:
+        svc.ingest("d", g)
+        svc.query("d", wait=True, timeout=60)
+        valid = {1: np.asarray(_reference(svc, "d").numbers)}
+        graphs = {1: svc._datasets["d"].graph}
+        stop = threading.Event()
+        errors = []
+        served = []
+
+        def reader():
+            while not stop.is_set():
+                try:
+                    dec, info = svc.query("d", with_info=True)
+                    served.append((info["result_version"],
+                                   np.asarray(dec.numbers).copy()))
+                except Exception as exc:   # noqa: BLE001 — test witness
+                    errors.append(exc)
+                    return
+
+        threads = [threading.Thread(target=reader) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for _ in range(4):
+            # record the graph at EVERY version: the worker may commit
+            # at the intermediate (post-insert) version too
+            g_cur = svc._datasets["d"].graph
+            ins = _fresh_edges(g_cur, 2, rng)
+            v = svc.insert_edges("d", ins[:, 0], ins[:, 1])
+            graphs[v] = svc._datasets["d"].graph
+            drop = rng.choice(g_cur.m, 2, replace=False)
+            v = svc.delete_edges("d", g_cur.edges_u[drop],
+                                 g_cur.edges_v[drop])
+            graphs[v] = svc._datasets["d"].graph
+            time.sleep(0.05)
+        assert svc.wait_until_idle(timeout=120)
+        stop.set()
+        for t in threads:
+            t.join(30)
+        assert not errors, errors
+        for v, g_v in graphs.items():
+            if v not in valid:
+                valid[v] = np.asarray(
+                    Executor(_cfg()).decompose(g_v).numbers)
+        for rv, numbers in served:
+            assert rv in valid, f"served unknown version {rv}"
+            np.testing.assert_array_equal(numbers, valid[rv])
+    finally:
+        svc.close()
+
+
+def test_shutdown_drain_finishes_pending_work():
+    g = interaction_graph(50, 36, 320, seed=7)
+    rng = np.random.default_rng(7)
+    svc = _bg()
+    svc.ingest("d", g)
+    svc.query("d", wait=True, timeout=60)
+    _mutate(svc, "d", rng)
+    assert svc.stop_worker(drain=True, timeout=120)
+    assert not svc._worker_alive()
+    assert svc._datasets["d"].fresh
+    np.testing.assert_array_equal(
+        svc.query("d").numbers, _reference(svc, "d").numbers)
+
+
+def test_shutdown_abandon_leaves_work_queued_for_inline():
+    g = interaction_graph(50, 36, 320, seed=8)
+    rng = np.random.default_rng(8)
+    # a slow heartbeat so the abandoned items stay queued
+    svc = _bg(service_kw=dict(worker_poll_s=5.0))
+    svc.ingest("d", g)
+    svc.flush()                          # delegates to + waits on worker
+    _mutate(svc, "d", rng)
+    assert svc.stop_worker(drain=False, timeout=120)
+    # the refresh may have been abandoned; inline serving picks it up
+    dec = svc.query("d")
+    np.testing.assert_array_equal(
+        dec.numbers, _reference(svc, "d").numbers)
+
+
+# --------------------------------------------------------------------- #
+# crash isolation: refresh_worker fault site
+# --------------------------------------------------------------------- #
+def test_worker_crash_restarts_and_stays_exact():
+    g = interaction_graph(50, 36, 320, seed=9)
+    rng = np.random.default_rng(9)
+    svc = DecompositionService(
+        _cfg(fault_spec="refresh_worker@2"),
+        ServiceConfig(background=True, worker_poll_s=0.01,
+                      worker_backoff_s=0.0))
+    try:
+        svc.ingest("d", g)
+        svc.query("d", wait=True, timeout=60)
+        _mutate(svc, "d", rng)
+        dec = svc.query("d", wait=True, timeout=60)
+        w = svc.report()["worker"]
+        assert w["crashes"] >= 1
+        assert w["restarts"] >= 1
+        assert not w["dead"]
+        assert w["failure_log"]          # RestartManager evidence
+        np.testing.assert_array_equal(
+            dec.numbers, _reference(svc, "d").numbers)
+    finally:
+        svc.close()
+
+
+def test_worker_death_past_budget_degrades_to_inline():
+    g = interaction_graph(50, 36, 320, seed=10)
+    svc = DecompositionService(
+        _cfg(fault_spec="refresh_worker@1x100"),
+        ServiceConfig(background=True, worker_poll_s=0.01,
+                      worker_backoff_s=0.0, worker_max_restarts=2))
+    try:
+        svc.ingest("d", g)
+        dec = svc.query("d", wait=True, timeout=120)
+        np.testing.assert_array_equal(
+            dec.numbers, _reference(svc, "d").numbers)
+        w = svc.report()["worker"]
+        assert w["dead"] and not w["alive"]
+        assert w["crashes"] == 3         # initial + 2 restarts
+        assert isinstance(svc._worker.last_error, ServiceWorkerError)
+        assert len(w["failure_log"]) == 3
+    finally:
+        svc.close()
+
+
+def test_service_worker_error_context():
+    err = ServiceWorkerError("boom", site="refresh_worker", cycle=4,
+                             restarts=1)
+    s = str(err)
+    assert "site='refresh_worker'" in s
+    assert "cycle=4" in s and "restarts=1" in s
+    assert isinstance(err, RuntimeError)
+
+
+# --------------------------------------------------------------------- #
+# CacheGovernor: LRU-with-pin eviction
+# --------------------------------------------------------------------- #
+def _fake_ds(name, nbytes):
+    g = interaction_graph(6, 5, 12, seed=1)
+    ds = DatasetState(name=name, workload="tip", graph=g)
+    ds.result = type("R", (), {"numbers": np.zeros(nbytes // 8,
+                                                   np.int64)})()
+    ds.result_version = ds.version
+    ds.base_graph = ds.graph
+    return ds
+
+
+def test_governor_evicts_lru_first():
+    gov = CacheGovernor(budget_bytes=100)
+    a, b = _fake_ds("a", 80), _fake_ds("b", 80)
+    gov.touch(a)
+    gov.touch(b)
+    gov.touch(a)                         # b is now least-recently-used
+    evicted = gov.enforce({"a": a, "b": b})
+    assert evicted == ["b"]
+    assert b.result is None and b.evictions == 1
+    assert a.result is not None
+
+
+def test_governor_never_evicts_pinned_state():
+    gov = CacheGovernor(budget_bytes=10)
+    a = _fake_ds("a", 80)
+    a.pins = 1
+    assert gov.enforce({"a": a}) == []   # over budget, but safe
+    rep = gov.report({"a": a})
+    assert rep["over_budget"] and rep["datasets"]["a"]["pinned"]
+    a.pins = 0
+    assert gov.enforce({"a": a}) == ["a"]
+
+
+def test_governor_unbounded_budget_never_evicts():
+    gov = CacheGovernor(budget_bytes=None)
+    a = _fake_ds("a", 1 << 20)
+    assert gov.enforce({"a": a}) == []
+    assert gov.report({"a": a})["over_budget"] is False
+
+
+def test_evicted_dataset_recomputes_exactly():
+    g1 = interaction_graph(50, 36, 320, seed=11)
+    g2 = interaction_graph(44, 32, 280, seed=12)
+    svc = _svc(ServiceConfig(cache_budget_bytes=64))
+    svc.ingest("a", g1)
+    svc.ingest("b", g2)
+    svc.query("a")
+    svc.query("b")                       # evicts a (budget < any result)
+    rep = svc.cache_report()
+    assert rep["evicted_total"] >= 1
+    assert svc._datasets["a"].result is None
+    dec = svc.query("a")                 # recompute on demand
+    np.testing.assert_array_equal(
+        dec.numbers, _reference(svc, "a").numbers)
+    assert svc._datasets["a"].evictions >= 1
+    assert svc._datasets["a"].full_recomputes >= 2
+
+
+def test_eviction_with_background_worker_stays_correct():
+    g = interaction_graph(50, 36, 320, seed=13)
+    rng = np.random.default_rng(13)
+    svc = _bg(service_kw=dict(cache_budget_bytes=64))
+    try:
+        svc.ingest("d", g)
+        dec = svc.query("d", wait=True, timeout=60)
+        np.testing.assert_array_equal(
+            dec.numbers, _reference(svc, "d").numbers)
+        _mutate(svc, "d", rng)
+        dec2 = svc.query("d", wait=True, timeout=60)
+        np.testing.assert_array_equal(
+            dec2.numbers, _reference(svc, "d").numbers)
+    finally:
+        svc.close()
+
+
+def test_pinned_state_never_evicted_mid_cycle():
+    """A dataset pinned by an in-flight drain keeps its cached inputs:
+    enforce() runs inside every commit, so with a 1-byte budget ANY
+    unpinned cached state would be dropped — the refresh still lands."""
+    g = interaction_graph(50, 36, 320, seed=14)
+    rng = np.random.default_rng(14)
+    svc = _svc(ServiceConfig(cache_budget_bytes=1))
+    svc.ingest("d", g)
+    svc.query("d")
+    _mutate(svc, "d", rng)
+    dec = svc.query("d")
+    np.testing.assert_array_equal(
+        dec.numbers, _reference(svc, "d").numbers)
+
+
+# --------------------------------------------------------------------- #
+# satellite: map-fleet results carry a synthesized bound ladder
+# --------------------------------------------------------------------- #
+def test_mapped_results_carry_synthesized_bounds():
+    svc = _svc(ServiceConfig(map_min_fleet=2))
+    for i in range(3):
+        svc.ingest(f"m{i}", interaction_graph(40, 30, 240, seed=20 + i))
+    rep = svc.flush()
+    assert rep["fleets"] == 1 and rep["mapped"] == 3
+    for i in range(3):
+        bounds = svc._datasets[f"m{i}"].bounds
+        assert bounds is not None and len(bounds) >= 2
+        assert bounds == sorted(bounds)
+
+
+def test_mapped_result_refresh_stops_below_inf():
+    """The synthesized ladder removes the [inf]-rung penalty: a small
+    mutation on a mapped result re-peels a strict subset of the
+    ladder instead of the whole graph."""
+    rng = np.random.default_rng(21)
+    svc = _svc(ServiceConfig(map_min_fleet=2,
+                             refresh_dirty_threshold=0.5))
+    for i in range(2):
+        svc.ingest(f"m{i}", interaction_graph(60, 40, 420, seed=30 + i))
+    svc.flush()
+    g = svc._datasets["m0"].graph
+    # delete one low-theta edge: the ceiling stays near the bottom rungs
+    theta = np.asarray(svc._datasets["m0"].result.numbers)
+    u_low = int(np.argmin(theta))
+    e = int(np.nonzero(g.edges_u == u_low)[0][0])
+    svc.delete_edges("m0", [g.edges_u[e]], [g.edges_v[e]])
+    svc.flush()
+    st = svc._datasets["m0"].result.stats
+    assert st.refresh_mode == "delta"
+    assert np.isfinite(st.refresh_stop)
+    assert st.refresh_subsets_repeeled < st.refresh_subsets_total
+    np.testing.assert_array_equal(
+        svc.query("m0").numbers, _reference(svc, "m0").numbers)
+
+
+def test_synthesize_bounds_properties():
+    rng = np.random.default_rng(22)
+    th = rng.integers(0, 40, 300)
+    bounds = synthesize_bounds(th, 6)
+    assert bounds[0] == 0.0
+    assert bounds[-1] == float(th.max()) + 1.0
+    assert bounds == sorted(set(bounds))
+    assert synthesize_bounds([], 4) == [0.0, 1.0]
+    assert synthesize_bounds([5, 5, 5], 1) == [0.0, 6.0]
+
+
+# --------------------------------------------------------------------- #
+# queue restore + route classification + config validation
+# --------------------------------------------------------------------- #
+def test_queue_restore_preserves_order_and_coalesces():
+    q = RequestQueue(8)
+    q.submit(WorkItem("a", "refresh", 2))
+    q.submit(WorkItem("b", "full", 1))
+    drained = q.drain()
+    q.submit(WorkItem("b", "refresh", 3))    # raced submission
+    q.restore(drained)
+    items = q.drain()
+    assert [it.dataset for it in items] == ["a", "b"]
+    assert items[1].kind == "full"           # full never degrades
+    assert items[1].version == 3             # latest version wins
+
+
+def test_classify_refresh_routes():
+    g = interaction_graph(40, 30, 240, seed=40)
+    scfg = ServiceConfig(refresh_dirty_threshold=0.05)
+    svc = _svc()
+    svc.ingest("d", g)
+    ds = svc._datasets["d"]
+    assert classify_refresh(ds, scfg) == "full"       # no result yet
+    svc.query("d")
+    assert classify_refresh(ds, scfg) == "noop"       # fresh
+    assert classify_refresh(ds, scfg, force_full=True) == "full"
+    rng = np.random.default_rng(40)
+    _mutate(svc, "d", rng, n=2)
+    assert classify_refresh(ds, scfg) == "delta"
+    big = _fresh_edges(ds.graph, ds.graph.m // 2, rng)
+    svc.insert_edges("d", big[:, 0], big[:, 1])
+    assert classify_refresh(ds, scfg) == "full"       # past threshold
+
+
+def test_service_config_scheduler_validation():
+    with pytest.raises(ValueError, match="cache_budget_bytes"):
+        ServiceConfig(cache_budget_bytes=0)
+    with pytest.raises(ValueError, match="worker_poll_s"):
+        ServiceConfig(worker_poll_s=0.0)
+    with pytest.raises(ValueError, match="worker_max_restarts"):
+        ServiceConfig(worker_max_restarts=-1)
+    with pytest.raises(ValueError, match="repeel_fleet_cells"):
+        ServiceConfig(repeel_fleet_cells=0)
+    with pytest.raises(ValueError, match="wait_timeout_s"):
+        ServiceConfig(wait_timeout_s=0.0)
+
+
+def test_delta_refreshes_pack_into_repeel_fleets():
+    rng = np.random.default_rng(41)
+    svc = _svc(ServiceConfig(refresh_dirty_threshold=0.5))
+    for i in range(3):
+        svc.ingest(f"d{i}", interaction_graph(40, 30, 240, seed=50 + i))
+    svc.flush()
+    for i in range(3):
+        _mutate(svc, f"d{i}", rng, n=2)
+    rep = svc.flush()
+    assert rep["refreshed"] == 3
+    assert rep["repeel_fleets"] >= 1
+    for i in range(3):
+        np.testing.assert_array_equal(
+            svc.query(f"d{i}").numbers,
+            _reference(svc, f"d{i}").numbers)
